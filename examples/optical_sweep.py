@@ -1,0 +1,44 @@
+"""Reproduce the paper's evaluation sweeps as ASCII charts (Figs. 4-6).
+
+Run:  PYTHONPATH=src python examples/optical_sweep.py
+"""
+from repro.configs import optree_paper as paper
+from repro.core import eq3_time
+from repro.core import steps as S
+
+
+def bar(frac, width=40):
+    return "#" * max(1, int(frac * width))
+
+
+def fig4():
+    print("== Fig. 4: normalized time vs tree depth (w=64, 4MB) ==")
+    for n in paper.FIG4_NODES:
+        by_k = {k: S.optree_steps_thm1(n, k, 64) for k in range(1, 11)}
+        best = min(by_k.values())
+        print(f"N={n} (optimal k={min(by_k, key=by_k.get)}):")
+        for k, s in by_k.items():
+            if k == 1:
+                continue  # one-stage dwarfs the chart
+            print(f"  k={k:<2} {s/best:6.3f}x {bar(best/s)}")
+
+
+def fig56():
+    print("\n== Fig. 5/6: OpTree vs baselines, time for 4MB messages ==")
+    for n, w in [(1024, 64), (2048, 64), (1024, 96), (1024, 128)]:
+        rows = {
+            "optree": S.optree_optimal_steps(n, w)[1],
+            "ne": S.neighbor_exchange_steps(n),
+            "ring": S.ring_steps(n),
+            "one-stage": S.one_stage_steps(n, w),
+        }
+        tmax = max(rows.values())
+        print(f"N={n} w={w}:")
+        for name, s in rows.items():
+            t = eq3_time(paper.SYSTEM, 4 * 2**20, s)
+            print(f"  {name:<9} {t*1e3:9.1f} ms {bar(s/tmax)}")
+
+
+if __name__ == "__main__":
+    fig4()
+    fig56()

@@ -1,0 +1,53 @@
+"""Serving driver: continuous-batching decode over a slot pool.
+
+Submits a burst of prompts of mixed lengths to the BatchedServer and reports
+per-request generations + aggregate decode throughput.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.models import init_params
+from repro.runtime import BatchedServer, ServerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="serve-demo", family="dense", num_layers=4, d_model=256,
+        num_heads=4, num_kv_heads=2, head_dim=64, d_ff=1024, vocab_size=4096,
+        dtype="float32", remat=False,
+    )
+    params = init_params(jax.random.key(0), cfg)
+    server = BatchedServer(cfg, params, ServerConfig(
+        batch_size=4, max_seq=128, max_new_tokens=args.new_tokens,
+    ))
+
+    rng = np.random.default_rng(0)
+    lengths = rng.integers(4, 24, size=args.requests)
+    rids = [server.submit(rng.integers(0, cfg.vocab_size, size=int(n)))
+            for n in lengths]
+    print(f"submitted {len(rids)} requests (prompt lengths {list(lengths)}) "
+          f"into {server.scfg.batch_size} slots")
+
+    t0 = time.time()
+    results = server.run_until_drained()
+    dt = time.time() - t0
+    total_tokens = sum(len(v) for v in results.values())
+    for rid in rids:
+        print(f"  req {rid}: {len(results[rid])} tokens -> {results[rid][:8]}...")
+    print(f"decoded {total_tokens} tokens in {dt:.2f}s "
+          f"({total_tokens/dt:.1f} tok/s on CPU)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""End-to-end training driver: data pipeline -> model -> AdamW -> fault-
+tolerant trainer with periodic checkpoints.
+
+Profiles:
+  --size small   ~5M params  (default; a few minutes for 200 steps on CPU)
+  --size 100m    ~100M params (the assignment's reference scale; run a few
+                  hundred steps on real accelerators)
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import ModelConfig
+from repro.data import DataConfig, SyntheticLMPipeline
+from repro.models import init_params
+from repro.optim import OptimizerConfig, adamw_init
+from repro.runtime import Trainer, TrainerConfig
+
+PROFILES = {
+    "small": dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+                  head_dim=64, d_ff=1024, vocab_size=4096, seq=256, batch=4),
+    "100m": dict(num_layers=10, d_model=640, num_heads=10, num_kv_heads=5,
+                 head_dim=64, d_ff=2560, vocab_size=32768, seq=1024, batch=32),
+}
+
+
+def build_config(size: str) -> ModelConfig:
+    p = dict(PROFILES[size])
+    p.pop("seq"), p.pop("batch")
+    return ModelConfig(
+        name=f"example-{size}", family="dense", dtype="float32",
+        remat=False, qkv_bias=False, qk_norm=True, **p,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", choices=list(PROFILES), default="small")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    prof = PROFILES[args.size]
+    cfg = build_config(args.size)
+    n_params_est = (
+        cfg.vocab_size * cfg.d_model * 2
+        + cfg.num_layers * (2 * cfg.d_model * (cfg.q_dim + cfg.kv_dim)
+                            + 3 * cfg.d_model * cfg.d_ff)
+    )
+    print(f"config {cfg.name}: ~{n_params_est/1e6:.0f}M params, "
+          f"seq={prof['seq']}, batch={prof['batch']}, {len(jax.devices())} device(s)")
+
+    params = init_params(jax.random.key(0), cfg)
+    opt_state = adamw_init(params)
+    pipe = SyntheticLMPipeline(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=prof["seq"],
+        global_batch=prof["batch"],
+    )).start()
+
+    trainer = Trainer(
+        cfg,
+        OptimizerConfig(peak_lr=3e-4, warmup_steps=20, decay_steps=args.steps),
+        TrainerConfig(total_steps=args.steps, ckpt_interval=50,
+                      ckpt_dir=args.ckpt_dir),
+        params=params, opt_state=opt_state, pipeline=pipe,
+    )
+    t0 = time.time()
+    out = trainer.run()
+    pipe.stop()
+    dt = time.time() - t0
+    losses = out["losses"]
+    print(f"steps={out['final_step']} restarts={out['restarts']} "
+          f"time={dt:.1f}s ({dt/max(out['final_step'],1):.2f}s/step)")
+    print(f"loss: first={losses[0]:.4f} min={min(losses):.4f} "
+          f"last={losses[-1]:.4f}")
+    assert losses[-1] < losses[0], "training did not reduce the loss"
+    print("OK: loss decreased; checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

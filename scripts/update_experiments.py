@@ -1,0 +1,67 @@
+"""Fill EXPERIMENTS.md §Dry-run and §Roofline tables from runs/dryrun."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.launch.roofline import analyze_dir, format_table  # noqa: E402
+
+ROOT = Path(__file__).resolve().parent.parent
+DRYRUN = ROOT / "runs" / "dryrun"
+
+
+def dryrun_table() -> str:
+    rows = []
+    for tag in ("singlepod", "multipod"):
+        for p in sorted(DRYRUN.glob(f"*__{tag}.json")):
+            c = json.loads(p.read_text())
+            if not c.get("ok"):
+                rows.append(f"| {c['arch']} | {c['shape']} | {tag} | FAIL | - | - | - | {c.get('error','')[:60]} |")
+                continue
+            mem = c.get("memory") or {}
+            args_gb = (mem.get("argument_size_in_bytes") or 0) / 2**30
+            temp_gb = (mem.get("temp_size_in_bytes") or 0) / 2**30
+            coll = c.get("collectives", {})
+            counts = coll.get("counts", {})
+            n_coll = sum(counts.values())
+            cal = c.get("calibrated") or {}
+            rows.append(
+                f"| {c['arch']} | {c['shape']} | {tag} | ok "
+                f"({c.get('compile_s','?')}s) | {args_gb:.2f} | {temp_gb:.2f} | "
+                f"{n_coll} ({'+'.join(f'{k}:{v}' for k, v in sorted(counts.items()))}) | "
+                f"{(cal.get('collective_bytes') or coll.get('total_bytes') or 0)/2**20:.1f} MiB |"
+            )
+    hdr = ("| arch | shape | mesh | compile | args GiB/dev | temp GiB/dev | "
+           "collective ops | collective traffic/dev/step |\n|" + "---|" * 8)
+    return hdr + "\n" + "\n".join(rows)
+
+
+def roofline_table() -> str:
+    return format_table(analyze_dir(str(DRYRUN)))
+
+
+def main():
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    md = md.replace("<!-- DRYRUN_TABLE -->", dryrun_table(), 1)
+    md = md.replace("<!-- ROOFLINE_TABLE -->", roofline_table(), 1)
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md updated")
+
+
+def roofline_opt_table() -> str:
+    d = ROOT / "runs" / "dryrun_opt"
+    if not d.exists():
+        return "(runs/dryrun_opt not present)"
+    return format_table(analyze_dir(str(d)))
+
+
+def update_opt():
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    md = md.replace("<!-- ROOFLINE_OPT_TABLE -->", roofline_opt_table(), 1)
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md §Roofline-optimized updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Crash-safe checkpointing: sharded npz + JSON index, atomic commit,
+async save thread, latest-checkpoint discovery for restart.
+
+Layout:  <dir>/step_<N>.tmp/ -> arrays.npz + meta.json, renamed to
+<dir>/step_<N>/ only after both files are fully written (the rename is the
+commit point — a crashed save leaves only a .tmp that restore ignores).
+On a multi-host cluster each process writes ``arrays_<proc>.npz`` of its
+addressable shards; offline (single process) that is one file.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["Checkpointer"]
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, flat: Dict[str, np.ndarray]):
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path, leaf in leaves_with_path:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path
+        )
+        arr = flat[key]
+        ref = np.asarray(leaf)  # template leaves may be python scalars
+        leaves.append(np.asarray(arr, dtype=ref.dtype).reshape(ref.shape))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3, process_id: int = 0):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.process_id = process_id
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state: Dict[str, Any], *, blocking: bool = True) -> None:
+        """state: arbitrary pytree dict, e.g. {params, opt_state, data_state}."""
+        host_state = jax.tree.map(lambda a: np.asarray(a), state)
+        if blocking:
+            self._write(step, host_state)
+        else:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_state), daemon=True
+            )
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, state: Dict[str, Any]) -> None:
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        flat = _flatten(state)
+        np.savez(tmp / f"arrays_{self.process_id}.npz", **flat)
+        meta = {
+            "step": step,
+            "time": time.time(),
+            "keys": sorted(flat.keys()),
+            "process_count": 1,
+        }
+        with open(tmp / "meta.json", "w") as f:
+            json.dump(meta, f)
+        if final.exists():  # same-step re-save (e.g. final save after async)
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # commit point
+        self._gc()
+
+    def _gc(self) -> None:
+        done = sorted(self._steps())
+        for s in done[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def _steps(self) -> List[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "meta.json").exists():
+                continue
+            try:
+                out.append(int(p.name.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self._steps()
+        return max(steps) if steps else None
+
+    def restore(self, template: Dict[str, Any], step: Optional[int] = None
+                ) -> Tuple[int, Dict[str, Any]]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        path = self.dir / f"step_{step:08d}"
+        flat: Dict[str, np.ndarray] = {}
+        for npz in sorted(path.glob("arrays_*.npz")):
+            with np.load(npz) as z:
+                flat.update({k: z[k] for k in z.files})
+        return step, _unflatten(template, flat)

@@ -1,0 +1,15 @@
+"""JAX-native staged collectives — the OpTree technique on a TPU mesh."""
+from .mesh_utils import make_factorized_mesh  # noqa: F401
+from .staged_allgather import (  # noqa: F401
+    staged_all_gather,
+    optree_all_gather,
+    canonical_all_gather,
+)
+from .collectives import (  # noqa: F401
+    ring_all_gather,
+    neighbor_exchange_all_gather,
+    one_stage_all_gather,
+    hierarchical_all_reduce,
+    reduce_scatter,
+)
+from .decode_attention import sharded_decode_attention  # noqa: F401

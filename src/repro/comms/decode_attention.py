@@ -1,0 +1,71 @@
+"""Sharded-KV decode attention (flash-decoding style two-pass combine).
+
+When a KV cache is *sequence*-sharded (the layout the framework picks when
+kv-head count doesn't divide the TP axis — DESIGN.md §6), each model shard
+holds a contiguous slice of the keys/values.  Decode attention then runs in
+two passes:
+
+  1. locally: partial online-softmax statistics over the shard's slice
+     (max m_i, denominator l_i, weighted accumulator o_i);
+  2. globally: a log-sum-exp-weighted combine across the axis —
+     three tiny collectives (pmax + 2 psum of (B,H[,hd])-sized tensors)
+     instead of gathering the full cache.
+
+This is the shard_map primitive behind the pjit layout; its collectives are
+what XLA emits for that layout, written explicitly so serving stacks can
+call it directly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["sharded_decode_attention"]
+
+
+def sharded_decode_attention(
+    q: jax.Array,  # (B, H, 1, hd) — replicated across the axis
+    k_shard: jax.Array,  # (B, Hkv, T_local, hd) — local KV slice
+    v_shard: jax.Array,
+    *,
+    axis_name: str,
+    valid_len: jax.Array,  # () global number of valid cache positions
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Attention of one query against an axis-sharded KV cache."""
+    B, H, _, hd = q.shape
+    Hkv, T_local = k_shard.shape[1], k_shard.shape[2]
+    rep = H // Hkv
+    scale = scale if scale is not None else 1.0 / (hd ** 0.5)
+
+    idx = lax.axis_index(axis_name)
+    start = idx * T_local
+    pos = start + jnp.arange(T_local)  # global positions of local keys
+    valid = pos < valid_len  # (T_local,)
+
+    kx = jnp.repeat(k_shard, rep, axis=1).astype(jnp.float32)
+    vx = jnp.repeat(v_shard, rep, axis=1).astype(jnp.float32)
+    q32 = q[:, :, 0].astype(jnp.float32)  # (B, H, hd)
+
+    s = jnp.einsum("bhd,bhtd->bht", q32, kx) * scale  # (B, H, T_local)
+    s = jnp.where(valid[None, None, :], s, -jnp.inf)
+
+    m_local = jnp.max(s, axis=-1)  # (B, H)
+    # guard all-invalid shards
+    m_safe = jnp.where(jnp.isfinite(m_local), m_local, -1e30)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(valid[None, None, :], p, 0.0)
+    l_local = jnp.sum(p, axis=-1)  # (B, H)
+    o_local = jnp.einsum("bht,bhtd->bhd", p, vx)  # (B, H, hd)
+
+    # two-pass combine across the axis
+    m_global = lax.pmax(m_safe, axis_name)  # (B, H)
+    alpha = jnp.exp(m_safe - m_global)
+    l_global = lax.psum(l_local * alpha, axis_name)
+    o_global = lax.psum(o_local * alpha[..., None], axis_name)
+    l_global = jnp.where(l_global == 0.0, 1.0, l_global)
+    out = o_global / l_global[..., None]
+    return out[:, :, None, :].astype(q.dtype)  # (B, H, 1, hd)

@@ -1,0 +1,38 @@
+"""OpTree core: m-ary tree all-gather scheduling (paper §III) + TPU planner."""
+from .tree import (  # noqa: F401
+    OpTreePlan,
+    balanced_factors,
+    optimal_depth_argmin,
+    optimal_depth_thm2,
+)
+from .steps import (  # noqa: F401
+    lemma1_wavelengths_line,
+    lemma1_wavelengths_ring,
+    neighbor_exchange_steps,
+    one_stage_steps,
+    optree_optimal_steps,
+    optree_steps_exact,
+    optree_steps_thm1,
+    ring_steps,
+    table1,
+    wrht_steps_formula,
+    wrht_steps_paper_table,
+)
+from .schedule import (  # noqa: F401
+    Schedule,
+    Tx,
+    build_ne_schedule,
+    build_one_stage_schedule,
+    build_optree_schedule,
+    build_ring_schedule,
+)
+from .validate import validate_schedule  # noqa: F401
+from .cost_model import TERARACK, OpticalSystem, allgather_time, eq3_time, step_time  # noqa: F401
+from .planner import (  # noqa: F401
+    DCN_LINK,
+    ICI_LINK,
+    AllGatherPlan,
+    LinkSpec,
+    plan_axis_order,
+    plan_staged_allgather,
+)

@@ -1,0 +1,127 @@
+"""Generalized Theorem 2: stage planning for TPU mesh collectives.
+
+The paper minimizes  S(k) = ceil((2k-1) N^{1+1/k} / 8w)  over the tree depth
+k — trading per-stage channel demand against stage count.  On a TPU mesh the
+"channel" is a torus-axis link and the analogue is:
+
+    T(m_1..m_k; order) = sum_j (m_j - 1) * (alpha_j + payload_j / B_j)
+    payload_j          = shard_bytes * prod_{i<j} m_i
+
+i.e. each stage is a ring all-gather over m_j participants whose per-hop
+payload has grown by the factors already gathered.  Total moved volume is
+invariant (telescopes to (N-1)*shard); what the plan controls is
+  * the latency term   sum_j (m_j - 1) * alpha_j   (Thm 2's trade-off), and
+  * *which axis carries which payload* — on heterogeneous axes
+    (pod/DCN vs. ICI) gathering the slow axis first moves the un-multiplied
+    payload over the slow links: the direct analogue of OpTree's stage-1
+    strided subsets running while each node holds a single item.
+
+``plan_staged_allgather`` covers the homogeneous single-axis case (factorize
+an axis, pick k) and the heterogeneous multi-axis case (order given axes).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+from .tree import balanced_factors
+
+__all__ = ["LinkSpec", "StagePlan", "AllGatherPlan", "plan_staged_allgather",
+           "plan_axis_order", "ICI_LINK", "DCN_LINK"]
+
+
+@dataclass(frozen=True)
+class LinkSpec:
+    """Per-stage transport characteristics."""
+
+    name: str
+    bandwidth_bytes: float  # per-device injection bandwidth over this link
+    alpha_s: float  # fixed per-hop cost (launch + hop latency)
+
+
+# TPU v5e-flavoured defaults (see roofline constants in launch/roofline.py):
+ICI_LINK = LinkSpec("ici", 50e9, 1e-6)
+DCN_LINK = LinkSpec("dcn", 6.25e9, 1e-5)  # ~50 Gbit/s/host-link class transport
+
+
+@dataclass(frozen=True)
+class StagePlan:
+    factor: int
+    link: LinkSpec
+    payload_bytes: float  # per-device payload entering this stage
+    time_s: float
+
+
+@dataclass(frozen=True)
+class AllGatherPlan:
+    stages: Tuple[StagePlan, ...]
+    total_time_s: float
+
+    @property
+    def factors(self) -> Tuple[int, ...]:
+        return tuple(s.factor for s in self.stages)
+
+
+def _stage_time(factor: int, payload: float, link: LinkSpec) -> float:
+    # ring all-gather over `factor` participants: factor-1 hops, each moving
+    # the current accumulated payload.
+    return (factor - 1) * (link.alpha_s + payload / link.bandwidth_bytes)
+
+
+def _plan_for_factors(
+    factors: Sequence[int], links: Sequence[LinkSpec], shard_bytes: float
+) -> AllGatherPlan:
+    stages: List[StagePlan] = []
+    payload = float(shard_bytes)
+    total = 0.0
+    for f, link in zip(factors, links):
+        t = _stage_time(f, payload, link)
+        stages.append(StagePlan(factor=f, link=link, payload_bytes=payload, time_s=t))
+        total += t
+        payload *= f
+    return AllGatherPlan(stages=tuple(stages), total_time_s=total)
+
+
+def plan_staged_allgather(
+    axis_size: int,
+    shard_bytes: float,
+    link: LinkSpec = ICI_LINK,
+    max_k: Optional[int] = None,
+) -> AllGatherPlan:
+    """Homogeneous case: factorize one device axis into the time-optimal
+    k-stage plan (generalized Thm 2: integer argmin instead of the continuous
+    closed form).
+    """
+    if axis_size < 1:
+        raise ValueError("axis_size >= 1")
+    kmax = max_k or max(1, math.ceil(math.log2(max(axis_size, 2))))
+    best: Optional[AllGatherPlan] = None
+    for k in range(1, kmax + 1):
+        factors = balanced_factors(axis_size, k)
+        for perm in set(itertools.permutations(factors)):
+            plan = _plan_for_factors(perm, [link] * len(perm), shard_bytes)
+            if best is None or plan.total_time_s < best.total_time_s:
+                best = plan
+    assert best is not None
+    return best
+
+
+def plan_axis_order(
+    axes: Sequence[Tuple[int, LinkSpec]], shard_bytes: float
+) -> AllGatherPlan:
+    """Heterogeneous case: given physical mesh axes (size, link), choose the
+    stage *order*.  Provably: sort by ascending bandwidth (slow first) when
+    alphas are equal; we brute-force the permutation (k is tiny) so latency
+    asymmetries are honoured too.
+    """
+    best: Optional[AllGatherPlan] = None
+    for perm in itertools.permutations(axes):
+        plan = _plan_for_factors(
+            [a[0] for a in perm], [a[1] for a in perm], shard_bytes
+        )
+        if best is None or plan.total_time_s < best.total_time_s:
+            best = plan
+    assert best is not None
+    return best

@@ -1,0 +1,71 @@
+"""Schedule validators: the correctness oracle for every schedule builder.
+
+A schedule is a *valid all-gather* iff:
+  1. conflict-freedom — within a step, no two lightpaths share a
+     (direction, link) on the same wavelength, and wavelength < w;
+  2. causality — a node only transmits items it holds when the step begins;
+  3. completeness — afterwards every node holds all n items.
+
+These three checks are what the hypothesis property tests sweep.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List, Set, Tuple
+
+from .schedule import Schedule, Tx
+
+__all__ = [
+    "validate_conflict_free",
+    "validate_causality_completeness",
+    "validate_schedule",
+]
+
+
+class ScheduleError(AssertionError):
+    pass
+
+
+def validate_conflict_free(sched: Schedule) -> None:
+    for step_txs in sched.by_step():
+        seen: Set[Tuple[int, int, int]] = set()
+        for tx in step_txs:
+            if not (0 <= tx.wavelength < sched.w):
+                raise ScheduleError(
+                    f"wavelength {tx.wavelength} out of range w={sched.w}: {tx}"
+                )
+            for link in tx.links:
+                key = (tx.direction, link, tx.wavelength)
+                if key in seen:
+                    raise ScheduleError(
+                        f"wavelength conflict at step {tx.step}: "
+                        f"(dir={tx.direction}, link={link}, wl={tx.wavelength})"
+                    )
+                seen.add(key)
+
+
+def validate_causality_completeness(sched: Schedule) -> None:
+    holdings: List[Set[int]] = [{i} for i in range(sched.n)]
+    for step_txs in sched.by_step():
+        arrivals: Dict[int, Set[int]] = defaultdict(set)
+        for tx in step_txs:
+            if tx.item not in holdings[tx.src]:
+                raise ScheduleError(
+                    f"causality violation: node {tx.src} sends item {tx.item} "
+                    f"it does not hold at step {tx.step}"
+                )
+            arrivals[tx.dst].add(tx.item)
+        for dst, items in arrivals.items():
+            holdings[dst] |= items
+    for p, h in enumerate(holdings):
+        if len(h) != sched.n:
+            missing = sorted(set(range(sched.n)) - h)
+            raise ScheduleError(
+                f"incomplete all-gather: node {p} missing items {missing[:8]}"
+                f"{'...' if len(missing) > 8 else ''}"
+            )
+
+
+def validate_schedule(sched: Schedule) -> None:
+    validate_conflict_free(sched)
+    validate_causality_completeness(sched)

@@ -1,0 +1,14 @@
+"""Pallas-TPU kernels for the framework's compute hot spots.
+
+The paper's contribution is a communication schedule (no kernel-level
+contribution of its own — see DESIGN.md §3); these kernels cover the model
+stack's hot spots: rmsnorm, fused swiglu, blocked flash attention, and the
+WKV6 recurrence.  Each has a pure-jnp oracle in ``ref.py`` and is validated
+in interpret mode over shape/dtype sweeps in tests/test_kernels.py.
+"""
+from . import ops, ref  # noqa: F401
+from .flash_attention import flash_attention_pallas  # noqa: F401
+from .rmsnorm import rmsnorm_pallas  # noqa: F401
+from .rwkv6_scan import rwkv6_scan_pallas  # noqa: F401
+from .mamba2_scan import mamba2_ssd_pallas  # noqa: F401
+from .swiglu import swiglu_pallas  # noqa: F401

@@ -1,0 +1,115 @@
+"""Pallas-TPU WKV6 recurrence kernel (RWKV6 time-mix inner loop).
+
+Grid: (B*H, S/chunk) — the time dimension is the sequential axis; the
+(hd x hd) f32 recurrent state lives in VMEM scratch and persists across
+chunks.  Within a chunk the recurrence is a fori_loop over time steps on
+VMEM-resident (chunk, hd) tiles: HBM sees each element exactly once.
+
+This is the TPU-native replacement for the CUDA wkv kernel the RWKV project
+ships: the hd=64 head fits a (64, 64) state tile; the per-step outer
+products k_t v_t^T map to (64x64) VPU/MXU ops.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rwkv6_scan_pallas"]
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref, state_scr,
+                 *, chunk: int):
+    c = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)  # (chunk, hd)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)  # (hd,)
+
+    def step(t, carry):
+        s, y = carry
+        rt, kt, vt, wt = r[t], k[t], v[t], w[t]  # (hd,)
+        kv = kt[:, None] * vt[None, :]  # (hd, hd)
+        yt = jnp.sum(rt[:, None] * (s + u[:, None] * kv), axis=0)  # (hd,)
+        y = y.at[t].set(yt)
+        s = wt[:, None] * s + kv
+        return s, y
+
+    y0 = jnp.zeros_like(r)
+    s_final, y = jax.lax.fori_loop(0, chunk, step, (state_scr[...], y0))
+    state_scr[...] = s_final
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(c == nc - 1)
+    def _emit_state():
+        sT_ref[0] = state_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan_pallas(
+    r: jax.Array,  # (B, H, S, hd)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,  # (H, hd)
+    state: Optional[jax.Array] = None,  # (B, H, hd, hd)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    B, H, S, hd = r.shape
+    ch = min(chunk, S)
+    if S % ch:
+        raise ValueError(f"S={S} must be a multiple of chunk={ch}")
+    s0 = state if state is not None else jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    rf, kf, vf, wf = (a.reshape(B * H, S, hd) for a in (r, k, v, w))
+    uf = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, hd)
+    s0f = s0.reshape(B * H, hd, hd).astype(jnp.float32)
+
+    def t_map(b, c):
+        return (b, c, 0)
+
+    def b_map(b, c):
+        return (b, 0)
+
+    def s_map(b, c):
+        return (b, 0, 0)
+
+    y, sT = pl.pallas_call(
+        functools.partial(_wkv6_kernel, chunk=ch),
+        grid=(B * H, S // ch),
+        in_specs=[
+            pl.BlockSpec((1, ch, hd), t_map),
+            pl.BlockSpec((1, ch, hd), t_map),
+            pl.BlockSpec((1, ch, hd), t_map),
+            pl.BlockSpec((1, ch, hd), t_map),
+            pl.BlockSpec((1, hd), b_map),
+            pl.BlockSpec((1, hd, hd), s_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ch, hd), t_map),
+            pl.BlockSpec((1, hd, hd), s_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, hd), r.dtype),
+            jax.ShapeDtypeStruct((B * H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf, s0f)
+    return y.reshape(B, H, S, hd), sT.reshape(B, H, hd, hd)

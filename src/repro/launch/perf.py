@@ -1,0 +1,138 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (must precede jax import — same rule as dryrun.py)
+
+DOC = """Perf hillclimb driver (§Perf): re-lower one cell under a set of
+named override variants and report the three roofline terms per variant.
+
+  python -m repro.launch.perf --arch qwen3-32b --shape train_4k \
+      --variants baseline,no_sp,dots_remat
+
+Variants are defined in VARIANTS below; each is a dict of ModelConfig
+overrides (the knobs: remat / remat_policy / sequence_parallel /
+loss_chunk / kv_shard / dtype / moe capacity).
+"""
+
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.launch.dryrun import dryrun_cell
+from repro.launch.roofline import roofline_for_cell
+
+VARIANTS = {
+    # paper-faithful baseline = the framework defaults
+    "baseline": {},
+    # compute knobs
+    "no_remat": {"remat": False},
+    "dots_remat": {"remat_policy": "dots"},
+    # comms/layout knobs
+    "no_sp": {"sequence_parallel": False},
+    "kv_heads": {"kv_shard": "heads"},
+    "kv_seq": {"kv_shard": "seq"},
+    "fsdp": {"fsdp": True},
+    # attention head alignment (qwen2.5: 40 -> 48 = 3/shard on TP16;
+    # adds zero-capacity-cost padded heads, +4% attn params, documented)
+    "heads48": {"num_heads": 48},
+    "heads64": {"num_heads": 64},
+    # loss pipeline
+    "chunk_128": {"loss_chunk": 128},
+    "chunk_2048": {"loss_chunk": 2048},
+    # optimizer state compression
+    "opt_bf16": {"opt_state_dtype": "bfloat16"},
+    "opt_lean": {"opt_state_dtype": "bfloat16", "opt_use_master": False},
+    # microbatching
+    "accum4": {"grad_accum": 4},
+    "accum8": {"grad_accum": 8},
+}
+
+
+def ssm_chunk_override(arch: str, chunk: int):
+    cfg = get_config(arch)
+    if cfg.ssm is None:
+        return None
+    return {"ssm": dataclasses.replace(cfg.ssm, scan_chunk=chunk)}
+
+
+def moe_capacity_override(arch: str, factor: float):
+    cfg = get_config(arch)
+    if cfg.moe is None:
+        return None
+    return {"moe": dataclasses.replace(cfg.moe, capacity_factor=factor)}
+
+
+def run_variant(arch, shape, name, overrides, out_dir):
+    res = dryrun_cell(arch, shape, multi_pod=False, overrides=overrides,
+                      calibrate=True)
+    r = roofline_for_cell(res)
+    row = {
+        "variant": name,
+        "compute_ms": r.compute_s * 1e3,
+        "memory_ms": r.memory_s * 1e3,
+        "collective_ms": r.collective_s * 1e3,
+        "bottleneck": r.bottleneck,
+        "useful": r.useful_ratio,
+        "temp_gb": (res["memory"]["temp_size_in_bytes"] / 2**30
+                    if res.get("memory") else None),
+        "step_roofline_ms": r.step_s * 1e3,
+    }
+    print(f"[perf] {name:<12} compute={row['compute_ms']:.2f}ms "
+          f"memory={row['memory_ms']:.2f}ms coll={row['collective_ms']:.2f}ms "
+          f"bound={row['bottleneck']} temp={row['temp_gb'] and round(row['temp_gb'],1)}GB")
+    if out_dir:
+        p = Path(out_dir)
+        p.mkdir(parents=True, exist_ok=True)
+        (p / f"{arch}__{shape}__{name}.json").write_text(
+            json.dumps({"overrides": {k: str(v) for k, v in overrides.items()},
+                        "row": row, "cell": res}, indent=2, default=str))
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser(description=DOC)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--moe-capacity", type=float, default=None)
+    ap.add_argument("--ssm-chunk", type=int, default=None)
+    ap.add_argument("--combine", default=None,
+                    help="comma-set of variant names merged into one run")
+    ap.add_argument("--out", default="runs/perf")
+    args = ap.parse_args()
+
+    if args.combine:
+        ov: dict = {}
+        for name in args.combine.split(","):
+            ov.update(VARIANTS[name])
+        if args.ssm_chunk:
+            ov.update(ssm_chunk_override(args.arch, args.ssm_chunk) or {})
+        if args.moe_capacity:
+            ov.update(moe_capacity_override(args.arch, args.moe_capacity) or {})
+        run_variant(args.arch, args.shape,
+                    "combo_" + args.combine.replace(",", "+"), ov, args.out)
+        return
+
+    for name in args.variants.split(","):
+        if name == "cap" and args.moe_capacity is not None:
+            ov = moe_capacity_override(args.arch, args.moe_capacity)
+            if ov is None:
+                print(f"[perf] {args.arch} has no MoE; skip capacity variant")
+                continue
+            run_variant(args.arch, args.shape, f"cap_{args.moe_capacity}", ov, args.out)
+            continue
+        if name == "ssm_chunk" and args.ssm_chunk is not None:
+            ov = ssm_chunk_override(args.arch, args.ssm_chunk)
+            if ov is None:
+                print(f"[perf] {args.arch} has no SSM; skip chunk variant")
+                continue
+            run_variant(args.arch, args.shape, f"ssm_chunk_{args.ssm_chunk}", ov, args.out)
+            continue
+        if name not in VARIANTS:
+            raise SystemExit(f"unknown variant {name}; have {sorted(VARIANTS)}")
+        run_variant(args.arch, args.shape, name, VARIANTS[name], args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape) cell on the single-pod mesh, all in seconds
+per step, derived from the *calibrated* dry-run costs (see
+dryrun.calibrated_costs — scan bodies are extrapolated, since
+HloCostAnalysis counts a while body once):
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = collective_operand_bytes_per_device / ICI_BW
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+cost_analysis() on the SPMD-partitioned module reports *per-device* numbers
+(validated against 6ND in tests), so no further division by chip count.
+
+MODEL_FLOPS = 6 * N * D (dense) or 6 * N_active * D (MoE), D = tokens per
+step; the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/redundant compute.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from ..configs import SHAPES, active_param_count, get_config, param_count
+
+__all__ = ["HW", "roofline_for_cell", "analyze_dir", "format_table"]
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+CHIPS = 256  # single pod
+
+HW = {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "ici_bw": ICI_BW, "chips": CHIPS}
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_per_dev: float
+    hlo_flops_per_dev: float
+    bottleneck: str
+    useful_ratio: float
+    fix_hint: str
+    step_s: float  # max of the three = roofline-optimal step time
+    roofline_fraction: float  # compute_s / step_s (how compute-bound we are)
+
+    def row(self) -> List:
+        return [
+            self.arch, self.shape,
+            f"{self.compute_s*1e3:.2f}", f"{self.memory_s*1e3:.2f}",
+            f"{self.collective_s*1e3:.2f}", self.bottleneck,
+            f"{self.useful_ratio:.2f}", f"{self.roofline_fraction:.2f}",
+            self.fix_hint,
+        ]
+
+
+_HINTS = {
+    "compute": ("compute-bound: reduce remat recompute / use a cheaper "
+                "checkpoint policy; the MXU is the limit"),
+    "memory": ("HBM-bound: fuse elementwise chains, shrink activation "
+               "dtypes, or retile so weights/KV stream once"),
+    "collective": ("ICI-bound: re-stage the all-gathers (OpTree planner), "
+                   "overlap collectives with compute, or reshard to cut "
+                   "cross-slice traffic"),
+}
+
+
+def model_flops_per_device(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / CHIPS
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / CHIPS
+    # decode: one token per sequence per step
+    return 2.0 * n_active * shape.global_batch / CHIPS
+
+
+def roofline_for_cell(cell: Dict) -> Optional[Roofline]:
+    if not cell.get("ok"):
+        return None
+    cal = cell.get("calibrated") or {}
+    flops = float(cal.get("flops") or cell.get("flops") or 0.0)
+    hbytes = float(cal.get("bytes_accessed") or cell.get("bytes_accessed") or 0.0)
+    cbytes = float(
+        cal.get("collective_bytes")
+        if cal.get("collective_bytes") is not None
+        else cell.get("collectives", {}).get("total_bytes", 0.0)
+    )
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbytes / HBM_BW
+    collective_s = cbytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_per_device(cell["arch"], cell["shape"])
+    step_s = max(terms.values())
+    return Roofline(
+        arch=cell["arch"],
+        shape=cell["shape"],
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        model_flops_per_dev=mf,
+        hlo_flops_per_dev=flops,
+        bottleneck=bottleneck,
+        useful_ratio=(mf / flops) if flops else float("nan"),
+        fix_hint=_HINTS[bottleneck],
+        step_s=step_s,
+        roofline_fraction=(compute_s / step_s) if step_s else float("nan"),
+    )
+
+
+def analyze_dir(dryrun_dir: str, mesh_tag: str = "singlepod") -> List[Roofline]:
+    out = []
+    for p in sorted(Path(dryrun_dir).glob(f"*__{mesh_tag}.json")):
+        cell = json.loads(p.read_text())
+        r = roofline_for_cell(cell)
+        if r is not None:
+            out.append(r)
+    return out
+
+
+def format_table(rows: List[Roofline]) -> str:
+    hdr = ("| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+           "bottleneck | 6ND/HLO | roofline frac | what moves it |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append("| " + " | ".join(str(c) for c in r.row()) + " |")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="runs/dryrun")
+    args = ap.parse_args()
+    rows = analyze_dir(args.dir)
+    print(format_table(rows))
+
+
+if __name__ == "__main__":
+    main()

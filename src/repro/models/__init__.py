@@ -1,0 +1,9 @@
+"""Config-driven model zoo (all ten assigned architectures)."""
+from .model import (  # noqa: F401
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    loss_fn,
+)
+from . import sharding  # noqa: F401

@@ -1,0 +1,82 @@
+"""GQA attention block: RoPE, optional qk-norm / QKV bias, KV cache.
+
+Prefill/train run the flash path (`kernels.ops.flash_attention`); decode
+attends one query against the full padded cache with a position mask —
+when the KV cache is sequence-sharded the caller wraps this in the
+sharded-KV combine (`serving.sharded_decode_attention`).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from .layers import apply_rope, dense, dense_init, rmsnorm, rmsnorm_init
+
+__all__ = ["attn_init", "attention"]
+
+
+def attn_init(key, cfg: ModelConfig, *, dtype) -> Dict:
+    ks = jax.random.split(key, 6)
+    out_scale = 0.02 / (2 * cfg.num_layers) ** 0.5
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.q_dim, dtype=dtype, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.kv_dim, dtype=dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.kv_dim, dtype=dtype, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], cfg.q_dim, cfg.d_model, dtype=dtype, scale=out_scale),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(cfg.head_dim, dtype=dtype)
+        p["k_norm"] = rmsnorm_init(cfg.head_dim, dtype=dtype)
+    return p
+
+
+def attention(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, d)
+    *,
+    positions: jax.Array,  # (B, S) absolute positions
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (B,Hkv,T,hd) x2
+    cache_pos: Optional[jax.Array] = None,  # () position being written
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    q = dense(p["wq"], x).reshape(B, S, H, hd)
+    k = dense(p["wk"], x).reshape(B, S, Hkv, hd)
+    v = dense(p["wv"], x).reshape(B, S, Hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    qh = q.transpose(0, 2, 1, 3)  # (B,H,S,hd)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+
+    if kv_cache is None:
+        out = ops.flash_attention(qh, kh, vh, causal=cfg.causal)
+        new_cache = None
+    else:
+        ck, cv = kv_cache  # (B, Hkv, T, hd)
+        ck = jax.lax.dynamic_update_slice(ck, kh.astype(ck.dtype), (0, 0, cache_pos, 0))
+        cv = jax.lax.dynamic_update_slice(cv, vh.astype(cv.dtype), (0, 0, cache_pos, 0))
+        new_cache = (ck, cv)
+        if S > 1:
+            # prefill: the new block is the whole context — attend causally
+            # within it; the cache write above is just state installation
+            out = ops.flash_attention(qh, kh, vh, causal=cfg.causal)
+        else:
+            # decode: one query against the valid prefix of the cache
+            T = ck.shape[2]
+            valid = jnp.arange(T)[None, :] <= cache_pos  # (1, T)
+            valid = jnp.broadcast_to(valid, (B, T))
+            out = ops.flash_attention(qh, ck, cv, causal=False, kv_mask=valid)
+
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    return dense(p["wo"], out), new_cache

@@ -1,0 +1,79 @@
+"""Shared neural-net building blocks (pure-functional, dict params).
+
+Compute dtype follows the config (bf16 on the TPU target); normalization,
+softmax and logits run in float32.  The rmsnorm/swiglu/attention entry points
+route through `repro.kernels.ops` so the Pallas kernels are first-class
+(interpret-mode on CPU, ref oracle for gradients).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init",
+    "dense",
+    "rmsnorm_init",
+    "rmsnorm",
+    "rope_freqs",
+    "apply_rope",
+    "group_norm",
+]
+
+
+def dense_init(key, d_in: int, d_out: int, *, dtype, scale: Optional[float] = None,
+               bias: bool = False) -> Dict:
+    scale = 0.02 if scale is None else scale
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Dict, x: jax.Array) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int, *, dtype) -> Dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    from ..kernels import ops
+
+    return ops.rmsnorm(x, p["scale"], eps=eps)
+
+
+def group_norm(x: jax.Array, num_groups: int, eps: float = 1e-5) -> jax.Array:
+    """Per-group (e.g. per-head) normalization, no affine."""
+    *lead, d = x.shape
+    g = x.reshape(*lead, num_groups, d // num_groups)
+    g32 = g.astype(jnp.float32)
+    mean = g32.mean(axis=-1, keepdims=True)
+    var = g32.var(axis=-1, keepdims=True)
+    out = (g32 - mean) * jax.lax.rsqrt(var + eps)
+    return out.astype(x.dtype).reshape(*lead, d)
+
+
+# --------------------------------------------------------------------------
+# RoPE (GPT-NeoX half-rotation)
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

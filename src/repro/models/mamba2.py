@@ -1,0 +1,144 @@
+"""Mamba2 (SSD) block for the zamba2 hybrid backbone.
+
+State-space recurrence per head (P = head_dim, N = state_dim):
+
+    h_t = exp(A * dt_t) * h_{t-1} + dt_t * (x_t  B_t^T)     h: (P, N)
+    y_t = h_t C_t + D * x_t
+
+with a width-4 causal depthwise conv on (x, B, C) and a silu(z) gate.
+Sequential lax.scan over time (chunked SSD left to the kernel layer);
+decode carries {conv: (B, w-1, ch), ssm: (B, H, P, N)} — O(1) per token.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import dense_init, group_norm
+
+__all__ = ["mamba2_init", "mamba2_block", "mamba2_state_init"]
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm.expand * cfg.d_model
+    P = cfg.ssm.head_dim
+    H = d_in // P
+    N = cfg.ssm.state_dim
+    conv_ch = d_in + 2 * N
+    return d_in, P, H, N, conv_ch
+
+
+def mamba2_init(key, cfg: ModelConfig, *, dtype) -> Dict:
+    d = cfg.d_model
+    d_in, P, H, N, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    out_scale = 0.02 / (2 * cfg.num_layers) ** 0.5
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * N + H, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm.conv_dim, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((H,), jnp.float32),  # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[2], d_in, d, dtype=dtype, scale=out_scale),
+    }
+
+
+def mamba2_state_init(cfg: ModelConfig, batch: int, *, dtype) -> Dict:
+    d_in, P, H, N, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.conv_dim - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def _causal_conv(
+    xBC: jax.Array, w: jax.Array, b: jax.Array, conv_state: Optional[jax.Array]
+) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over time. xBC: (B,S,ch); w: (K,ch)."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros_like(xBC[:, : K - 1])
+    else:
+        pad = conv_state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)  # (B, S+K-1, ch)
+    out = sum(xp[:, i : i + xBC.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1) :]
+    return out, new_state
+
+
+def mamba2_block(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B,S,d)
+    *,
+    state: Optional[Dict] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, d = x.shape
+    d_in, P, H, N, conv_ch = _dims(cfg)
+
+    zxbcdt = jnp.einsum("bsd,df->bsf", x, p["in_proj"]["w"])
+    z, xBC, dt_raw = jnp.split(zxbcdt, [d_in, d_in + conv_ch], axis=-1)
+
+    conv_state = state["conv"] if state is not None else None
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xs, Bmat, Cmat = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])  # (H,)
+    decay = jnp.exp(dt * a)  # (B,S,H)
+
+    s0 = (
+        state["ssm"]
+        if state is not None
+        else jnp.zeros((B, H, P, N), jnp.float32)
+    )
+
+    def step(h, inp):
+        xt, Bt, Ct, dct, dtt = inp  # (B,H,P), (B,N), (B,N), (B,H), (B,H)
+        upd = dtt[..., None, None] * (
+            xt.astype(jnp.float32)[..., :, None] * Bt.astype(jnp.float32)[:, None, None, :]
+        )  # (B,H,P,N)
+        h = dct[..., None, None] * h + upd
+        yt = jnp.einsum("bhpn,bn->bhp", h, Ct.astype(jnp.float32))
+        return h, yt
+
+    xs_t = jnp.moveaxis(xs, 1, 0)
+    B_t = jnp.moveaxis(Bmat, 1, 0)
+    C_t = jnp.moveaxis(Cmat, 1, 0)
+    dc_t = jnp.moveaxis(decay, 1, 0)
+    dt_t = jnp.moveaxis(dt, 1, 0)
+    chunk = cfg.ssm.scan_chunk
+    if chunk and S % chunk == 0 and S > chunk:
+        # time-chunked remat: the backward pass only keeps the recurrent
+        # state at chunk boundaries and recomputes inside each chunk —
+        # O(S/chunk) residuals instead of O(S) (the zamba2 train_4k memory
+        # fix, EXPERIMENTS.md §Perf)
+        def chunk_body(h, inp):
+            h, ys = jax.lax.scan(step, h, inp)
+            return h, ys
+
+        chunk_body = jax.checkpoint(chunk_body)
+        resh = lambda a: a.reshape((S // chunk, chunk) + a.shape[1:])
+        h_final, ys = jax.lax.scan(
+            chunk_body, s0, tuple(resh(a) for a in (xs_t, B_t, C_t, dc_t, dt_t))
+        )
+        ys = ys.reshape((S,) + ys.shape[2:])
+    else:
+        h_final, ys = jax.lax.scan(step, s0, (xs_t, B_t, C_t, dc_t, dt_t))
+    y = jnp.moveaxis(ys, 0, 1)  # (B,S,H,P) f32
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = group_norm(y, H) * p["norm_scale"]
+    out = jnp.einsum("bsf,fd->bsd", y, p["out_proj"]["w"])
+
+    new_state = {"conv": new_conv, "ssm": h_final} if state is not None else None
+    return out, new_state

@@ -1,0 +1,48 @@
+"""Feed-forward blocks: SwiGLU (default) and GELU (hubert/w2v2)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from .layers import dense, dense_init
+
+__all__ = ["mlp_init", "mlp", "ffn_init", "ffn_apply"]
+
+
+def ffn_init(key, d_model: int, d_ff: int, num_layers: int, *, dtype,
+             kind: str = "swiglu") -> Dict:
+    ks = jax.random.split(key, 3)
+    down_scale = 0.02 / (2 * num_layers) ** 0.5
+    if kind == "swiglu":
+        return {
+            "gate": dense_init(ks[0], d_model, d_ff, dtype=dtype),
+            "up": dense_init(ks[1], d_model, d_ff, dtype=dtype),
+            "down": dense_init(ks[2], d_ff, d_model, dtype=dtype, scale=down_scale),
+        }
+    if kind == "gelu":
+        return {
+            "up": dense_init(ks[0], d_model, d_ff, dtype=dtype),
+            "down": dense_init(ks[1], d_ff, d_model, dtype=dtype, scale=down_scale),
+        }
+    raise ValueError(kind)
+
+
+def ffn_apply(p: Dict, x: jax.Array) -> jax.Array:
+    if "gate" in p:
+        h = ops.swiglu(dense(p["gate"], x), dense(p["up"], x))
+    else:
+        h = jax.nn.gelu(dense(p["up"], x).astype(jnp.float32)).astype(x.dtype)
+    return dense(p["down"], h)
+
+
+def mlp_init(key, cfg: ModelConfig, *, dtype) -> Dict:
+    kind = "gelu" if cfg.family == "audio" else "swiglu"
+    return ffn_init(key, cfg.d_model, cfg.d_ff, cfg.num_layers, dtype=dtype, kind=kind)
+
+
+def mlp(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    return ffn_apply(p, x)

@@ -1,0 +1,156 @@
+"""Mixture-of-Experts block: top-k routing with sort-based capacity dispatch.
+
+Dispatch is scatter/gather based (Megablocks-style), not the GShard one-hot
+einsum: the (tokens, experts, capacity) one-hot tensor is O(T*E*C) and
+explodes at arctic scale (1M tokens x 128 experts); the sort path stays
+O(T*K*d + E*C*d) and shards cleanly with experts on the 'model' axis
+(expert parallelism) and capacity on the 'data' axis.
+
+Supports:
+  * top-1 + always-on shared expert (llama4-scout),
+  * top-2 + parallel dense residual FFN (arctic),
+  * load-balance + router-z auxiliary losses.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import dense, dense_init
+from .mlp import ffn_apply, ffn_init
+from .sharding import constrain
+
+__all__ = ["moe_init", "moe_block"]
+
+
+def moe_init(key, cfg: ModelConfig, *, dtype) -> Dict:
+    e = cfg.moe
+    assert e is not None
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+
+    def expert_init(k):
+        kk = jax.random.split(k, 3)
+        scale = 0.02 / (2 * cfg.num_layers) ** 0.5
+        return {
+            "gate": (jax.random.normal(kk[0], (d, e.d_ff_expert)) * 0.02).astype(dtype),
+            "up": (jax.random.normal(kk[1], (d, e.d_ff_expert)) * 0.02).astype(dtype),
+            "down": (jax.random.normal(kk[2], (e.d_ff_expert, d)) * scale).astype(dtype),
+        }
+
+    p = {
+        "router": dense_init(ks[0], d, e.num_experts, dtype=jnp.float32, scale=0.01),
+        "experts": jax.vmap(expert_init)(jax.random.split(ks[1], e.num_experts)),
+    }
+    if e.shared_expert:
+        p["shared"] = ffn_init(ks[2], d, e.d_ff_expert, cfg.num_layers, dtype=dtype)
+    if e.dense_residual:
+        p["dense"] = ffn_init(ks[3], d, cfg.d_ff, cfg.num_layers, dtype=dtype)
+    return p
+
+
+def _expert_ffn(experts: Dict, xe: jax.Array) -> jax.Array:
+    """xe: (E, C, d) -> (E, C, d); batched over experts (EP-shardable)."""
+    g = jnp.einsum("ecd,edf->ecf", xe, experts["gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, experts["up"])
+    h = (jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(xe.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, experts["down"])
+
+
+def _num_groups(T: int, want: int = 32) -> int:
+    g = min(want, T)
+    while T % g:
+        g -= 1
+    return g
+
+
+def moe_block(
+    p: Dict, cfg: ModelConfig, x: jax.Array
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, d) -> (out, aux_losses).
+
+    Group-local dispatch: tokens are split into G data-parallel groups; the
+    argsort / rank / scatter bookkeeping never crosses a group boundary, so
+    under pjit those ops stay shard-local and the only cross-device movement
+    is the (G, E, C, d) <-> expert-weights contraction — the EP all-to-all.
+    (A global argsort permutes tokens across the whole data axis every layer;
+    that cost arctic-480b 16 TB/step of all-reduce — EXPERIMENTS.md §Perf.)
+    """
+    e = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    K, E = e.top_k, e.num_experts
+    G = _num_groups(T)
+    Tg = T // G
+    C = max(1, math.ceil(K * Tg / E * e.capacity_factor))
+
+    xt = x.reshape(T, d)
+    xg = x.reshape(G, Tg, d)
+    router_logits = dense(p["router"], xg.astype(jnp.float32))  # (G, Tg, E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)  # (G, Tg, K)
+    if K > 1:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- aux losses (Switch-style, over all tokens) ----
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1),
+    )
+    aux = {
+        "load_balance": E * jnp.sum(me * ce),
+        "router_z": jnp.mean(jax.nn.logsumexp(router_logits, axis=-1) ** 2),
+    }
+
+    # ---- group-local sort-based dispatch ----
+    flat_ids = expert_ids.reshape(G, Tg * K)
+    order = jnp.argsort(flat_ids, axis=-1)  # (G, TgK), stable per group
+    sorted_ids = jnp.take_along_axis(flat_ids, order, axis=-1)
+    run_start = jax.vmap(lambda s: jnp.searchsorted(s, s, side="left"))(sorted_ids)
+    pos_in_expert = jnp.arange(Tg * K)[None, :] - run_start
+    keep = pos_in_expert < C
+    pos_c = jnp.where(keep, pos_in_expert, C)  # C is OOB -> mode='drop'
+
+    src_token = order // K  # (G, TgK) indices into the group's tokens
+
+    def scatter_group(xg_g, ids_g, pos_g, src_g):
+        gathered = xg_g[src_g]  # (TgK, d)
+        return jnp.zeros((E, C, d), x.dtype).at[ids_g, pos_g].set(
+            gathered, mode="drop"
+        )
+
+    buf = jax.vmap(scatter_group)(xg, sorted_ids, pos_c, src_token)  # (G,E,C,d)
+    buf = constrain(buf, "moe_buffer")
+
+    g_ = jnp.einsum("gecd,edf->gecf", buf, p["experts"]["gate"])
+    u_ = jnp.einsum("gecd,edf->gecf", buf, p["experts"]["up"])
+    h_ = (jax.nn.silu(g_.astype(jnp.float32)) * u_.astype(jnp.float32)).astype(x.dtype)
+    ye = jnp.einsum("gecf,efd->gecd", h_, p["experts"]["down"])  # (G,E,C,d)
+    ye = constrain(ye, "moe_buffer")
+
+    pos_clip = jnp.minimum(pos_c, C - 1)
+
+    def gather_group(ye_g, ids_g, pos_g, keep_g, src_g, gates_g):
+        rows = ye_g[ids_g, pos_g]  # (TgK, d)
+        rows = jnp.where(keep_g[:, None], rows, 0.0)
+        contrib = rows * gates_g[:, None].astype(rows.dtype)
+        return jnp.zeros((Tg, d), x.dtype).at[src_g].add(contrib)
+
+    gates_sorted = jnp.take_along_axis(
+        gate_vals.reshape(G, Tg * K), order, axis=-1
+    )
+    out = jax.vmap(gather_group)(
+        ye, sorted_ids, pos_clip, keep, src_token, gates_sorted
+    )  # (G, Tg, d)
+    out = out.reshape(T, d)
+
+    if e.shared_expert:
+        out = out + ffn_apply(p["shared"], xt)
+    if e.dense_residual:
+        out = out + ffn_apply(p["dense"], xt)
+    return out.reshape(B, S, d), aux

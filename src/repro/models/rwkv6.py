@@ -1,0 +1,135 @@
+"""RWKV6 "Finch" block (arXiv:2404.05892): data-dependent-decay linear attention.
+
+Time-mix: token-shift with data-dependent lerp (low-rank), WKV6 recurrence
+(kernels.ops.rwkv6_scan — Pallas on TPU, scan oracle elsewhere), per-head
+group-norm, silu gate.  Channel-mix: shifted squared-relu FFN.
+
+Decode state per layer: {"tmix_x": (B,d), "cmix_x": (B,d),
+"wkv": (B,H,hd,hd)} — O(1) per token, which is why rwkv6 runs the
+``long_500k`` shape.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from .layers import dense, dense_init, group_norm
+
+__all__ = ["rwkv6_init", "rwkv6_time_mix", "rwkv6_channel_mix", "rwkv6_state_init"]
+
+TOKEN_SHIFT_RANK = 32
+DECAY_RANK = 64
+
+
+def rwkv6_init(key, cfg: ModelConfig, *, dtype) -> Dict:
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    H = d // hd
+    ks = jax.random.split(key, 12)
+    out_scale = 0.02 / (2 * cfg.num_layers) ** 0.5
+    tmix = {
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(dtype),
+        "lora_a": (jax.random.normal(ks[1], (d, 5 * TOKEN_SHIFT_RANK)) * 0.01).astype(dtype),
+        "lora_b": (jax.random.normal(ks[2], (5, TOKEN_SHIFT_RANK, d)) * 0.01).astype(dtype),
+        "w0": (jax.random.normal(ks[3], (d,)) * 0.1 - 6.0).astype(jnp.float32),
+        "w_lora_a": (jax.random.normal(ks[4], (d, DECAY_RANK)) * 0.01).astype(dtype),
+        "w_lora_b": (jax.random.normal(ks[5], (DECAY_RANK, d)) * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[6], (H, hd)) * 0.1).astype(jnp.float32),
+        "wr": dense_init(ks[7], d, d, dtype=dtype),
+        "wk": dense_init(ks[8], d, d, dtype=dtype),
+        "wv": dense_init(ks[9], d, d, dtype=dtype),
+        "wg": dense_init(ks[10], d, d, dtype=dtype),
+        "wo": dense_init(ks[11], d, d, dtype=dtype, scale=out_scale),
+    }
+    kc = jax.random.split(jax.random.fold_in(key, 1), 3)
+    cmix = {
+        "mu_k": (jax.random.uniform(kc[0], (d,)) * 0.5 + 0.25).astype(dtype),
+        "mu_r": (jax.random.uniform(kc[0], (d,)) * 0.5 + 0.25).astype(dtype),
+        "wk": dense_init(kc[1], d, cfg.d_ff, dtype=dtype),
+        "wv": dense_init(kc[2], cfg.d_ff, d, dtype=dtype, scale=out_scale),
+        "wr": dense_init(jax.random.fold_in(kc[2], 7), d, d, dtype=dtype),
+    }
+    return {"tmix": tmix, "cmix": cmix}
+
+
+def rwkv6_state_init(cfg: ModelConfig, batch: int, *, dtype) -> Dict:
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    H = d // hd
+    return {
+        "tmix_x": jnp.zeros((batch, d), dtype),
+        "cmix_x": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }
+
+
+def _token_shift(x: jax.Array, last_x: Optional[jax.Array]) -> jax.Array:
+    """Previous-token values: (B,S,d) -> (B,S,d); position 0 uses `last_x`."""
+    prev = jnp.zeros_like(x[:, :1]) if last_x is None else last_x[:, None].astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def rwkv6_time_mix(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B,S,d)
+    *,
+    last_x: Optional[jax.Array] = None,
+    wkv_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (out, new_last_x, new_wkv_state)."""
+    B, S, d = x.shape
+    hd = cfg.ssm.head_dim
+    H = d // hd
+
+    shifted = _token_shift(x, last_x)
+    xx = shifted - x
+    # data-dependent lerp (Finch "ddlerp"): 5 channels r,k,v,g,w
+    base = x + xx * p["mu"][0]
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", base, p["lora_a"]))
+    lora = lora.reshape(B, S, 5, TOKEN_SHIFT_RANK)
+    deltas = jnp.einsum("bscr,crd->bscd", lora, p["lora_b"])  # (B,S,5,d)
+    mixed = x[:, :, None] + xx[:, :, None] * (p["mu"][None, None] + deltas)
+    xr, xk, xv, xg, xw = (mixed[:, :, i] for i in range(5))
+
+    r = dense(p["wr"], xr).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = dense(p["wk"], xk).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    v = dense(p["wv"], xv).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    g = dense(p["wg"], xg)
+
+    # data-dependent decay in (0,1): w = exp(-exp(w0 + lora(xw)))
+    w_log = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsr,rd->bsd",
+        jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["w_lora_a"])).astype(jnp.float32),
+        p["w_lora_b"].astype(jnp.float32),
+    )
+    w = jnp.exp(-jnp.exp(w_log)).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+
+    y, new_state = ops.rwkv6_scan(r, k, v, w.astype(r.dtype), p["u"], wkv_state)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, d)
+    y = group_norm(y, H, eps=64e-5)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)
+    out = dense(p["wo"], y)
+    return out, x[:, -1], new_state
+
+
+def rwkv6_channel_mix(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    last_x: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    shifted = _token_shift(x, last_x)
+    xx = shifted - x
+    xk = x + xx * p["mu_k"]
+    xr = x + xx * p["mu_r"]
+    k = dense(p["wk"], xk)
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    kv = dense(p["wv"], k)
+    r = jax.nn.sigmoid(dense(p["wr"], xr).astype(jnp.float32)).astype(x.dtype)
+    return r * kv, x[:, -1]

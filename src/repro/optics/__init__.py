@@ -1,0 +1,3 @@
+"""Optical WDM ring interconnect simulator (TeraRack-style, paper §IV)."""
+from .simulator import SimReport, simulate  # noqa: F401
+from .comparison import compare_algorithms  # noqa: F401

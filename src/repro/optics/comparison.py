@@ -1,0 +1,65 @@
+"""Analytic algorithm comparison backend for the paper's figures.
+
+Large-N sweeps (N up to 4096, messages to 128 MB) use the closed-form step
+counts + Eq. 3 — the same granularity as the paper's own model — because full
+transmission enumeration at N=4096 is O(N^2) lightpaths.  Small-N cases are
+cross-checked against the schedule-level simulator in tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional
+
+from ..core import steps as S
+from ..core.cost_model import OpticalSystem, eq3_time
+
+__all__ = ["AlgoResult", "compare_algorithms"]
+
+
+@dataclass(frozen=True)
+class AlgoResult:
+    algorithm: str
+    n: int
+    w: int
+    message_bytes: float
+    steps: int
+    time_s: float
+
+
+def _steps_for(algorithm: str, n: int, w: int) -> Optional[int]:
+    if algorithm == "ring":
+        return S.ring_steps(n, w)
+    if algorithm == "ne":
+        return S.neighbor_exchange_steps(n, w)
+    if algorithm == "one-stage":
+        return S.one_stage_steps(n, w)
+    if algorithm == "wrht":
+        return S.wrht_steps_formula(n, w)
+    if algorithm == "wrht-paper":
+        return S.wrht_steps_paper_table(n, w)
+    if algorithm == "optree":
+        return S.optree_optimal_steps(n, w)[1]
+    raise ValueError(f"unknown algorithm {algorithm!r}")
+
+
+def compare_algorithms(
+    n: int,
+    w: int,
+    message_bytes: float,
+    sys: OpticalSystem,
+    algorithms: Iterable[str] = ("optree", "wrht", "ring", "ne", "one-stage"),
+) -> Dict[str, AlgoResult]:
+    out: Dict[str, AlgoResult] = {}
+    for algo in algorithms:
+        steps = _steps_for(algo, n, w)
+        if steps is None:
+            continue
+        out[algo] = AlgoResult(
+            algorithm=algo,
+            n=n,
+            w=w,
+            message_bytes=message_bytes,
+            steps=steps,
+            time_s=eq3_time(sys, message_bytes, steps),
+        )
+    return out

@@ -1,0 +1,88 @@
+"""Step-accurate simulator for schedules on the WDM ring.
+
+Executes a :class:`~repro.core.schedule.Schedule` step by step, re-validating
+conflict-freedom and causality *as it runs* (a schedule that passes the static
+validators also passes here; the simulator is the independent execution path),
+and accumulates wall time with the paper's Eq.-3 model — optionally the
+detailed packet/flit variant.
+
+This is the measurement backend for the Fig. 4/5/6 and Table I benchmarks.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass
+from typing import Dict, List, Set, Tuple
+
+from ..core.cost_model import OpticalSystem, step_time
+from ..core.schedule import Schedule
+
+__all__ = ["SimReport", "simulate"]
+
+
+@dataclass(frozen=True)
+class SimReport:
+    algorithm: str
+    n: int
+    w: int
+    steps: int
+    transmissions: int
+    time_s: float
+    max_link_load: int  # peak per-(direction,link) wavelength usage in a step
+    stage_steps: Tuple[int, ...]
+
+    def speedup_vs(self, other: "SimReport") -> float:
+        return other.time_s / self.time_s
+
+    def reduction_vs(self, other: "SimReport") -> float:
+        """Paper-style '% communication-time reduction' vs a baseline."""
+        return 1.0 - self.time_s / other.time_s
+
+
+def simulate(
+    sched: Schedule,
+    sys: OpticalSystem,
+    message_bytes: float,
+    *,
+    detailed: bool = False,
+    check: bool = True,
+) -> SimReport:
+    holdings: List[Set[int]] = [{i} for i in range(sched.n)]
+    max_load = 0
+    steps = sched.by_step()
+    for step_txs in steps:
+        wl_used: Set[Tuple[int, int, int]] = set()
+        load: Dict[Tuple[int, int], int] = defaultdict(int)
+        arrivals: Dict[int, Set[int]] = defaultdict(set)
+        for tx in step_txs:
+            if check:
+                if tx.item not in holdings[tx.src]:
+                    raise AssertionError(
+                        f"simulator: node {tx.src} lacks item {tx.item} at step {tx.step}"
+                    )
+                for link in tx.links:
+                    key = (tx.direction, link, tx.wavelength)
+                    if key in wl_used:
+                        raise AssertionError(f"simulator: wavelength collision {key}")
+                    wl_used.add(key)
+            for link in tx.links:
+                load[(tx.direction, link)] += 1
+            arrivals[tx.dst].add(tx.item)
+        if load:
+            max_load = max(max_load, max(load.values()))
+        for dst, items in arrivals.items():
+            holdings[dst] |= items
+    if check:
+        for p, h in enumerate(holdings):
+            assert len(h) == sched.n, f"simulator: node {p} incomplete ({len(h)}/{sched.n})"
+    t = step_time(sys, message_bytes, detailed=detailed) * len(steps)
+    return SimReport(
+        algorithm=str(sched.meta.get("algorithm", "?")),
+        n=sched.n,
+        w=sched.w,
+        steps=len(steps),
+        transmissions=len(sched.txs),
+        time_s=t,
+        max_link_load=max_load,
+        stage_steps=tuple(sched.stage_steps),
+    )

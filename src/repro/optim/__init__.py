@@ -1,0 +1,7 @@
+from .adamw import (  # noqa: F401
+    OptimizerConfig,
+    adamw_init,
+    adamw_update,
+    cosine_lr,
+    opt_state_specs,
+)

@@ -1,0 +1,153 @@
+"""AdamW with f32 master weights, global-norm clipping, cosine schedule,
+and ZeRO-1 state sharding.
+
+ZeRO-1 here is expressed as *sharding specs*, the pjit way: optimizer
+moments + master weights get a 'data'-axis sharding on their first
+unsharded divisible dim (``opt_state_specs``).  The gradient reduce-scatter
+/ parameter all-gather this induces is exactly the OpTree staged pattern —
+the explicit shard_map variant lives in ``repro.comms`` and is used by the
+examples; under pjit XLA emits the equivalent collectives from the specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = [
+    "OptimizerConfig",
+    "cosine_lr",
+    "adamw_init",
+    "adamw_update",
+    "opt_state_specs",
+]
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    min_lr: float = 3e-5
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # state compression (gradient-compression class tricks for scale):
+    # bf16 moments + no separate master copy drop AdamW from 12 to 4
+    # bytes/param — the difference between arctic-480b fitting 256 chips
+    # or not (EXPERIMENTS.md §Perf). Math still runs in f32.
+    state_dtype: str = "float32"
+    use_master: bool = True
+
+
+def cosine_lr(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = cfg.min_lr + 0.5 * (cfg.peak_lr - cfg.min_lr) * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params, cfg: Optional[OptimizerConfig] = None) -> Dict[str, Any]:
+    cfg = cfg or OptimizerConfig()
+    sdt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda t: jax.tree.map(lambda a: jnp.zeros(a.shape, sdt), t)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": zeros(params),
+        "v": zeros(params),
+    }
+    if cfg.use_master:
+        # copy=True: an f32 param's .astype(f32) would alias the param buffer
+        # and break donation (same buffer donated twice in the train step)
+        state["master"] = jax.tree.map(
+            lambda a: jnp.array(a, dtype=jnp.float32, copy=True), params
+        )
+    return state
+
+
+def adamw_update(
+    grads, opt_state: Dict[str, Any], params, cfg: OptimizerConfig
+) -> Tuple[Any, Dict[str, Any]]:
+    step = opt_state["step"] + 1
+    lr = cosine_lr(cfg, step)
+
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = jnp.sqrt(
+        jax.tree.reduce(
+            lambda a, b: a + b, jax.tree.map(lambda g: jnp.sum(g * g), g32)
+        )
+    )
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-12))
+    g32 = jax.tree.map(lambda g: g * scale, g32)
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    new_m = jax.tree.map(
+        lambda m, g: (cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g).astype(sdt),
+        opt_state["m"], g32)
+    new_v = jax.tree.map(
+        lambda v, g: (cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g).astype(sdt),
+        opt_state["v"], g32)
+
+    def upd(w, m, v):
+        mh = m.astype(jnp.float32) / b1c
+        vh = v.astype(jnp.float32) / b2c
+        w32 = w.astype(jnp.float32)
+        return w32 - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * w32)
+
+    if cfg.use_master:
+        new_master = jax.tree.map(upd, opt_state["master"], new_m, new_v)
+        new_params = jax.tree.map(
+            lambda mp, p: mp.astype(p.dtype), new_master, params
+        )
+        return new_params, {
+            "step": step, "m": new_m, "v": new_v, "master": new_master,
+        }
+    # master-free: update the (possibly bf16) params directly; f32 math
+    new_params = jax.tree.map(
+        lambda p, m, v: upd(p, m, v).astype(p.dtype), params, new_m, new_v
+    )
+    return new_params, {"step": step, "m": new_m, "v": new_v}
+
+
+def _zero1_spec(spec: P, shape: Tuple[int, ...], data_size: int) -> P:
+    """Add a 'data' sharding on the first unsharded dim divisible by the
+    data-axis size (ZeRO-1); fall back to the param spec."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    used = {a for p in parts if p is not None
+            for a in (p if isinstance(p, tuple) else (p,))}
+    if "data" in used:  # already data-sharded (e.g. FSDP params)
+        return P(*parts)
+    for i, (p, dim) in enumerate(zip(parts, shape)):
+        if p is None and dim % data_size == 0 and dim > 0:
+            parts[i] = "data"
+            return P(*parts)
+    return P(*parts)
+
+
+def opt_state_specs(param_specs, param_shapes, mesh: Mesh, *,
+                    with_master: bool = True):
+    """Sharding specs for the optimizer state (ZeRO-1 over 'data')."""
+    data_size = mesh.shape.get("data", 1)
+
+    def zspec(spec, sds):
+        return _zero1_spec(spec, sds.shape, data_size)
+
+    zero1 = jax.tree.map(
+        zspec, param_specs, param_shapes, is_leaf=lambda x: isinstance(x, P)
+    )
+    out = {"step": P(), "m": zero1, "v": zero1}
+    if with_master:
+        out["master"] = zero1
+    return out

@@ -1,0 +1,2 @@
+from .trainer import Trainer, TrainerConfig, make_train_step  # noqa: F401
+from .server import BatchedServer, ServerConfig  # noqa: F401

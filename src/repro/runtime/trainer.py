@@ -1,0 +1,172 @@
+"""Fault-tolerant training runtime.
+
+Production concerns handled here (scaled down to run offline):
+  * checkpoint/restart — periodic async checkpoints; `run()` survives
+    injected step failures by restoring the last committed checkpoint and
+    replaying the data pipeline to the same batch;
+  * straggler detection — per-step wall-time EWMA; steps slower than
+    ``straggler_factor`` x EWMA fire a hook (on a real cluster: report the
+    slow host to the job scheduler / trigger hot-spare swap);
+  * preemption — SIGTERM flips a flag; the loop checkpoints and exits
+    cleanly at the next step boundary;
+  * elasticity — `replan(world_size)` rebuilds the mesh and the OpTree
+    collective factorization for a changed device count (the staged
+    all-gather plan is re-derived; params are resharded by pjit on the next
+    step).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import Checkpointer
+from ..configs.base import ModelConfig
+from ..core.planner import ICI_LINK, plan_staged_allgather
+from ..models import loss_fn
+from ..optim import OptimizerConfig, adamw_update
+
+__all__ = ["TrainerConfig", "Trainer", "make_train_step"]
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_interval: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_interval: int = 10
+    straggler_factor: float = 3.0
+    ema_decay: float = 0.9
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                    donate: bool = True) -> Callable:
+    """jit'd (params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def step(params, opt_state, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+        new_params, new_opt = adamw_update(grads, opt_state, params, opt_cfg)
+        return new_params, new_opt, metrics
+
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        opt_cfg: OptimizerConfig,
+        tcfg: TrainerConfig,
+        *,
+        params,
+        opt_state,
+        pipeline,
+        train_step: Optional[Callable] = None,
+        fault_injector: Optional[Callable[[int], None]] = None,
+    ):
+        self.cfg, self.opt_cfg, self.tcfg = cfg, opt_cfg, tcfg
+        self.params, self.opt_state = params, opt_state
+        self.pipeline = pipeline
+        self.train_step = train_step or make_train_step(cfg, opt_cfg)
+        self.ckpt = Checkpointer(tcfg.ckpt_dir)
+        self.fault_injector = fault_injector
+        self.step = 0
+        self.preempted = False
+        self.max_restarts = 5
+        self.step_time_ema: Optional[float] = None
+        self.straggler_events: List[Dict] = []
+        self.metrics_log: List[Dict] = []
+        self.restarts = 0
+
+    # ---- hooks --------------------------------------------------------
+    def install_preemption_handler(self):
+        def _handler(signum, frame):
+            self.preempted = True
+
+        signal.signal(signal.SIGTERM, _handler)
+
+    def on_straggler(self, step: int, dt: float, ema: float):
+        self.straggler_events.append({"step": step, "dt": dt, "ema": ema})
+
+    # ---- checkpoint/restart --------------------------------------------
+    def _state(self) -> Dict[str, Any]:
+        return {
+            "params": self.params,
+            "opt_state": self.opt_state,
+            "data_state": self.pipeline.state(),
+        }
+
+    def save(self, blocking: bool = False):
+        self.ckpt.save(self.step, self._state(), blocking=blocking)
+
+    def try_restore(self) -> bool:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return False
+        step, state = self.ckpt.restore(self._state())
+        self.params = jax.tree.map(jnp.asarray, state["params"])
+        self.opt_state = jax.tree.map(jnp.asarray, state["opt_state"])
+        ds = state["data_state"]
+        self.pipeline.restore({k: np.asarray(v).item() for k, v in ds.items()})
+        self.step = step
+        return True
+
+    # ---- main loop ------------------------------------------------------
+    def run(self) -> Dict[str, Any]:
+        self.install_preemption_handler()
+        while self.step < self.tcfg.total_steps and not self.preempted:
+            try:
+                batch_np = next(self.pipeline)
+                batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+                if self.fault_injector is not None:
+                    self.fault_injector(self.step)  # may raise
+                t0 = time.perf_counter()
+                self.params, self.opt_state, metrics = self.train_step(
+                    self.params, self.opt_state, batch
+                )
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                if self.step_time_ema is not None and dt > (
+                    self.tcfg.straggler_factor * self.step_time_ema
+                ):
+                    self.on_straggler(self.step, dt, self.step_time_ema)
+                d = self.tcfg.ema_decay
+                self.step_time_ema = (
+                    dt if self.step_time_ema is None
+                    else d * self.step_time_ema + (1 - d) * dt
+                )
+                self.metrics_log.append({"step": self.step, "loss": loss, "dt": dt})
+                self.step += 1
+                if self.step % self.tcfg.ckpt_interval == 0:
+                    self.save(blocking=False)
+            except (FloatingPointError, RuntimeError) as e:
+                # node failure / injected fault: restart from last checkpoint
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded {self.max_restarts} restarts; last error: {e}"
+                    ) from e
+                if not self.try_restore():
+                    self.step = 0
+                    self.pipeline.restore({"step": 0, "seed": self.pipeline.cfg.seed})
+        self.ckpt.wait()
+        self.save(blocking=True)
+        return {
+            "final_step": self.step,
+            "restarts": self.restarts,
+            "stragglers": len(self.straggler_events),
+            "losses": [m["loss"] for m in self.metrics_log],
+        }
+
+
+def replan(world_size: int, shard_bytes: float):
+    """Elastic hook: re-derive the OpTree collective plan for a new world
+    size (called when the scheduler grows/shrinks the job)."""
+    return plan_staged_allgather(world_size, shard_bytes, ICI_LINK)

@@ -1,0 +1,11 @@
+"""Lock jax to the default (single) CPU device for the whole in-process
+suite BEFORE any test module import can change XLA_FLAGS.
+
+repro.launch.dryrun sets --xla_force_host_platform_device_count=512 at
+import time (required for the real dry-run); initializing jax here first
+makes that a no-op inside pytest.  Multi-device tests run in subprocesses
+(tests/subproc/*) with their own environment.
+"""
+import jax
+
+jax.devices()  # force backend initialization with the default flags

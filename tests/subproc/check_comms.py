@@ -1,0 +1,164 @@
+"""Multi-device correctness checks for repro.comms — run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (pytest drives this via
+tests/test_comms.py so the main test process keeps a single device).
+
+Every staged/ring/NE collective must be bit-identical to the XLA one-shot
+collective it replaces.
+"""
+import os
+
+assert "xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", ""), (
+    "run me via tests/test_comms.py"
+)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.comms import (
+    hierarchical_all_reduce,
+    make_factorized_mesh,
+    neighbor_exchange_all_gather,
+    one_stage_all_gather,
+    optree_all_gather,
+    ring_all_gather,
+    staged_all_gather,
+)
+
+rng = np.random.default_rng(0)
+checks = []
+
+
+def check(name, got, want, atol=0.0):
+    got = np.asarray(got)
+    want = np.asarray(want)
+    ok = got.shape == want.shape and np.allclose(got, want, atol=atol)
+    checks.append((name, ok))
+    if not ok:
+        print(f"FAIL {name}: shapes {got.shape} vs {want.shape}")
+        print(" got ", got.ravel()[:8])
+        print(" want", want.ravel()[:8])
+
+
+def shmap(fn, mesh, in_specs, out_specs):
+    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                         check_vma=False)
+
+
+# ---- staged all-gather over factorized axes ------------------------------
+mesh2 = make_factorized_mesh([2, 4], ["a", "b"])
+x = rng.normal(size=(16, 3)).astype(np.float32)
+want = x  # all-gather of shards along axis 0 == the global array
+
+for order in [("a", "b"), ("b", "a")]:
+    got = shmap(
+        lambda y, order=order: staged_all_gather(y, ("a", "b"), stage_order=order),
+        mesh2, P(("a", "b")), P(),
+    )(x)
+    check(f"staged_ag order={order}", got, want)
+
+mesh3 = make_factorized_mesh([2, 2, 2], ["a", "b", "c"])
+for order in [("a", "b", "c"), ("c", "b", "a"), ("b", "a", "c"), ("a", "c", "b")]:
+    got = shmap(
+        lambda y, order=order: staged_all_gather(y, ("a", "b", "c"), stage_order=order),
+        mesh3, P(("a", "b", "c")), P(),
+    )(x)
+    check(f"staged_ag3 order={order}", got, want)
+
+# non-zero gather axis
+x2 = rng.normal(size=(3, 16)).astype(np.float32)
+got = shmap(
+    lambda y: staged_all_gather(y, ("a", "b"), stage_order=("a", "b"), axis=1),
+    mesh2, P(None, ("a", "b")), P(None, None),
+)(x2)
+check("staged_ag axis=1 major-first", got, x2)
+
+# one-stage (flat) reference
+got = shmap(lambda y: one_stage_all_gather(y, ("a", "b")), mesh2, P(("a", "b")), P())(x)
+check("one_stage_ag", got, x)
+
+# ---- optree_all_gather top-level wrapper (pod-aware planning) ------------
+meshp = make_factorized_mesh([2, 4], ["pod", "data"])
+xs = jax.device_put(x, NamedSharding(meshp, P(("pod", "data"))))
+got = optree_all_gather(xs, meshp, ("pod", "data"))
+check("optree_all_gather wrapper", got, x)
+
+# ---- ring / neighbor-exchange on a 1-D axis ------------------------------
+mesh1 = make_factorized_mesh([8], ["r"])
+got = shmap(lambda y: ring_all_gather(y, "r"), mesh1, P("r"), P())(x)
+check("ring_ag", got, x)
+
+got = shmap(lambda y: ring_all_gather(y, "r", axis=1), mesh1, P(None, "r"), P())(x2)
+check("ring_ag axis=1", got, x2)
+
+got = shmap(lambda y: neighbor_exchange_all_gather(y, "r"), mesh1, P("r"), P())(x)
+check("ne_ag", got, x)
+
+for n_small in (2, 4):
+    msub = make_factorized_mesh([n_small], ["r"])
+    xsml = rng.normal(size=(n_small * 2, 3)).astype(np.float32)
+    got = shmap(lambda y: neighbor_exchange_all_gather(y, "r"), msub, P("r"), P())(xsml)
+    check(f"ne_ag n={n_small}", got, xsml)
+
+# ring inside a 2-D mesh (gather only over 'b', batch stays on 'a')
+got = shmap(lambda y: ring_all_gather(y, "b"), mesh2, P(("a", "b")), P("a"))(x)
+check("ring_ag inner axis", got, x)
+
+# ---- hierarchical all-reduce ---------------------------------------------
+g = rng.normal(size=(8, 4)).astype(np.float32)
+want_sum = 8 * g  # psum over all 8 devices of identical replicas
+
+got = shmap(
+    lambda y: hierarchical_all_reduce(y, fast_axes=("data",), slow_axes=("pod",)),
+    meshp, P(), P(),
+)(g)
+check("hier_allreduce", got, want_sum, atol=1e-5)
+
+got = shmap(
+    lambda y: hierarchical_all_reduce(y, fast_axes=("data",), slow_axes=("pod",),
+                                      gather=False),
+    meshp, P(), P("data"),
+)(g)
+check("hier_allreduce zero1 (scattered)", got, want_sum, atol=1e-5)
+
+# sharded-input all-reduce matches psum exactly
+xr = rng.normal(size=(8, 8, 4)).astype(np.float32)  # leading dim = device
+def _ref_psum(y):
+    return jax.lax.psum(y, ("pod", "data"))
+want2 = shmap(_ref_psum, meshp, P(("pod", "data")), P())(xr.reshape(64, 4))
+got2 = shmap(
+    lambda y: hierarchical_all_reduce(y, ("data",), ("pod",)),
+    meshp, P(("pod", "data")), P(),
+)(xr.reshape(64, 4))
+check("hier_allreduce sharded input", got2, want2, atol=1e-5)
+
+
+# ---- sharded-KV decode attention (flash-decoding combine) -----------------
+from repro.comms.decode_attention import sharded_decode_attention
+from repro.kernels import ref as kref
+
+B, H, Hkv, T, hd = 2, 4, 2, 64, 16
+q = jnp.asarray(rng.normal(size=(B, H, 1, hd)).astype(np.float32)) * 0.4
+kc = jnp.asarray(rng.normal(size=(B, Hkv, T, hd)).astype(np.float32)) * 0.4
+vc = jnp.asarray(rng.normal(size=(B, Hkv, T, hd)).astype(np.float32))
+for valid_len in (1, 17, 40, 64):
+    vl = jnp.asarray(valid_len, jnp.int32)
+    mask = jnp.arange(T)[None, :] < vl
+    want_att = kref.flash_attention(
+        q, kc, vc, causal=False, kv_mask=jnp.broadcast_to(mask, (B, T))
+    )
+    got_att = shmap(
+        lambda qq, kk, vv: sharded_decode_attention(
+            qq, kk, vv, axis_name="r", valid_len=vl
+        ),
+        mesh1, (P(), P(None, None, "r", None), P(None, None, "r", None)), P(),
+    )(q, kc, vc)
+    check(f"sharded_decode_attention len={valid_len}", got_att, want_att, atol=2e-5)
+
+# ---- report ---------------------------------------------------------------
+bad = [n for n, ok in checks if not ok]
+print(f"{len(checks) - len(bad)}/{len(checks)} comms checks passed")
+if bad:
+    raise SystemExit(f"FAILED: {bad}")
+print("COMMS-OK")

@@ -1,0 +1,76 @@
+"""Property-based tests (hypothesis) for the scheduling invariants."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DCN_LINK,
+    ICI_LINK,
+    OpTreePlan,
+    build_ne_schedule,
+    build_one_stage_schedule,
+    build_optree_schedule,
+    plan_axis_order,
+    plan_staged_allgather,
+    steps,
+    validate_schedule,
+)
+
+factors_strategy = st.lists(st.integers(min_value=2, max_value=5), min_size=1, max_size=3)
+
+
+@given(factors=factors_strategy, w=st.integers(min_value=1, max_value=64))
+@settings(max_examples=40, deadline=None)
+def test_optree_schedule_always_valid(factors, w):
+    n = math.prod(factors)
+    plan = OpTreePlan(n, tuple(factors))
+    sched = build_optree_schedule(plan, w)
+    validate_schedule(sched)  # conflict-free + causal + complete
+    # stages >= 2 exactly match the analytic line-demand step count
+    for j, got in enumerate(sched.stage_steps[1:], start=2):
+        assert got == math.ceil(steps.optree_stage_demand(plan, j) / w)
+    # stage 1 (ring) within +1 of the analytic demand
+    assert sched.stage_steps[0] <= math.ceil(steps.optree_stage_demand(plan, 1) / w) + 1
+
+
+@given(n=st.integers(min_value=3, max_value=40), w=st.integers(min_value=1, max_value=16))
+@settings(max_examples=30, deadline=None)
+def test_one_stage_schedule_always_valid(n, w):
+    sched = build_one_stage_schedule(n, w)
+    validate_schedule(sched)
+    assert sched.num_steps <= steps.one_stage_steps(n, w) + math.ceil(2 / w) + 1
+
+
+@given(n=st.integers(min_value=2, max_value=24).map(lambda x: 2 * x))
+@settings(max_examples=20, deadline=None)
+def test_ne_schedule_always_valid(n):
+    sched = build_ne_schedule(n, 64)
+    validate_schedule(sched)
+    assert sched.num_steps == n // 2
+
+
+@given(
+    axis=st.integers(min_value=2, max_value=512),
+    shard=st.floats(min_value=1e3, max_value=1e9),
+)
+@settings(max_examples=30, deadline=None)
+def test_planner_volume_telescopes(axis, shard):
+    plan = plan_staged_allgather(axis, shard)
+    assert math.prod(plan.factors) == axis
+    # total moved volume is invariant: sum (m_j - 1) * payload_j == (N-1)*shard
+    vol = sum((s.factor - 1) * s.payload_bytes for s in plan.stages)
+    assert abs(vol - (axis - 1) * shard) / ((axis - 1) * shard) < 1e-9
+
+
+@given(
+    pods=st.integers(min_value=2, max_value=8),
+    per_pod=st.sampled_from([4, 8, 16]),
+    shard=st.floats(min_value=1e5, max_value=1e8),
+)
+@settings(max_examples=20, deadline=None)
+def test_planner_orders_slow_axis_first(pods, per_pod, shard):
+    # the OpTree stage-1 analogue: gather the slow (DCN/pod) axis while the
+    # payload is small
+    plan = plan_axis_order([(pods, DCN_LINK), (per_pod, ICI_LINK)], shard)
+    assert plan.stages[0].link.name == "dcn"
+    assert plan.stages[0].payload_bytes <= plan.stages[-1].payload_bytes

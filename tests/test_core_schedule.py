@@ -1,0 +1,161 @@
+"""Transmission-level schedules: validity + step counts vs. closed forms."""
+import pytest
+
+from repro.core import (
+    OpTreePlan,
+    build_ne_schedule,
+    build_one_stage_schedule,
+    build_optree_schedule,
+    build_ring_schedule,
+    steps,
+    validate_schedule,
+)
+from repro.core import tree
+
+
+class TestRouting:
+    def test_ring_shortest(self):
+        from repro.core.schedule import CW, CCW, route_ring
+
+        d, links = route_ring(16, 0, 3)
+        assert d == CW and links == (0, 1, 2)
+        d, links = route_ring(16, 0, 14)
+        assert d == CCW and links == (15, 14)
+
+    def test_line_no_wrap(self):
+        from repro.core.schedule import CW, CCW, route_line
+
+        d, links = route_line(16, 4, 4, 4, 7)
+        assert d == CW and links == (4, 5, 6)
+        d, links = route_line(16, 4, 4, 7, 5)
+        assert d == CCW and links == (6, 5)
+        with pytest.raises(ValueError):
+            route_line(16, 4, 4, 4, 9)
+
+
+class TestOpTreeSchedule:
+    def test_motivating_example_2stage_4ary(self):
+        # N=16, w=2: paper says 4 + 8 = 12 steps.
+        plan = OpTreePlan(16, (4, 4))
+        sched = build_optree_schedule(plan, w=2)
+        validate_schedule(sched)
+        assert sched.stage_steps == [4, 8]
+        assert sched.num_steps == 12
+
+    @pytest.mark.parametrize(
+        "n,factors,w",
+        [
+            (16, (4, 4), 2),
+            (16, (2, 2, 2, 2), 2),
+            (27, (3, 3, 3), 4),
+            (64, (4, 4, 4), 8),
+            (64, (8, 8), 8),
+            (24, (2, 3, 4), 4),
+            (36, (6, 6), 16),
+            (81, (3, 3, 3, 3), 64),
+        ],
+    )
+    def test_valid_and_matches_exact_steps(self, n, factors, w):
+        plan = OpTreePlan(n, factors)
+        sched = build_optree_schedule(plan, w)
+        validate_schedule(sched)
+        # the greedy RWA must achieve the analytic per-stage step count
+        # (first-fit interval coloring is optimal on lines; near-optimal on
+        # the ring stage — allow it one extra step per stage there).
+        exact = steps.optree_steps_exact(plan, w)
+        assert sched.num_steps <= exact + 1, (sched.stage_steps, exact)
+        # per-stage: stages >= 2 are line segments => exactly optimal
+        for j, got in enumerate(sched.stage_steps[1:], start=2):
+            import math
+
+            want = math.ceil(steps.optree_stage_demand(plan, j) / w)
+            assert got == want, (j, got, want)
+
+
+class TestBaselineSchedules:
+    def test_one_stage_16_w2(self):
+        sched = build_one_stage_schedule(16, 2)
+        validate_schedule(sched)
+        assert sched.num_steps == steps.one_stage_steps(16, 2) == 16
+
+    @pytest.mark.parametrize("n,w", [(8, 2), (12, 4), (16, 8), (32, 64)])
+    def test_one_stage_valid(self, n, w):
+        sched = build_one_stage_schedule(n, w)
+        validate_schedule(sched)
+        assert sched.num_steps <= steps.one_stage_steps(n, w) + 1
+
+    @pytest.mark.parametrize("n", [4, 8, 16, 32])
+    def test_ring(self, n):
+        sched = build_ring_schedule(n, 64)
+        validate_schedule(sched)
+        assert sched.num_steps == steps.ring_steps(n) == n - 1
+
+    @pytest.mark.parametrize("n", [4, 6, 8, 16, 32])
+    def test_neighbor_exchange(self, n):
+        sched = build_ne_schedule(n, 64)
+        validate_schedule(sched)
+        assert sched.num_steps == steps.neighbor_exchange_steps(n) == n // 2
+
+
+class TestSimulator:
+    def test_simulate_matches_eq3(self):
+        from repro.core import TERARACK, eq3_time
+        from repro.optics import simulate
+
+        plan = OpTreePlan(16, (4, 4))
+        sched = build_optree_schedule(plan, w=2)
+        rep = simulate(sched, TERARACK, message_bytes=4 * 2**20)
+        assert rep.steps == 12
+        assert rep.time_s == pytest.approx(eq3_time(TERARACK, 4 * 2**20, 12))
+
+    def test_simulator_ranks_algorithms_like_paper(self):
+        # Schedule-level at N=64, w=4: OpTree beats one-stage and ring (NE's
+        # N/2 steps only lose to OpTree at paper scale, N>=512 w=64 — checked
+        # at formula level in test_core_steps).
+        from repro.core import TERARACK
+        from repro.optics import simulate
+
+        w = 4
+        n = 64
+        plan = OpTreePlan.balanced(n, w=w)
+        t_optree = simulate(build_optree_schedule(plan, w), TERARACK, 4e6).time_s
+        t_one = simulate(build_one_stage_schedule(n, w), TERARACK, 4e6).time_s
+        t_ring = simulate(build_ring_schedule(n, w), TERARACK, 4e6).time_s
+        t_ne = simulate(build_ne_schedule(n, w), TERARACK, 4e6).time_s
+        assert t_optree < t_one
+        assert t_optree < t_ring
+        assert t_ne < t_ring
+
+
+class TestWavelengthUsage:
+    """Lemma 1 faithfulness: peak wavelength demand of constructed
+    schedules matches the paper's bounds."""
+
+    @pytest.mark.parametrize("n", [8, 12, 16, 24])
+    def test_one_stage_peak_load_lemma1(self, n):
+        import math
+        from collections import defaultdict
+
+        from repro.core import lemma1_wavelengths_ring
+
+        # build with unlimited wavelengths => one step; peak per-(dir,link)
+        # color usage equals the ring clique bound
+        w = lemma1_wavelengths_ring(n) + 8
+        sched = build_one_stage_schedule(n, w)
+        load = defaultdict(set)
+        for tx in sched.txs:
+            for link in tx.links:
+                load[(tx.direction, link)].add(tx.wavelength)
+        peak = max(len(v) for v in load.values())
+        assert peak <= lemma1_wavelengths_ring(n)
+        # and the bound is tight within the tiling constructor's +2 slack
+        assert sched.num_steps <= math.ceil(
+            (lemma1_wavelengths_ring(n) + 2) / w
+        )
+
+    def test_optree_stage1_wavelength_demand(self):
+        # stage-1 subsets: per-subset ring demand ceil(m^2/8), paper §III-C
+        from repro.core import steps as S
+
+        plan = OpTreePlan(16, (4, 4))
+        assert S.optree_stage_demand(plan, 1) == 4 * 2  # 4 subsets x 2

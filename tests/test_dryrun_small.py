@@ -1,0 +1,10 @@
+"""Dry-run machinery on a small mesh (subprocess with 8 fake devices)."""
+import pytest
+
+from tests.test_comms import _run
+
+
+@pytest.mark.slow
+def test_dryrun_machinery_small_mesh():
+    out = _run("check_dryrun_small.py", devices=8, timeout=900)
+    assert "DRYRUN-SMALL-OK" in out

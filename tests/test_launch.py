@@ -1,0 +1,122 @@
+"""Launch-layer unit tests: HLO collective parser, roofline math, cell
+enumeration, elastic replanning.  (The heavy lower+compile path is covered
+by tests/test_dryrun_small.py in a subprocess.)"""
+import json
+
+import pytest
+
+from repro.launch.dryrun import collective_bytes_from_hlo, iter_cells
+from repro.launch.roofline import (
+    CHIPS,
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    model_flops_per_device,
+    roofline_for_cell,
+)
+
+
+HLO_SAMPLE = """
+  %p0 = bf16[4,512,128]{2,1,0} parameter(0)
+  %fus = f32[16,4096]{1,0} fusion(%p0), kind=kLoop
+  %ag.1 = bf16[4,1024,128]{2,1,0} all-gather(%p0), channel_id=1
+  %ar = f32[16,4096]{1,0} all-reduce(%fus), to_apply=%add
+  %rs.2 = f32[8,4096]{1,0} reduce-scatter(%ar), channel_id=3
+  %cp = bf16[4,512,128]{2,1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  %a2a.7 = f32[16,4096]{1,0} all-to-all(%fus), channel_id=9
+"""
+
+
+class TestHloParser:
+    def test_counts_and_operand_bytes(self):
+        r = collective_bytes_from_hlo(HLO_SAMPLE)
+        assert r["counts"] == {
+            "all-gather": 1, "all-reduce": 1, "reduce-scatter": 1,
+            "collective-permute": 1, "all-to-all": 1,
+        }
+        p0 = 4 * 512 * 128 * 2
+        fus = 16 * 4096 * 4
+        assert r["bytes_by_kind"]["all-gather"] == p0
+        assert r["bytes_by_kind"]["all-reduce"] == fus
+        assert r["bytes_by_kind"]["collective-permute"] == p0
+        assert r["bytes_by_kind"]["all-to-all"] == fus
+        # result bytes differ from operand bytes for gather/scatter
+        assert r["result_bytes_by_kind"]["all-gather"] == 2 * p0
+        assert r["result_bytes_by_kind"]["reduce-scatter"] == 8 * 4096 * 4
+
+    def test_ignores_non_collectives(self):
+        r = collective_bytes_from_hlo("%x = f32[2]{0} add(%a, %b)\n")
+        assert r["total_bytes"] == 0 and not r["counts"]
+
+
+class TestCellEnumeration:
+    def test_31_runnable_9_skipped(self):
+        cells = list(iter_cells())
+        runnable = [c for c in cells if c[2]]
+        skipped = [c for c in cells if not c[2]]
+        assert len(runnable) == 31
+        assert len(skipped) == 9
+        assert all(why for *_, why in skipped)
+
+
+class TestRooflineMath:
+    def _cell(self, flops=1e15, hbytes=1e12, cbytes=1e11):
+        return {
+            "ok": True, "arch": "qwen3-32b", "shape": "train_4k",
+            "calibrated": {
+                "flops": flops, "bytes_accessed": hbytes,
+                "collective_bytes": cbytes,
+            },
+        }
+
+    def test_terms_and_bottleneck(self):
+        r = roofline_for_cell(self._cell())
+        assert r.compute_s == pytest.approx(1e15 / PEAK_FLOPS)
+        assert r.memory_s == pytest.approx(1e12 / HBM_BW)
+        assert r.collective_s == pytest.approx(1e11 / ICI_BW)
+        assert r.bottleneck == "compute"
+        assert 0 < r.roofline_fraction <= 1.0
+
+    def test_bottleneck_flips(self):
+        r = roofline_for_cell(self._cell(flops=1e12, cbytes=1e13))
+        assert r.bottleneck == "collective"
+        assert r.roofline_fraction < 0.1
+
+    def test_model_flops_scaling(self):
+        train = model_flops_per_device("qwen3-32b", "train_4k")
+        prefill = model_flops_per_device("qwen3-32b", "prefill_32k")
+        decode = model_flops_per_device("qwen3-32b", "decode_32k")
+        assert train == pytest.approx(3 * prefill)  # 6ND vs 2ND, same tokens
+        assert decode < prefill / 1000  # 1 token vs 32768
+
+    def test_failed_cell_returns_none(self):
+        assert roofline_for_cell({"ok": False}) is None
+
+
+class TestElasticReplan:
+    def test_replan_adapts_to_world_size(self):
+        from repro.runtime.trainer import replan
+
+        p256 = replan(256, 4 * 2**20)
+        p64 = replan(64, 4 * 2**20)
+        import math
+
+        assert math.prod(p256.factors) == 256
+        assert math.prod(p64.factors) == 64
+        assert p256.total_time_s > 0
+
+
+class TestArtifacts:
+    """The committed dry-run artifacts stay self-consistent."""
+
+    def test_dryrun_artifacts_if_present(self):
+        from pathlib import Path
+
+        d = Path("runs/dryrun")
+        if not d.exists():
+            pytest.skip("no dry-run artifacts in this checkout")
+        cells = [json.loads(p.read_text()) for p in d.glob("*__singlepod.json")]
+        assert len(cells) == 31
+        assert all(c["ok"] for c in cells)
+        multien = list(d.glob("*__multipod.json"))
+        assert len(multien) == 31
