@@ -10,6 +10,8 @@ cost matters); ``derived`` carries the paper-comparable numbers.
   fig6    — wavelength sweep @ N=1024, w in {96, 128}
   schedule_level — transmission-level schedules vs closed forms (small N)
   planner — TPU-adaptation: staged-plan times vs flat/ring on the v5e model
+  collectives — staged-RS/AR plans (all-gather duals) + chunked-overlap decision
+  duality — optics-model step counts for RS/AR vs the all-gather numbers
   roofline — §Roofline table from runs/dryrun (skips if absent)
 """
 import sys
@@ -32,8 +34,16 @@ from repro.core import (  # noqa: E402
     validate_schedule,
 )
 from repro.core import steps as S  # noqa: E402
-from repro.core.planner import DCN_LINK, ICI_LINK, plan_axis_order, plan_staged_allgather  # noqa: E402
+from repro.core.planner import (  # noqa: E402
+    DCN_LINK,
+    ICI_LINK,
+    plan_all_reduce,
+    plan_axis_order,
+    plan_reduce_scatter_order,
+    plan_staged_allgather,
+)
 from repro.optics import simulate  # noqa: E402
+from repro.optics.comparison import compare_algorithms  # noqa: E402
 
 
 def _row(name, us, derived):
@@ -180,6 +190,44 @@ def planner():
          f"{plan.stages[0].link.name == 'dcn'}")
 
 
+def collectives():
+    """Staged-RS/AR plans (the all-gather duals) vs XLA single-shot models,
+    plus the chunked-overlap decision."""
+    axes = [(2, DCN_LINK), (16, ICI_LINK)]
+    n = int(np.prod([f for f, _ in axes]))
+    for shard in (64 * 2**10, 1 * 2**20, 8 * 2**20):
+        us_rs, rs = _timeit(lambda s=shard: plan_reduce_scatter_order(axes, s))
+        us_ar, ar = _timeit(lambda s=shard: plan_all_reduce(axes, s))
+        ag = plan_axis_order(axes, shard)
+        # flat single-shot models: one stage over all N devices on the slow link
+        flat_rs = (n - 1) * (DCN_LINK.alpha_s + shard / DCN_LINK.bandwidth_bytes)
+        _row(f"collectives/rs_shard{shard//1024}K", us_rs,
+             f"order={[s.link.name for s in rs.stages]};"
+             f"steps={sum(s.factor - 1 for s in rs.stages)};"
+             f"t_us={rs.total_time_s*1e6:.1f};flat_us={flat_rs*1e6:.1f};"
+             f"chunks={rs.num_chunks};t_chunked_us={rs.pipelined_time_s*1e6:.1f};"
+             f"slow_axis_last={rs.stages[-1].link.name == 'dcn'};"
+             f"dual_of_ag={[s.factor for s in rs.stages] == [s.factor for s in reversed(ag.stages)]}")
+        _row(f"collectives/ar_shard{shard//1024}K", us_ar,
+             f"steps={sum(s.factor - 1 for s in ar.reduce_scatter.stages) + sum(s.factor - 1 for s in ar.all_gather.stages)};"
+             f"t_us={ar.total_time_s*1e6:.1f};"
+             f"t_chunked_us={ar.pipelined_time_s*1e6:.1f};"
+             f"chunks={ar.num_chunks}")
+
+
+def duality():
+    """Paper-model step counts for the reduce-scatter dual + all-reduce
+    (optics backend): RS steps equal AG steps by time-reversal symmetry."""
+    for coll in ("all-gather", "reduce-scatter", "all-reduce"):
+        res = compare_algorithms(
+            paper.TABLE1_N, paper.TABLE1_W, 4 * 2**20, paper.SYSTEM,
+            ("optree", "ring", "ne", "one-stage"), collective=coll,
+        )
+        _row(f"duality/{coll}", 0.0,
+             ";".join(f"{k}={v.steps}steps/{v.time_s*1e3:.2f}ms"
+                      for k, v in res.items()))
+
+
 def roofline():
     from repro.launch.roofline import analyze_dir
 
@@ -203,6 +251,8 @@ def main() -> None:
     fig6()
     schedule_level()
     planner()
+    collectives()
+    duality()
     roofline()
 
 

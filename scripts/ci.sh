@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 CI entrypoint: the full suite on CPU with 8 fake host devices for
+# the in-process multi-device tests (the subprocess checks set their own
+# device count).  Mirrors ROADMAP.md "Tier-1 verify".
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec python -m pytest -x -q "$@"

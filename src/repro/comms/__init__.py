@@ -5,6 +5,15 @@ from .staged_allgather import (  # noqa: F401
     optree_all_gather,
     canonical_all_gather,
 )
+from .staged_collectives import (  # noqa: F401
+    StagedCollectiveEngine,
+    CollectiveOrders,
+    plan_stage_orders,
+    staged_all_gather_chunked,
+    staged_all_reduce,
+    staged_reduce_scatter,
+    tp_all_reduce,
+)
 from .collectives import (  # noqa: F401
     ring_all_gather,
     neighbor_exchange_all_gather,

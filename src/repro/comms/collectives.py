@@ -21,7 +21,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from ..compat import axis_size
 from .staged_allgather import staged_all_gather
+from .staged_collectives import staged_reduce_scatter
 
 __all__ = [
     "ring_all_gather",
@@ -44,7 +46,7 @@ def reduce_scatter(x: jax.Array, axis_name: str, axis: int = 0) -> jax.Array:
 
 def ring_all_gather(x: jax.Array, axis_name: str, axis: int = 0) -> jax.Array:
     """Classic N-1-step ring all-gather via ppermute (paper's Ring baseline)."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     idx = lax.axis_index(axis_name)
     perm = [(i, (i + 1) % n) for i in range(n)]
 
@@ -88,7 +90,7 @@ def _ne_tables(n: int) -> Tuple[np.ndarray, np.ndarray]:
 
 def neighbor_exchange_all_gather(x: jax.Array, axis_name: str, axis: int = 0) -> jax.Array:
     """Neighbor-Exchange all-gather (Chen et al. 2005): N/2 exchange steps."""
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n % 2:
         raise ValueError("neighbor exchange needs an even axis size")
     if n == 2:
@@ -130,6 +132,7 @@ def hierarchical_all_reduce(
     slow_axes: Sequence[str] = (),
     *,
     gather: bool = True,
+    num_chunks: int = 1,
 ) -> jax.Array:
     """OpTree-staged all-reduce: reduce-scatter over the fast (ICI) axes,
     psum over the slow (pod/DCN) axes on the scattered shard, then staged
@@ -137,13 +140,13 @@ def hierarchical_all_reduce(
 
     With ``gather=False`` the result stays scattered over ``fast_axes`` —
     the ZeRO-1 form (optimizer updates the shard, parameters are gathered
-    later by `optree_all_gather`).
+    later by `optree_all_gather`).  The scatter runs in canonical
+    (major-first) block order, so the scattered shard is exactly
+    ``psum_scatter(x, fast_axes)``'s block for this device.
     """
     fast_axes = tuple(fast_axes)
     slow_axes = tuple(slow_axes)
-    y = x
-    for name in reversed(fast_axes):  # scatter minor-to-major
-        y = lax.psum_scatter(y, name, scatter_dimension=0, tiled=True)
+    y = staged_reduce_scatter(x, fast_axes, num_chunks=num_chunks)
     if slow_axes:
         y = lax.psum(y, slow_axes)
     if gather:

@@ -16,13 +16,10 @@ import math
 from typing import Optional, Sequence, Tuple
 
 import jax
-from jax.sharding import AxisType
+
+from ..compat import auto_axis_types, make_mesh
 
 __all__ = ["make_factorized_mesh", "auto_axis_types"]
-
-
-def auto_axis_types(n: int) -> Tuple[AxisType, ...]:
-    return (AxisType.Auto,) * n
 
 
 def make_factorized_mesh(
@@ -39,7 +36,4 @@ def make_factorized_mesh(
     devs = devices if devices is not None else jax.devices()
     if n > len(devs):
         raise ValueError(f"need {n} devices, have {len(devs)}")
-    return jax.make_mesh(
-        tuple(factors), tuple(names), axis_types=auto_axis_types(len(factors)),
-        devices=devs[:n],
-    )
+    return make_mesh(tuple(factors), tuple(names), devices=devs[:n])

@@ -19,9 +19,34 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map
 from ..core.planner import ICI_LINK, DCN_LINK, LinkSpec, plan_axis_order
 
-__all__ = ["staged_all_gather", "canonical_all_gather", "optree_all_gather"]
+__all__ = ["staged_all_gather", "canonical_all_gather", "optree_all_gather",
+           "link_for_axis", "names_for_plan"]
+
+
+def link_for_axis(name: str, links: Optional[dict] = None) -> LinkSpec:
+    """Link model for a mesh axis: explicit map wins, else 'pod*' names are
+    DCN-class and everything else ICI."""
+    if links and name in links:
+        return links[name]
+    return DCN_LINK if name.startswith("pod") else ICI_LINK
+
+
+def names_for_plan(plan, axis_names, sizes, links=None):
+    """Map a planned (size, link) stage sequence back to axis names (stable
+    for duplicate (size, link) pairs)."""
+    remaining = list(axis_names)
+    order = []
+    for st in plan.stages:
+        for n in remaining:
+            if sizes[n] == st.factor and link_for_axis(n, links).name == st.link.name:
+                order.append(n)
+                remaining.remove(n)
+                break
+    assert not remaining, (order, remaining)
+    return tuple(order)
 
 
 def staged_all_gather(
@@ -105,35 +130,19 @@ def optree_all_gather(
     """
     axis_names = tuple(axis_names)
     sizes = {n: mesh.shape[n] for n in axis_names}
-    links = links or {}
-
-    def link_for(name: str) -> LinkSpec:
-        if name in links:
-            return links[name]
-        return DCN_LINK if name.startswith("pod") else ICI_LINK
 
     shard_bytes = x.size * x.dtype.itemsize / math.prod(sizes.values())
-    axes = [(sizes[n], link_for(n)) for n in axis_names]
+    axes = [(sizes[n], link_for_axis(n, links)) for n in axis_names]
     plan = plan_axis_order(axes, shard_bytes)
-    # map planned (size, link) order back to names (stable for duplicates)
-    remaining = list(axis_names)
-    order: list = []
-    for st in plan.stages:
-        for n in remaining:
-            if sizes[n] == st.factor and link_for(n).name == st.link.name:
-                order.append(n)
-                remaining.remove(n)
-                break
-    assert not remaining, (order, remaining)
+    order = names_for_plan(plan, axis_names, sizes, links)
 
     ispec = in_spec if in_spec is not None else P(axis_names)
     ospec = out_spec if out_spec is not None else P()
 
-    fn = jax.shard_map(
+    fn = shard_map(
         lambda y: staged_all_gather(y, axis_names, stage_order=order, axis=axis),
         mesh=mesh,
         in_specs=ispec,
         out_specs=ospec,
-        check_vma=False,
     )
     return fn(x)

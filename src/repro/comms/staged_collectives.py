@@ -1,0 +1,445 @@
+"""Staged collective engine: OpTree's k-stage machinery generalized beyond
+all-gather.
+
+``staged_all_gather`` (staged_allgather.py) runs the paper's stages
+minor-payload-first so the slow links move the *small* payload.  This module
+adds the rest of the gather-shaped family:
+
+  * ``staged_reduce_scatter`` — the exact dual.  A reduce-scatter's payload
+    *shrinks* stage by stage, so the paper-optimal order is the **reverse**
+    of the all-gather order: the slow (pod/DCN) axes run last, when each
+    device holds only the final 1/N shard.  Any stage order composes to the
+    canonical (major-first) block layout after one *local* block permutation
+    before the scatters — layout work, not communication (the mirror of the
+    all-gather's post-transpose).
+  * ``staged_all_reduce`` — reduce-scatter + all-gather sharing one plan
+    (the AG stage order is the reverse of the RS order).
+  * **chunked execution** — every primitive takes ``num_chunks=C``: the
+    shard is split into C chunks and stage j of chunk i is issued in the
+    same wavefront as stage j+1 of chunk i-1 (SWOT-style software
+    pipelining; XLA's scheduler overlaps the independent collectives).  The
+    planner (``core.planner.choose_num_chunks``) decides C from the
+    alpha/bandwidth trade-off.
+
+``StagedCollectiveEngine`` is the user-facing wrapper: it plans stage
+orders + chunking from the cost model and wraps shard_map.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..compat import axis_size, shard_map
+from ..core.planner import (
+    AllGatherPlan,
+    AllReducePlan,
+    LinkSpec,
+    plan_all_reduce,
+    plan_axis_order,
+    plan_reduce_scatter_order,
+)
+from .staged_allgather import link_for_axis, names_for_plan, staged_all_gather
+
+__all__ = [
+    "staged_reduce_scatter",
+    "staged_all_reduce",
+    "staged_all_gather_chunked",
+    "tp_all_reduce",
+    "fit_chunks",
+    "CollectiveOrders",
+    "plan_stage_orders",
+    "StagedCollectiveEngine",
+]
+
+
+# --------------------------------------------------------------------------
+# inside-shard_map primitives
+# --------------------------------------------------------------------------
+
+def _check_order(order, axis_names) -> Tuple[str, ...]:
+    order = tuple(order)
+    if sorted(order) != sorted(axis_names):
+        raise ValueError(f"stage_order {order} must permute {axis_names}")
+    return order
+
+
+def _axis_sizes(axis_names: Sequence[str]) -> Dict[str, int]:
+    return {n: axis_size(n) for n in axis_names}
+
+
+def _permute_blocks_to_order(y, axis_names, order, sizes):
+    """Local permutation of the N device blocks along dim 0 from canonical
+    (major-first ``axis_names``) layout to ``order`` layout, so tiled
+    psum_scatter stages executed in ``order`` land each device on its
+    canonical block.  Pure layout work — no communication."""
+    k = len(axis_names)
+    n_total = math.prod(sizes[n] for n in axis_names)
+    block = y.shape[0] // n_total
+    shaped = y.reshape(tuple(sizes[n] for n in axis_names) + (block,) + y.shape[1:])
+    perm = tuple(axis_names.index(n) for n in order)
+    shaped = jnp.transpose(shaped, perm + tuple(range(k, shaped.ndim)))
+    return shaped.reshape(y.shape)
+
+
+def _rs_stage(y, name):
+    return lax.psum_scatter(y, name, scatter_dimension=0, tiled=True)
+
+
+def _ag_stage(y, name):
+    # stacking form: composes under any stage order; one local fix-up at the
+    # end restores canonical device order (cf. staged_all_gather)
+    return lax.all_gather(y, name, axis=0, tiled=False)
+
+
+def _ag_finalize(y, axis_names, order):
+    """Collapse the k stacked stage axes (reversed(order) leading) into one
+    canonical (N, ...) device axis."""
+    k = len(axis_names)
+    stacked = tuple(reversed(order))
+    perm = tuple(stacked.index(n) for n in axis_names)
+    y = jnp.transpose(y, perm + tuple(range(k, y.ndim)))
+    n_total = math.prod(y.shape[:k])
+    return y.reshape((n_total,) + y.shape[k:])
+
+
+def _wavefront(chunks: List, num_stages: int, apply_stage) -> List:
+    """Software pipeline: at tick t, chunk c runs stage t-c — stage j of
+    chunk i is issued alongside stage j+1 of chunk i-1, so independent
+    per-chunk collectives can overlap."""
+    num_chunks = len(chunks)
+    for t in range(num_chunks + num_stages - 1):
+        for c in range(num_chunks):
+            j = t - c
+            if 0 <= j < num_stages:
+                chunks[c] = apply_stage(chunks[c], j)
+    return chunks
+
+
+def _split_rs_chunks(y, axis_names, order, sizes, num_chunks):
+    """Split the (moveaxis'd) input into num_chunks RS-ready chunks: chunk c
+    holds every device block's c-th slice, pre-permuted to ``order`` layout
+    when the stage order is non-canonical.  Raises on indivisibility."""
+    n_total = math.prod(sizes.values())
+    length = y.shape[0]
+    if length % (n_total * num_chunks):
+        raise ValueError(
+            f"axis length {length} not divisible by devices*chunks "
+            f"{n_total}*{num_chunks}"
+        )
+
+    def prep(chunk):
+        if order != axis_names:
+            return _permute_blocks_to_order(chunk, axis_names, order, sizes)
+        return chunk
+
+    if num_chunks == 1:
+        return [prep(y)]
+    per_chunk = length // n_total // num_chunks
+    blocks = y.reshape((n_total, num_chunks, per_chunk) + y.shape[1:])
+    return [
+        prep(blocks[:, c].reshape((n_total * per_chunk,) + y.shape[1:]))
+        for c in range(num_chunks)
+    ]
+
+
+def staged_reduce_scatter(
+    x: jax.Array,
+    axis_names: Sequence[str],
+    *,
+    stage_order: Optional[Sequence[str]] = None,
+    axis: int = 0,
+    num_chunks: int = 1,
+) -> jax.Array:
+    """k-stage reduce-scatter inside shard_map — the dual of
+    ``staged_all_gather``.
+
+    Returns the same value as ``jax.lax.psum_scatter(x, tuple(axis_names),
+    scatter_dimension=axis, tiled=True)``: device p (canonical major-first
+    order) ends with block p of the sum.
+
+    Args:
+      axis_names: factorized sub-axes of the logical axis, *major first*.
+      stage_order: execution order (default: paper order — major/slow axis
+        **last**, i.e. the slow links carry the smallest payload).
+      num_chunks: split the output shard into C chunks and pipeline the
+        stages across chunks.
+    """
+    axis_names = tuple(axis_names)
+    order = (
+        _check_order(stage_order, axis_names)
+        if stage_order is not None
+        else tuple(reversed(axis_names))
+    )
+    sizes = _axis_sizes(axis_names)
+
+    y = jnp.moveaxis(x, axis, 0) if axis != 0 else x
+    chunks = _split_rs_chunks(y, axis_names, order, sizes, num_chunks)
+    chunks = _wavefront(
+        chunks, len(order), lambda ch, j: _rs_stage(ch, order[j])
+    )
+    out = chunks[0] if num_chunks == 1 else jnp.concatenate(chunks, axis=0)
+    return jnp.moveaxis(out, 0, axis) if axis != 0 else out
+
+
+def staged_all_gather_chunked(
+    x: jax.Array,
+    axis_names: Sequence[str],
+    *,
+    stage_order: Optional[Sequence[str]] = None,
+    axis: int = 0,
+    num_chunks: int = 2,
+) -> jax.Array:
+    """Chunked/pipelined ``staged_all_gather``: equals
+    ``lax.all_gather(x, tuple(axis_names), axis=axis, tiled=True)``."""
+    axis_names = tuple(axis_names)
+    order = (
+        _check_order(stage_order, axis_names)
+        if stage_order is not None
+        else axis_names
+    )
+    y = jnp.moveaxis(x, axis, 0) if axis != 0 else x
+    shard = y.shape[0]
+    if shard % num_chunks:
+        raise ValueError(f"shard length {shard} not divisible by {num_chunks}")
+    per_chunk = shard // num_chunks
+    chunks = [y[c * per_chunk:(c + 1) * per_chunk] for c in range(num_chunks)]
+    chunks = _wavefront(
+        chunks, len(order), lambda ch, j: _ag_stage(ch, order[j])
+    )
+    gathered = [_ag_finalize(ch, axis_names, order) for ch in chunks]
+    # interleave: device p's shard is the concat of its chunks
+    out = jnp.stack(gathered, axis=1)  # (N, C, per_chunk, ...)
+    n_total = out.shape[0]
+    out = out.reshape((n_total * shard,) + out.shape[3:])
+    return jnp.moveaxis(out, 0, axis) if axis != 0 else out
+
+
+def staged_all_reduce(
+    x: jax.Array,
+    axis_names: Sequence[str],
+    *,
+    rs_order: Optional[Sequence[str]] = None,
+    axis: int = 0,
+    num_chunks: int = 1,
+) -> jax.Array:
+    """Staged all-reduce = staged RS + staged AG sharing one plan.
+
+    Equals ``jax.lax.psum(x, tuple(axis_names))``.  The AG stage order is
+    the reverse of the RS order, so each payload size crosses each link
+    class exactly twice and the slow links only ever carry the scattered
+    (smallest) payloads.  With ``num_chunks=C`` the whole 2k-stage RS+AG
+    chain is software-pipelined across chunks.
+    """
+    axis_names = tuple(axis_names)
+    order = (
+        _check_order(rs_order, axis_names)
+        if rs_order is not None
+        else tuple(reversed(axis_names))
+    )
+    ag_order = tuple(reversed(order))
+    sizes = _axis_sizes(axis_names)
+
+    y = jnp.moveaxis(x, axis, 0) if axis != 0 else x
+    length = y.shape[0]
+
+    if num_chunks == 1:
+        out = staged_reduce_scatter(y, axis_names, stage_order=order)
+        out = staged_all_gather(out, axis_names, stage_order=ag_order)
+        return jnp.moveaxis(out, 0, axis) if axis != 0 else out
+
+    k = len(axis_names)
+    chunks = _split_rs_chunks(y, axis_names, order, sizes, num_chunks)
+
+    def apply_stage(ch, j):
+        if j < k:
+            return _rs_stage(ch, order[j])
+        return _ag_stage(ch, ag_order[j - k])
+
+    chunks = _wavefront(chunks, 2 * k, apply_stage)
+    gathered = [_ag_finalize(ch, axis_names, ag_order) for ch in chunks]
+    out = jnp.stack(gathered, axis=1)  # (N, C, per_chunk, ...)
+    out = out.reshape((length,) + out.shape[3:])
+    return jnp.moveaxis(out, 0, axis) if axis != 0 else out
+
+
+def tp_all_reduce(
+    x: jax.Array,
+    axis_names: Sequence[str],
+    *,
+    axis: int = -1,
+    num_chunks: int = 1,
+) -> jax.Array:
+    """Tensor-parallel partial-sum combine for model code inside shard_map.
+
+    Uses the staged all-reduce when the reduced dim is divisible by the
+    device product (times chunks); falls back to a flat ``lax.psum``
+    otherwise, so models never have to care about divisibility.
+    """
+    axis_names = tuple(axis_names)
+    if axis < 0:
+        axis += x.ndim
+    n_total = math.prod(axis_size(n) for n in axis_names)
+    if x.shape[axis] % n_total == 0:
+        chunks = fit_chunks(x.shape[axis], n_total, num_chunks)
+        return staged_all_reduce(x, axis_names, axis=axis, num_chunks=chunks)
+    return lax.psum(x, axis_names)
+
+
+# --------------------------------------------------------------------------
+# planning + user-facing engine
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CollectiveOrders:
+    """Planner output for one (mesh axes, payload) point."""
+
+    ag_order: Tuple[str, ...]
+    rs_order: Tuple[str, ...]
+    ag_chunks: int
+    rs_chunks: int
+    ar_chunks: int  # shared C for the combined RS+AG pipeline
+    ag_plan: AllGatherPlan
+    rs_plan: AllGatherPlan
+    ar_plan: AllReducePlan
+
+
+def plan_stage_orders(
+    mesh: Mesh,
+    axis_names: Sequence[str],
+    shard_bytes: float,
+    *,
+    links: Optional[Dict[str, LinkSpec]] = None,
+    max_chunks: int = 8,
+) -> CollectiveOrders:
+    """Cost-model stage orders + chunking for all primitives over
+    ``axis_names``.  ``shard_bytes`` is the per-device payload at the
+    scattered end (AG input / RS output)."""
+    axis_names = tuple(axis_names)
+    sizes = {n: mesh.shape[n] for n in axis_names}
+    axes = [(sizes[n], link_for_axis(n, links)) for n in axis_names]
+    ag_plan = plan_axis_order(axes, shard_bytes, max_chunks=max_chunks)
+    rs_plan = plan_reduce_scatter_order(axes, shard_bytes, max_chunks=max_chunks)
+    ar_plan = plan_all_reduce(axes, shard_bytes, max_chunks=max_chunks)
+    return CollectiveOrders(
+        ag_order=names_for_plan(ag_plan, axis_names, sizes, links),
+        rs_order=names_for_plan(rs_plan, axis_names, sizes, links),
+        ag_chunks=ag_plan.num_chunks,
+        rs_chunks=rs_plan.num_chunks,
+        ar_chunks=ar_plan.num_chunks,
+        ag_plan=ag_plan,
+        rs_plan=rs_plan,
+        ar_plan=ar_plan,
+    )
+
+
+def fit_chunks(length: int, granularity: int, chunks: int) -> int:
+    """Largest power-of-two <= chunks such that length divides into
+    granularity*chunks pieces (planner chunk counts are powers of two)."""
+    while chunks > 1 and length % (granularity * chunks):
+        chunks //= 2
+    return chunks
+
+
+class StagedCollectiveEngine:
+    """User-facing staged collectives over the factorized axes of a mesh.
+
+    Plans stage orders and chunking from the cost model once per
+    (shape, dtype) and wraps the shard_map primitives:
+
+        eng = StagedCollectiveEngine(mesh, ("pod", "data"))
+        y = eng.all_reduce(x)          # == jax.lax.psum over both axes
+        s = eng.reduce_scatter(x)      # == psum_scatter, canonical blocks
+        g = eng.all_gather(s)          # == all_gather tiled
+    """
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        axis_names: Sequence[str],
+        *,
+        links: Optional[Dict[str, LinkSpec]] = None,
+        max_chunks: int = 8,
+    ):
+        self.mesh = mesh
+        self.axis_names = tuple(axis_names)
+        self.links = links
+        self.max_chunks = max_chunks
+        self.n_devices = math.prod(mesh.shape[n] for n in self.axis_names)
+        self._plan_cache: Dict[float, CollectiveOrders] = {}
+
+    def plan(self, x: jax.Array) -> CollectiveOrders:
+        # x is the full-length array in every case (sharded for AG,
+        # replicated for RS/AR); the scattered-end payload is nbytes/N.
+        # Plans are memoized on that payload — the only planner input that
+        # varies per call.
+        shard_bytes = x.size * x.dtype.itemsize / self.n_devices
+        cached = self._plan_cache.get(shard_bytes)
+        if cached is None:
+            cached = plan_stage_orders(
+                self.mesh, self.axis_names, shard_bytes,
+                links=self.links, max_chunks=self.max_chunks,
+            )
+            self._plan_cache[shard_bytes] = cached
+        return cached
+
+    def _run(self, fn, x, in_spec: P, out_spec: P):
+        return shard_map(
+            fn, mesh=self.mesh, in_specs=in_spec, out_specs=out_spec
+        )(x)
+
+    def all_gather(self, x: jax.Array, *, axis: int = 0) -> jax.Array:
+        """x sharded over ``axis_names`` along ``axis`` -> replicated."""
+        orders = self.plan(x)
+        names = self.axis_names
+        shard_len = x.shape[axis] // self.n_devices
+        chunks = fit_chunks(shard_len, 1, orders.ag_chunks)
+
+        def fn(y):
+            if chunks > 1:
+                return staged_all_gather_chunked(
+                    y, names, stage_order=orders.ag_order, axis=axis,
+                    num_chunks=chunks,
+                )
+            return staged_all_gather(
+                y, names, stage_order=orders.ag_order, axis=axis
+            )
+
+        spec = [None] * (x.ndim)
+        spec[axis] = names
+        return self._run(fn, x, P(*spec), P())
+
+    def reduce_scatter(self, x: jax.Array, *, axis: int = 0) -> jax.Array:
+        """x replicated -> summed and scattered over ``axis_names``."""
+        orders = self.plan(x)
+        names = self.axis_names
+        chunks = fit_chunks(x.shape[axis], self.n_devices, orders.rs_chunks)
+
+        def fn(y):
+            return staged_reduce_scatter(
+                y, names, stage_order=orders.rs_order, axis=axis,
+                num_chunks=chunks,
+            )
+
+        spec = [None] * x.ndim
+        spec[axis] = names
+        return self._run(fn, x, P(), P(*spec))
+
+    def all_reduce(self, x: jax.Array, *, axis: int = 0) -> jax.Array:
+        """x replicated -> psum over ``axis_names`` (device count factor)."""
+        orders = self.plan(x)
+        names = self.axis_names
+        chunks = fit_chunks(x.shape[axis], self.n_devices, orders.ar_chunks)
+
+        def fn(y):
+            return staged_all_reduce(
+                y, names, rs_order=orders.rs_order, axis=axis,
+                num_chunks=chunks,
+            )
+
+        return self._run(fn, x, P(), P())

@@ -21,6 +21,7 @@ an axis, pick k) and the heterogeneous multi-axis case (order given axes).
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import math
 from dataclasses import dataclass, field
@@ -28,8 +29,11 @@ from typing import List, Optional, Sequence, Tuple
 
 from .tree import balanced_factors
 
-__all__ = ["LinkSpec", "StagePlan", "AllGatherPlan", "plan_staged_allgather",
-           "plan_axis_order", "ICI_LINK", "DCN_LINK"]
+__all__ = ["LinkSpec", "StagePlan", "AllGatherPlan", "AllReducePlan",
+           "plan_staged_allgather", "plan_axis_order",
+           "plan_reduce_scatter_order", "plan_all_reduce",
+           "pipeline_makespan", "choose_num_chunks",
+           "ICI_LINK", "DCN_LINK"]
 
 
 @dataclass(frozen=True)
@@ -56,12 +60,41 @@ class StagePlan:
 
 @dataclass(frozen=True)
 class AllGatherPlan:
+    """A staged collective plan (all-gather or its reduce-scatter dual).
+
+    ``num_chunks`` / ``pipelined_time_s`` carry the chunking decision: split
+    the shard into C chunks and software-pipeline stage j of chunk i with
+    stage j+1 of chunk i-1.  C=1 means chunking does not pay (alpha-bound).
+    """
+
     stages: Tuple[StagePlan, ...]
     total_time_s: float
+    num_chunks: int = 1
+    pipelined_time_s: Optional[float] = None
 
     @property
     def factors(self) -> Tuple[int, ...]:
         return tuple(s.factor for s in self.stages)
+
+
+@dataclass(frozen=True)
+class AllReducePlan:
+    """Staged all-reduce = reduce-scatter + all-gather sharing one axis plan
+    (AG stage order is the exact reverse of the RS order).
+
+    ``num_chunks``/``pipelined_time_s`` model what ``staged_all_reduce``
+    actually executes: ONE 2k-stage RS+AG pipeline with a single shared
+    chunk count, not two independently chunked halves.
+    """
+
+    reduce_scatter: AllGatherPlan
+    all_gather: AllGatherPlan
+    num_chunks: int = 1
+    pipelined_time_s: Optional[float] = None
+
+    @property
+    def total_time_s(self) -> float:
+        return self.reduce_scatter.total_time_s + self.all_gather.total_time_s
 
 
 def _stage_time(factor: int, payload: float, link: LinkSpec) -> float:
@@ -108,20 +141,162 @@ def plan_staged_allgather(
     return best
 
 
-def plan_axis_order(
-    axes: Sequence[Tuple[int, LinkSpec]], shard_bytes: float
+def _rs_plan_for_factors(
+    factors: Sequence[int], links: Sequence[LinkSpec], shard_bytes: float
 ) -> AllGatherPlan:
-    """Heterogeneous case: given physical mesh axes (size, link), choose the
-    stage *order*.  Provably: sort by ascending bandwidth (slow first) when
-    alphas are equal; we brute-force the permutation (k is tiny) so latency
-    asymmetries are honoured too.
+    """Reduce-scatter dual: payload *shrinks* stage by stage.  A ring
+    reduce-scatter over ``f`` participants with input payload P makes f-1
+    hops each moving P/f, leaving P/f per device.  ``shard_bytes`` is the
+    *output* shard (input = shard * prod(factors)) so the duality with the
+    all-gather plan is literal: reversed factors give mirrored stage costs.
     """
+    stages: List[StagePlan] = []
+    payload = float(shard_bytes) * math.prod(factors)
+    total = 0.0
+    for f, link in zip(factors, links):
+        payload /= f
+        t = (f - 1) * (link.alpha_s + payload / link.bandwidth_bytes)
+        stages.append(StagePlan(factor=f, link=link, payload_bytes=payload, time_s=t))
+        total += t
+    return AllGatherPlan(stages=tuple(stages), total_time_s=total)
+
+
+def _chunked_stage_times(
+    factors: Sequence[int],
+    links: Sequence[LinkSpec],
+    shard_bytes: float,
+    num_chunks: int,
+    collective: str,
+) -> List[float]:
+    """Per-chunk stage times with the shard split into ``num_chunks``:
+    bandwidth terms shrink by C, alpha terms are paid per chunk per stage."""
+    builder = _plan_for_factors if collective == "ag" else _rs_plan_for_factors
+    plan = builder(factors, links, shard_bytes / num_chunks)
+    return [s.time_s for s in plan.stages]
+
+
+def pipeline_makespan(stage_times: Sequence[float], num_chunks: int) -> float:
+    """Makespan of C chunks flowing through a linear k-stage pipeline where
+    each stage is a serially-reused link: fill the pipe once, then the
+    slowest stage paces the remaining C-1 chunks."""
+    return sum(stage_times) + (num_chunks - 1) * max(stage_times)
+
+
+def _best_chunks(times_for_c, max_chunks: int) -> Tuple[int, float]:
+    """Scan power-of-two chunk counts, minimizing the pipelined makespan of
+    whatever stage chain ``times_for_c(c)`` describes."""
+    best_c, best_t = 1, math.inf
+    c = 1
+    while c <= max_chunks:
+        t = pipeline_makespan(times_for_c(c), c)
+        if t < best_t:
+            best_c, best_t = c, t
+        c *= 2
+    return best_c, best_t
+
+
+def choose_num_chunks(
+    factors: Sequence[int],
+    links: Sequence[LinkSpec],
+    shard_bytes: float,
+    *,
+    max_chunks: int = 8,
+    collective: str = "ag",
+) -> Tuple[int, float]:
+    """Pick C minimizing the pipelined makespan (alpha/bandwidth trade-off:
+    chunking amortizes bandwidth across stages but multiplies alpha)."""
+    return _best_chunks(
+        lambda c: _chunked_stage_times(factors, links, shard_bytes, c, collective),
+        max_chunks,
+    )
+
+
+def _best_permutation(
+    axes: Sequence[Tuple[int, LinkSpec]], shard_bytes: float, builder
+) -> AllGatherPlan:
     best: Optional[AllGatherPlan] = None
     for perm in itertools.permutations(axes):
-        plan = _plan_for_factors(
-            [a[0] for a in perm], [a[1] for a in perm], shard_bytes
-        )
+        plan = builder([a[0] for a in perm], [a[1] for a in perm], shard_bytes)
         if best is None or plan.total_time_s < best.total_time_s:
             best = plan
     assert best is not None
     return best
+
+
+def _with_chunking(
+    plan: AllGatherPlan, shard_bytes: float, max_chunks: int, collective: str
+) -> AllGatherPlan:
+    links = [s.link for s in plan.stages]
+    c, t = choose_num_chunks(
+        plan.factors, links, shard_bytes, max_chunks=max_chunks,
+        collective=collective,
+    )
+    return dataclasses.replace(plan, num_chunks=c, pipelined_time_s=t)
+
+
+def plan_axis_order(
+    axes: Sequence[Tuple[int, LinkSpec]],
+    shard_bytes: float,
+    *,
+    max_chunks: int = 8,
+) -> AllGatherPlan:
+    """Heterogeneous case: given physical mesh axes (size, link), choose the
+    stage *order*.  Provably: sort by ascending bandwidth (slow first) when
+    alphas are equal; we brute-force the permutation (k is tiny) so latency
+    asymmetries are honoured too.  The returned plan also carries the
+    chunking decision (``num_chunks``/``pipelined_time_s``).
+    """
+    best = _best_permutation(axes, shard_bytes, _plan_for_factors)
+    return _with_chunking(best, shard_bytes, max_chunks, "ag")
+
+
+def plan_reduce_scatter_order(
+    axes: Sequence[Tuple[int, LinkSpec]],
+    shard_bytes: float,
+    *,
+    max_chunks: int = 8,
+) -> AllGatherPlan:
+    """Stage order for the reduce-scatter dual.  ``shard_bytes`` is the
+    *output* shard per device (same parameterization as the all-gather
+    planner's input shard, so rs.total == ag.total for mirrored orders).
+
+    The optimum is the exact reverse of the all-gather order: the payload
+    shrinks stage by stage, so the slow links run *last*, when the payload
+    is smallest.
+    """
+    best = _best_permutation(axes, shard_bytes, _rs_plan_for_factors)
+    return _with_chunking(best, shard_bytes, max_chunks, "rs")
+
+
+def plan_all_reduce(
+    axes: Sequence[Tuple[int, LinkSpec]],
+    shard_bytes: float,
+    *,
+    max_chunks: int = 8,
+) -> AllReducePlan:
+    """Staged all-reduce = RS then AG over one shared axis plan: the AG
+    stage order is the exact reverse of the planned RS order (duality), not
+    a second independent optimization.  ``shard_bytes`` is the scattered
+    (1/N) shard — the payload at the RS/AG boundary.
+
+    The chunk decision is made over the *combined* 2k-stage chain with one
+    shared C — matching ``staged_all_reduce``'s wavefront, which flows each
+    chunk through RS then AG as a single pipeline.
+    """
+    rs = plan_reduce_scatter_order(axes, shard_bytes, max_chunks=1)
+    ag_factors = [s.factor for s in reversed(rs.stages)]
+    ag_links = [s.link for s in reversed(rs.stages)]
+    ag = _plan_for_factors(ag_factors, ag_links, shard_bytes)
+
+    rs_links = [s.link for s in rs.stages]
+    best_c, best_t = _best_chunks(
+        lambda c: (
+            _chunked_stage_times(rs.factors, rs_links, shard_bytes, c, "rs")
+            + _chunked_stage_times(ag_factors, ag_links, shard_bytes, c, "ag")
+        ),
+        max_chunks,
+    )
+    return AllReducePlan(
+        reduce_scatter=rs, all_gather=ag, num_chunks=best_c,
+        pipelined_time_s=best_t,
+    )

@@ -11,6 +11,13 @@ named override variants and report the three roofline terms per variant.
 Variants are defined in VARIANTS below; each is a dict of ModelConfig
 overrides (the knobs: remat / remat_policy / sequence_parallel /
 loss_chunk / kv_shard / dtype / moe capacity).
+
+  python -m repro.launch.perf --collectives 2,4 --sizes-kb 64,1024
+
+runs the staged-collective microbenchmarks instead: modeled staged
+AG/RS/AR times (incl. the chunked-overlap decision) vs the flat
+single-shot model, plus measured wall-clock on a fake-device mesh of the
+given factorization vs the XLA one-shot collectives.
 """
 
 import argparse
@@ -90,10 +97,99 @@ def run_variant(arch, shape, name, overrides, out_dir):
     return row
 
 
+def collectives_bench(factors_csv: str, sizes_kb_csv: str) -> None:
+    """Staged-RS/AR/AG microbenchmarks vs the XLA single-shot baselines."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.comms import StagedCollectiveEngine, make_factorized_mesh
+    from repro.core.planner import (
+        DCN_LINK, ICI_LINK, plan_all_reduce, plan_axis_order,
+        plan_reduce_scatter_order,
+    )
+
+    try:
+        factors = [int(x) for x in factors_csv.split(",")]
+    except ValueError:
+        raise SystemExit(f"--collectives wants comma-separated ints, "
+                         f"got {factors_csv!r}")
+    names = [f"s{i}" for i in range(len(factors))]
+    n = int(np.prod(factors))
+    mesh = make_factorized_mesh(factors, names)
+    # one link model for the modeled plans AND the engine being measured:
+    # the major axis is DCN-class (the pod analogue), the rest ICI
+    link_map = {names[i]: (DCN_LINK if i == 0 and len(factors) > 1 else ICI_LINK)
+                for i in range(len(factors))}
+    eng = StagedCollectiveEngine(mesh, names, links=link_map)
+    links = [(f, link_map[names[i]]) for i, f in enumerate(factors)]
+
+    def timed(fn, x, reps=10):
+        fn(x).block_until_ready()  # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(x)
+        out.block_until_ready()
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    for kb in (int(s) for s in sizes_kb_csv.split(",")):
+        rows = kb * 256 // n * n  # f32 rows, divisible by the device count
+        shard_bytes = rows * 4 / n
+        ag_plan = plan_axis_order(links, shard_bytes)
+        rs_plan = plan_reduce_scatter_order(links, shard_bytes)
+        ar_plan = plan_all_reduce(links, shard_bytes)
+        x = jnp.arange(rows, dtype=jnp.float32)
+        xs = jax.device_put(x, NamedSharding(mesh, P(tuple(names))))
+
+        flat_ar = shard_map(
+            lambda y: jax.lax.psum(y, tuple(names)), mesh=mesh,
+            in_specs=P(), out_specs=P(),
+        )
+        flat_rs = shard_map(
+            lambda y: jax.lax.psum_scatter(
+                y, tuple(names), scatter_dimension=0, tiled=True),
+            mesh=mesh, in_specs=P(), out_specs=P(tuple(names)),
+        )
+        flat_ag = shard_map(
+            lambda y: jax.lax.all_gather(y, tuple(names), axis=0, tiled=True),
+            mesh=mesh, in_specs=P(tuple(names)), out_specs=P(),
+        )
+        # jit the engine entry points so reps measure execution, not tracing
+        meas = {
+            "ag": (timed(jax.jit(eng.all_gather), xs), timed(jax.jit(flat_ag), xs)),
+            "rs": (timed(jax.jit(eng.reduce_scatter), x), timed(jax.jit(flat_rs), x)),
+            "ar": (timed(jax.jit(eng.all_reduce), x), timed(jax.jit(flat_ar), x)),
+        }
+        model = {
+            "ag": (ag_plan.pipelined_time_s or ag_plan.total_time_s,
+                   ag_plan.num_chunks),
+            "rs": (rs_plan.pipelined_time_s or rs_plan.total_time_s,
+                   rs_plan.num_chunks),
+            "ar": (ar_plan.pipelined_time_s, ar_plan.num_chunks),
+        }
+        for coll in ("ag", "rs", "ar"):
+            staged_us, flat_us = meas[coll]
+            t_model, chunks = model[coll]
+            print(f"[perf/collectives] {coll} {kb}KB mesh={factors} "
+                  f"modeled={t_model*1e6:.1f}us chunks={chunks} "
+                  f"staged_wallclock={staged_us:.0f}us "
+                  f"xla_oneshot_wallclock={flat_us:.0f}us "
+                  f"(wall-clock on fake host devices; modeled times are the "
+                  f"decision signal)")
+
+
 def main():
     ap = argparse.ArgumentParser(description=DOC)
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--arch")
+    ap.add_argument("--collectives", default=None, metavar="F1,F2",
+                    help="run staged-collective microbenchmarks on this "
+                         "mesh factorization instead of the hillclimb")
+    ap.add_argument("--sizes-kb", default="64,1024")
+    ap.add_argument("--shape")
     ap.add_argument("--variants", default="baseline")
     ap.add_argument("--moe-capacity", type=float, default=None)
     ap.add_argument("--ssm-chunk", type=int, default=None)
@@ -101,6 +197,14 @@ def main():
                     help="comma-set of variant names merged into one run")
     ap.add_argument("--out", default="runs/perf")
     args = ap.parse_args()
+
+    if args.collectives:
+        collectives_bench(args.collectives, args.sizes_kb)
+        return
+    if not args.arch:
+        ap.error("--arch is required unless --collectives is given")
+    if not args.shape:
+        ap.error("--shape is required unless --collectives is given")
 
     if args.combine:
         ov: dict = {}

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import SHAPES, get_config, reduced as reduce_cfg
 from repro.data import DataConfig, SyntheticLMPipeline
 from repro.models import init_params, loss_fn
@@ -50,8 +51,7 @@ def main():
 
     dims = tuple(int(x) for x in args.mesh.split(","))
     names = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
-    mesh = jax.make_mesh(dims, names,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    mesh = compat.make_mesh(dims, names)
     print(f"mesh={dict(mesh.shape)} devices={len(jax.devices())}")
 
     shd.set_activation_policy({"dp": shd.dp_axes(mesh), "tp": "model",

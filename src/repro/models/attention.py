@@ -7,16 +7,17 @@ sharded-KV combine (`serving.sharded_decode_attention`).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from ..comms.staged_collectives import tp_all_reduce
 from ..configs.base import ModelConfig
 from ..kernels import ops
 from .layers import apply_rope, dense, dense_init, rmsnorm, rmsnorm_init
 
-__all__ = ["attn_init", "attention"]
+__all__ = ["attn_init", "attention", "attention_tp_out"]
 
 
 def attn_init(key, cfg: ModelConfig, *, dtype) -> Dict:
@@ -80,3 +81,22 @@ def attention(
 
     out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
     return dense(p["wo"], out), new_cache
+
+
+def attention_tp_out(
+    p: Dict,
+    out_local: jax.Array,  # (B, S, local_q_dim) — this shard's heads
+    axis_names: Sequence[str],
+    *,
+    num_chunks: int = 1,
+) -> jax.Array:
+    """Explicit tensor-parallel output projection (inside shard_map).
+
+    Heads are sharded over ``axis_names``; ``p["wo"]`` holds the matching
+    rows, so the local matmul is a partial sum over head shards.  The
+    staged all-reduce combines the partials — the TP-reduction analogue of
+    the OpTree all-gather, with the slow axes carrying only the scattered
+    payload and ``num_chunks`` pipelining the RS/AG stages.
+    """
+    partial = dense(p["wo"], out_local)
+    return tp_all_reduce(partial, axis_names, num_chunks=num_chunks)

@@ -1,16 +1,23 @@
-"""Feed-forward blocks: SwiGLU (default) and GELU (hubert/w2v2)."""
+"""Feed-forward blocks: SwiGLU (default) and GELU (hubert/w2v2).
+
+``ffn_apply`` is the pjit/GSPMD form (sharding via PartitionSpecs);
+``ffn_apply_tp`` is the explicit tensor-parallel form for shard_map
+execution, combining the row-parallel partial sums with the staged
+(OpTree-ordered) all-reduce.
+"""
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from ..comms.staged_collectives import tp_all_reduce
 from ..configs.base import ModelConfig
 from ..kernels import ops
 from .layers import dense, dense_init
 
-__all__ = ["mlp_init", "mlp", "ffn_init", "ffn_apply"]
+__all__ = ["mlp_init", "mlp", "ffn_init", "ffn_apply", "ffn_apply_tp"]
 
 
 def ffn_init(key, d_model: int, d_ff: int, num_layers: int, *, dtype,
@@ -37,6 +44,27 @@ def ffn_apply(p: Dict, x: jax.Array) -> jax.Array:
     else:
         h = jax.nn.gelu(dense(p["up"], x).astype(jnp.float32)).astype(x.dtype)
     return dense(p["down"], h)
+
+
+def ffn_apply_tp(
+    p: Dict,
+    x: jax.Array,
+    axis_names: Sequence[str],
+    *,
+    num_chunks: int = 1,
+) -> jax.Array:
+    """Explicit tensor-parallel FFN body (inside shard_map).
+
+    ``p`` holds this shard's slice of the hidden dim: gate/up are
+    column-parallel (local d_ff columns), down is row-parallel (matching
+    d_ff rows).  The down-projection therefore yields a *partial* sum over
+    hidden shards; the staged all-reduce combines it — on factorized meshes
+    the slow axes only ever carry the scattered payload, and ``num_chunks``
+    pipelines the reduction against nothing-yet (it overlaps RS/AG stages
+    across chunks).
+    """
+    partial = ffn_apply(p, x)
+    return tp_all_reduce(partial, axis_names, num_chunks=num_chunks)
 
 
 def mlp_init(key, cfg: ModelConfig, *, dtype) -> Dict:

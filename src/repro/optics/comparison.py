@@ -24,9 +24,10 @@ class AlgoResult:
     message_bytes: float
     steps: int
     time_s: float
+    collective: str = "all-gather"
 
 
-def _steps_for(algorithm: str, n: int, w: int) -> Optional[int]:
+def _allgather_steps(algorithm: str, n: int, w: int) -> Optional[int]:
     if algorithm == "ring":
         return S.ring_steps(n, w)
     if algorithm == "ne":
@@ -42,16 +43,39 @@ def _steps_for(algorithm: str, n: int, w: int) -> Optional[int]:
     raise ValueError(f"unknown algorithm {algorithm!r}")
 
 
+def _steps_for(
+    algorithm: str, n: int, w: int, collective: str = "all-gather"
+) -> Optional[int]:
+    """Step count for a collective built from the algorithm's schedule.
+
+    reduce-scatter: the time-reversed all-gather schedule — each step's
+    transmissions run backwards carrying partial sums, so the step count is
+    identical (and for OpTree the stage order is the exact reverse: the
+    shrinking payload leaves the slow stages last).  all-reduce: RS then AG
+    back-to-back (2x; no step sharing across the scattered boundary).
+    """
+    ag = _allgather_steps(algorithm, n, w)
+    if ag is None or collective == "all-gather":
+        return ag
+    if collective == "reduce-scatter":
+        return ag
+    if collective == "all-reduce":
+        return 2 * ag
+    raise ValueError(f"unknown collective {collective!r}")
+
+
 def compare_algorithms(
     n: int,
     w: int,
     message_bytes: float,
     sys: OpticalSystem,
     algorithms: Iterable[str] = ("optree", "wrht", "ring", "ne", "one-stage"),
+    *,
+    collective: str = "all-gather",
 ) -> Dict[str, AlgoResult]:
     out: Dict[str, AlgoResult] = {}
     for algo in algorithms:
-        steps = _steps_for(algo, n, w)
+        steps = _steps_for(algo, n, w, collective)
         if steps is None:
             continue
         out[algo] = AlgoResult(
@@ -61,5 +85,6 @@ def compare_algorithms(
             message_bytes=message_bytes,
             steps=steps,
             time_s=eq3_time(sys, message_bytes, steps),
+            collective=collective,
         )
     return out

@@ -5,3 +5,7 @@ from .adamw import (  # noqa: F401
     cosine_lr,
     opt_state_specs,
 )
+from .zero1 import (  # noqa: F401
+    zero1_shard_grads,
+    zero1_unshard_params,
+)

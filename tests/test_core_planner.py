@@ -1,0 +1,100 @@
+"""Planner tests for the staged-collective engine: RS/AG duality and the
+chunked-overlap decision."""
+import math
+
+import pytest
+
+from repro.core.planner import (
+    DCN_LINK,
+    ICI_LINK,
+    LinkSpec,
+    choose_num_chunks,
+    pipeline_makespan,
+    plan_all_reduce,
+    plan_axis_order,
+    plan_reduce_scatter_order,
+)
+
+POD_AXES = [(2, DCN_LINK), (16, ICI_LINK)]
+SHARD = 8 * 2**20
+
+
+class TestDuality:
+    def test_rs_order_is_reverse_of_ag_order(self):
+        ag = plan_axis_order(POD_AXES, SHARD)
+        rs = plan_reduce_scatter_order(POD_AXES, SHARD)
+        assert rs.factors == tuple(reversed(ag.factors))
+        assert [s.link.name for s in rs.stages] == \
+            [s.link.name for s in reversed(ag.stages)]
+        # OpTree order: AG slow-first (payload grows), RS slow-last
+        assert ag.stages[0].link.name == "dcn"
+        assert rs.stages[-1].link.name == "dcn"
+
+    def test_rs_total_time_equals_ag_total_time(self):
+        # exact duality: mirrored stage costs => identical totals
+        ag = plan_axis_order(POD_AXES, SHARD)
+        rs = plan_reduce_scatter_order(POD_AXES, SHARD)
+        assert rs.total_time_s == pytest.approx(ag.total_time_s, rel=1e-12)
+
+    def test_rs_stagewise_mirror(self):
+        ag = plan_axis_order(POD_AXES, SHARD)
+        rs = plan_reduce_scatter_order(POD_AXES, SHARD)
+        for s_rs, s_ag in zip(rs.stages, reversed(ag.stages)):
+            assert s_rs.time_s == pytest.approx(s_ag.time_s, rel=1e-12)
+
+    def test_three_axes(self):
+        axes = [(2, DCN_LINK), (4, ICI_LINK), (8, ICI_LINK)]
+        ag = plan_axis_order(axes, SHARD)
+        rs = plan_reduce_scatter_order(axes, SHARD)
+        assert rs.factors == tuple(reversed(ag.factors))
+
+    def test_all_reduce_shares_one_plan(self):
+        ar = plan_all_reduce(POD_AXES, SHARD)
+        assert ar.all_gather.factors == \
+            tuple(reversed(ar.reduce_scatter.factors))
+        assert ar.total_time_s == pytest.approx(
+            ar.reduce_scatter.total_time_s + ar.all_gather.total_time_s
+        )
+
+    def test_all_reduce_single_shared_chunk_count(self):
+        # the chunk decision models ONE 2k-stage pipeline (what
+        # staged_all_reduce executes), never split per half
+        ar = plan_all_reduce(POD_AXES, SHARD, max_chunks=8)
+        assert ar.num_chunks >= 1
+        assert ar.pipelined_time_s <= ar.total_time_s * (1 + 1e-9)
+        assert plan_all_reduce(POD_AXES, SHARD, max_chunks=1).num_chunks == 1
+
+
+class TestChunking:
+    def test_makespan_formula(self):
+        assert pipeline_makespan([1.0, 2.0, 3.0], 1) == pytest.approx(6.0)
+        # C chunks: fill (sum) + (C-1) paced by the slowest stage
+        assert pipeline_makespan([1.0, 2.0, 3.0], 4) == pytest.approx(6.0 + 9.0)
+
+    def test_bandwidth_bound_prefers_chunks(self):
+        # huge payload, negligible alpha: pipelining must win
+        link = LinkSpec("fat", 1e9, 1e-9)
+        axes_f = [4, 4]
+        c, t = choose_num_chunks(axes_f, [link, link], 64 * 2**20, max_chunks=8)
+        assert c > 1
+        t1 = pipeline_makespan(
+            [s.time_s for s in plan_axis_order(
+                [(4, link), (4, link)], 64 * 2**20, max_chunks=1).stages], 1)
+        assert t < t1
+
+    def test_alpha_bound_prefers_no_chunks(self):
+        # tiny payload, huge alpha: chunking only multiplies latency
+        link = LinkSpec("lag", 1e12, 1e-3)
+        c, _ = choose_num_chunks([4, 4], [link, link], 1024, max_chunks=8)
+        assert c == 1
+
+    def test_plan_carries_chunk_decision(self):
+        plan = plan_axis_order(POD_AXES, SHARD, max_chunks=8)
+        assert plan.num_chunks >= 1
+        assert plan.pipelined_time_s is not None
+        assert plan.pipelined_time_s <= plan.total_time_s * (1 + 1e-9)
+
+    def test_max_chunks_one_is_unpipelined(self):
+        plan = plan_axis_order(POD_AXES, SHARD, max_chunks=1)
+        assert plan.num_chunks == 1
+        assert plan.pipelined_time_s == pytest.approx(plan.total_time_s)

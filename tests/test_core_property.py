@@ -1,6 +1,11 @@
 """Property-based tests (hypothesis) for the scheduling invariants."""
 import math
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -50,8 +50,9 @@ class TestOptimizer:
 
         from repro.optim import opt_state_specs
 
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.compat import make_mesh
+
+        mesh = make_mesh((1, 1), ("data", "model"))
         pspecs = {"a": P(None, "model"), "b": P("model", None)}
         shapes = {"a": jax.ShapeDtypeStruct((8, 4), jnp.float32),
                   "b": jax.ShapeDtypeStruct((4, 8), jnp.float32)}
