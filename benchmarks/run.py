@@ -11,6 +11,7 @@ cost matters); ``derived`` carries the paper-comparable numbers.
   schedule_level — transmission-level schedules vs closed forms (small N)
   planner — TPU-adaptation: staged-plan times vs flat/ring on the v5e model
   collectives — staged-RS/AR plans (all-gather duals) + chunked-overlap decision
+  perhop  — hop-schedule mode decisions + collective-matmul fusion model
   duality — optics-model step counts for RS/AR vs the all-gather numbers
   roofline — §Roofline table from runs/dryrun (skips if absent)
 """
@@ -37,8 +38,11 @@ from repro.core import steps as S  # noqa: E402
 from repro.core.planner import (  # noqa: E402
     DCN_LINK,
     ICI_LINK,
+    choose_hop_schedule,
+    matmul_block_time,
     plan_all_reduce,
     plan_axis_order,
+    plan_collective_matmul,
     plan_reduce_scatter_order,
     plan_staged_allgather,
 )
@@ -215,6 +219,41 @@ def collectives():
              f"chunks={ar.num_chunks}")
 
 
+def perhop():
+    """Hop-schedule decisions (one-shot vs chunked vs per-hop ppermute
+    rings) + the collective-matmul fusion model, same LinkSpecs as the
+    ``collectives`` section."""
+    axes = [(2, DCN_LINK), (16, ICI_LINK)]
+    for shard in (64 * 2**10, 1 * 2**20, 8 * 2**20):
+        ag = plan_axis_order(axes, shard)
+        links = [s.link for s in ag.stages]
+        us, hs = _timeit(lambda f=ag.factors, l=links, s=shard:
+                         choose_hop_schedule(f, l, s, collective="ag"))
+        _row(f"perhop/ag_shard{shard//1024}K", us,
+             f"mode={hs.mode};stage_modes={'/'.join(hs.stage_modes)};"
+             f"oneshot_us={hs.oneshot_time_s*1e6:.1f};"
+             f"chunked_us={hs.chunked_time_s*1e6:.1f}(C={hs.num_chunks});"
+             f"perhop_us={hs.perhop_time_s*1e6:.1f};"
+             f"exposed_KB={hs.exposed_bytes/2**10:.0f};"
+             f"hidden_KB={hs.hidden_bytes/2**10:.0f}")
+        us_ar, ar = _timeit(lambda s=shard: choose_hop_schedule(
+            [st.factor for st in reversed(ag.stages)],
+            [st.link for st in reversed(ag.stages)], s, collective="ar"))
+        _row(f"perhop/ar_shard{shard//1024}K", us_ar,
+             f"mode={ar.mode};perhop_us={ar.perhop_time_s*1e6:.1f};"
+             f"oneshot_us={ar.oneshot_time_s*1e6:.1f}")
+    # collective-matmul fusion: v5e-roofline block matmul vs the hop time
+    # (bf16 FFN-entry shapes: rows = per-block tokens, 4096 -> 16384 proj)
+    for rows, tag in ((64, "skinny"), (1024, "wide")):
+        t_blk = matmul_block_time(rows, 4096, 16384)
+        us, fm = _timeit(lambda t=t_blk: plan_collective_matmul(
+            (2, 16), (DCN_LINK, ICI_LINK), rows * 4096 * 2, t))
+        _row(f"perhop/fusion_{tag}", us,
+             f"fuse={fm.fuse};fused_us={fm.fused_time_s*1e6:.1f};"
+             f"unfused_us={fm.unfused_time_s*1e6:.1f};"
+             f"hidden_comm_us={fm.hidden_comm_s*1e6:.1f}")
+
+
 def duality():
     """Paper-model step counts for the reduce-scatter dual + all-reduce
     (optics backend): RS steps equal AG steps by time-reversal symmetry."""
@@ -252,6 +291,7 @@ def main() -> None:
     schedule_level()
     planner()
     collectives()
+    perhop()
     duality()
     roofline()
 

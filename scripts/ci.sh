@@ -2,11 +2,38 @@
 # Tier-1 CI entrypoint: the full suite on CPU with 8 fake host devices for
 # the in-process multi-device tests (the subprocess checks set their own
 # device count).  Mirrors ROADMAP.md "Tier-1 verify".
+#
+#   scripts/ci.sh                  # tier-1 pytest suite
+#   scripts/ci.sh --collectives    # planner/executor microbench smoke run:
+#                                  # all three modes on a 2-axis mesh, small
+#                                  # sizes — fails fast on engine regressions
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--collectives" ]]; then
+    shift
+    out="$(python -m repro.launch.perf --collectives 2,4 --sizes-kb 16,64 \
+           --reps 3 "$@")"
+    echo "$out"
+    # every collective must report all three modes at every size ("$@" may
+    # override --sizes-kb, so require consistent non-zero counts rather
+    # than a hardcoded size total)
+    n_ag=""
+    for coll in ag rs ar; do
+        n="$(grep -c "\[perf/collectives\] $coll .*oneshot=.*chunked=.*perhop=" \
+             <<< "$out" || true)"
+        n_ag="${n_ag:-$n}"
+        if [[ "$n" -lt 1 || "$n" -ne "$n_ag" ]]; then
+            echo "CI FAIL: '$coll' three-mode rows: got $n, want $n_ag >= 1" >&2
+            exit 1
+        fi
+    done
+    echo "CI collectives smoke OK"
+    exit 0
+fi
 
 exec python -m pytest -x -q "$@"

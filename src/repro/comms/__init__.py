@@ -14,6 +14,13 @@ from .staged_collectives import (  # noqa: F401
     staged_reduce_scatter,
     tp_all_reduce,
 )
+from .ring_executor import (  # noqa: F401
+    perhop_all_gather,
+    perhop_all_reduce,
+    perhop_reduce_scatter,
+    ring_all_gather_stage,
+    ring_reduce_scatter_stage,
+)
 from .collectives import (  # noqa: F401
     ring_all_gather,
     neighbor_exchange_all_gather,

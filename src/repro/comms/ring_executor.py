@@ -1,0 +1,250 @@
+"""Per-hop ring executor: double-buffered ppermute schedules for the staged
+engine.
+
+PR 1's staged collectives issue one blocking XLA collective per stage —
+Eq. 3's ``(d/B + a)·S`` with every stage a barrier.  This module is the
+execution layer below that granularity: each stage runs as an explicit ring
+of ``ppermute`` hops, structured so the block received at hop t is
+*forwarded* at hop t+1 while its local copy (all-gather) or local
+reduce/add (reduce-scatter) runs concurrently — the double-buffering that
+``core.planner.perhop_stage_time`` models (α amortized across in-flight
+hops, only the longer of the serialization/launch chains exposed).
+
+Every executor composes stage-by-stage exactly like the staged primitives in
+``staged_collectives.py`` (stacking form + one local fix-up for AG; one
+local block permutation for RS), so any planner stage order is supported and
+the results are bit-identical to the XLA one-shot collectives (all-reduce:
+identical up to reduction order).  ``stage_modes`` lets the planner pick the
+executor per stage: ``"ring"`` (per-hop ppermute) where the overlap model
+wins, ``"oneshot"`` (the blocking XLA collective) where a stage is too small
+to pipeline — see ``core.planner.choose_hop_schedule``.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..compat import axis_size
+from .staged_collectives import (
+    _ag_finalize,
+    _axis_sizes,
+    _check_order,
+    _permute_blocks_to_order,
+)
+
+__all__ = [
+    "ring_all_gather_stage",
+    "ring_reduce_scatter_stage",
+    "perhop_all_gather",
+    "perhop_reduce_scatter",
+    "perhop_all_reduce",
+]
+
+
+def _ring_perm(m: int) -> List[Tuple[int, int]]:
+    return [(i, (i + 1) % m) for i in range(m)]
+
+
+def _store(buf: jax.Array, piece: jax.Array, slot) -> jax.Array:
+    return lax.dynamic_update_slice(
+        buf, piece[None], (slot,) + (0,) * piece.ndim
+    )
+
+
+def ring_all_gather_stage(x: jax.Array, name: str) -> jax.Array:
+    """One ring all-gather stage in stacking form: equals
+    ``lax.all_gather(x, name, axis=0, tiled=False)``.
+
+    m-1 ppermute hops, double-buffered: the block received at hop t is
+    forwarded at hop t+1 while only being *referenced* locally (pieces are
+    collected in arrival order — origin ``idx - t``), so nothing serializes
+    against the sends.  One flip+roll at the end rotates arrival order into
+    origin order — a single local copy instead of m buffer updates.
+    """
+    m = axis_size(name)
+    if m == 1:
+        return x[None]
+    idx = lax.axis_index(name)
+    perm = _ring_perm(m)
+    pieces = [x]  # arrival order: origin idx, idx-1, ..., idx-(m-1)
+    for t in range(1, m):
+        pieces.append(lax.ppermute(pieces[-1], name, perm))
+    # arrival[t] holds origin (idx - t) mod m; flipping gives origin
+    # (idx + 1 + j) mod m at slot j, and rolling by idx+1 lands origin j
+    # at slot j — the all_gather stacking order
+    stacked = jnp.flip(jnp.stack(pieces, axis=0), axis=0)
+    return jnp.roll(stacked, idx + 1, axis=0)
+
+
+def ring_reduce_scatter_stage(
+    y: jax.Array, name: str, *, block_fn=None
+) -> jax.Array:
+    """One ring reduce-scatter stage: equals ``lax.psum_scatter(y, name,
+    scatter_dimension=0, tiled=True)`` up to reduction order (exact for
+    exactly-representable sums).
+
+    The accumulator for block b travels the ring b+1 → ... → b, gaining one
+    local contribution per hop; the local block's slice+add for hop t runs
+    while hop t's ppermute is in flight.
+
+    ``block_fn(b)`` overrides the local-contribution provider (default: the
+    b-th of m contiguous slices of ``y``) — the collective-matmul fusion
+    plugs in a just-in-time block matmul here.
+    """
+    m = axis_size(name)
+    if m == 1:
+        return y if block_fn is None else block_fn(0)
+    if block_fn is None:
+        if y.shape[0] % m:
+            raise ValueError(
+                f"length {y.shape[0]} not divisible by ring size {m}"
+            )
+        blk = y.shape[0] // m
+
+        def block_fn(b):
+            return lax.dynamic_slice_in_dim(y, b * blk, blk, axis=0)
+
+    idx = lax.axis_index(name)
+    perm = _ring_perm(m)
+    acc = block_fn((idx - 1) % m)  # own contribution to the departing block
+    for s in range(1, m):
+        recv = lax.ppermute(acc, name, perm)
+        acc = recv + block_fn((idx - s - 1) % m)
+    return acc
+
+
+def _resolve_modes(
+    stage_modes: Optional[Sequence[str]], k: int
+) -> Tuple[str, ...]:
+    if stage_modes is None:
+        return ("ring",) * k
+    modes = tuple(stage_modes)
+    if len(modes) != k or any(m not in ("ring", "oneshot") for m in modes):
+        raise ValueError(
+            f"stage_modes must be {k} of 'ring'|'oneshot', got {modes}"
+        )
+    return modes
+
+
+def _merge_device_axis(y: jax.Array, axis: int) -> jax.Array:
+    """Fold a leading (N,) device-block axis into local axis ``axis``."""
+    if axis == 0:
+        return y.reshape((y.shape[0] * y.shape[1],) + y.shape[2:])
+    y = jnp.moveaxis(y, 0, axis)
+    pre = y.shape[:axis]
+    return y.reshape(pre + (y.shape[axis] * y.shape[axis + 1],) + y.shape[axis + 2:])
+
+
+def perhop_all_gather(
+    x: jax.Array,
+    axis_names: Sequence[str],
+    *,
+    stage_order: Optional[Sequence[str]] = None,
+    axis: int = 0,
+    stage_modes: Optional[Sequence[str]] = None,
+) -> jax.Array:
+    """Per-hop staged all-gather inside shard_map: bit-identical to
+    ``lax.all_gather(x, tuple(axis_names), axis=axis, tiled=True)``.
+
+    Stages run in ``stage_order`` (default major-first, the paper order),
+    each as a double-buffered ppermute ring (or the blocking XLA collective
+    where ``stage_modes`` says ``"oneshot"``); the stacked stage axes are
+    collapsed to canonical device order by one local transpose at the end.
+    """
+    axis_names = tuple(axis_names)
+    order = (
+        _check_order(stage_order, axis_names)
+        if stage_order is not None
+        else axis_names
+    )
+    modes = _resolve_modes(stage_modes, len(order))
+
+    if axis < 0:
+        axis += x.ndim
+    y = x
+    for name, mode in zip(order, modes):
+        if mode == "ring":
+            y = ring_all_gather_stage(y, name)
+        else:
+            y = lax.all_gather(y, name, axis=0, tiled=False)
+    y = _ag_finalize(y, axis_names, order)  # (N, *x.shape)
+    return _merge_device_axis(y, axis)
+
+
+def perhop_reduce_scatter(
+    x: jax.Array,
+    axis_names: Sequence[str],
+    *,
+    stage_order: Optional[Sequence[str]] = None,
+    axis: int = 0,
+    stage_modes: Optional[Sequence[str]] = None,
+) -> jax.Array:
+    """Per-hop staged reduce-scatter: equals ``lax.psum_scatter(x,
+    tuple(axis_names), scatter_dimension=axis, tiled=True)`` (bit-identical
+    for exactly-representable sums; ring stages reduce in ring order).
+
+    Default stage order is the paper-optimal reverse (slow axes last, on the
+    smallest payload); any order composes via the same local pre-permutation
+    ``staged_reduce_scatter`` uses.
+    """
+    axis_names = tuple(axis_names)
+    order = (
+        _check_order(stage_order, axis_names)
+        if stage_order is not None
+        else tuple(reversed(axis_names))
+    )
+    modes = _resolve_modes(stage_modes, len(order))
+    sizes = _axis_sizes(axis_names)
+
+    if axis < 0:
+        axis += x.ndim
+    y = jnp.moveaxis(x, axis, 0) if axis != 0 else x
+    n_total = math.prod(sizes.values())
+    if y.shape[0] % n_total:
+        raise ValueError(
+            f"axis length {y.shape[0]} not divisible by devices {n_total}"
+        )
+    if order != axis_names:
+        y = _permute_blocks_to_order(y, axis_names, order, sizes)
+    for name, mode in zip(order, modes):
+        if mode == "ring":
+            y = ring_reduce_scatter_stage(y, name)
+        else:
+            y = lax.psum_scatter(y, name, scatter_dimension=0, tiled=True)
+    return jnp.moveaxis(y, 0, axis) if axis != 0 else y
+
+
+def perhop_all_reduce(
+    x: jax.Array,
+    axis_names: Sequence[str],
+    *,
+    rs_order: Optional[Sequence[str]] = None,
+    axis: int = 0,
+    stage_modes: Optional[Sequence[str]] = None,
+) -> jax.Array:
+    """Per-hop staged all-reduce: RS then AG sharing one plan (the AG stage
+    order is the reverse of the RS order).  Equals ``lax.psum(x,
+    tuple(axis_names))`` up to reduction order.
+
+    ``stage_modes`` covers the full 2k-stage chain (RS stages then AG
+    stages), matching ``choose_hop_schedule(..., collective="ar")``.
+    """
+    axis_names = tuple(axis_names)
+    order = (
+        _check_order(rs_order, axis_names)
+        if rs_order is not None
+        else tuple(reversed(axis_names))
+    )
+    k = len(axis_names)
+    modes = _resolve_modes(stage_modes, 2 * k)
+    y = perhop_reduce_scatter(
+        x, axis_names, stage_order=order, axis=axis, stage_modes=modes[:k]
+    )
+    return perhop_all_gather(
+        y, axis_names, stage_order=tuple(reversed(order)), axis=axis,
+        stage_modes=modes[k:],
+    )

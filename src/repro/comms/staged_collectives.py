@@ -39,7 +39,9 @@ from ..compat import axis_size, shard_map
 from ..core.planner import (
     AllGatherPlan,
     AllReducePlan,
+    HopSchedule,
     LinkSpec,
+    choose_hop_schedule,
     plan_all_reduce,
     plan_axis_order,
     plan_reduce_scatter_order,
@@ -297,7 +299,12 @@ def tp_all_reduce(
 
 @dataclass(frozen=True)
 class CollectiveOrders:
-    """Planner output for one (mesh axes, payload) point."""
+    """Planner output for one (mesh axes, payload) point.
+
+    ``*_sched`` carry the execution-mode decision (one-shot stage barriers
+    vs chunked wavefront vs per-hop ppermute rings) from
+    ``core.planner.choose_hop_schedule``; the AR schedule spans the full
+    2k-stage RS+AG chain."""
 
     ag_order: Tuple[str, ...]
     rs_order: Tuple[str, ...]
@@ -307,6 +314,9 @@ class CollectiveOrders:
     ag_plan: AllGatherPlan
     rs_plan: AllGatherPlan
     ar_plan: AllReducePlan
+    ag_sched: HopSchedule
+    rs_sched: HopSchedule
+    ar_sched: HopSchedule
 
 
 def plan_stage_orders(
@@ -317,8 +327,8 @@ def plan_stage_orders(
     links: Optional[Dict[str, LinkSpec]] = None,
     max_chunks: int = 8,
 ) -> CollectiveOrders:
-    """Cost-model stage orders + chunking for all primitives over
-    ``axis_names``.  ``shard_bytes`` is the per-device payload at the
+    """Cost-model stage orders + chunking + hop schedules for all primitives
+    over ``axis_names``.  ``shard_bytes`` is the per-device payload at the
     scattered end (AG input / RS output)."""
     axis_names = tuple(axis_names)
     sizes = {n: mesh.shape[n] for n in axis_names}
@@ -326,6 +336,8 @@ def plan_stage_orders(
     ag_plan = plan_axis_order(axes, shard_bytes, max_chunks=max_chunks)
     rs_plan = plan_reduce_scatter_order(axes, shard_bytes, max_chunks=max_chunks)
     ar_plan = plan_all_reduce(axes, shard_bytes, max_chunks=max_chunks)
+    ag_links = [s.link for s in ag_plan.stages]
+    rs_links = [s.link for s in rs_plan.stages]
     return CollectiveOrders(
         ag_order=names_for_plan(ag_plan, axis_names, sizes, links),
         rs_order=names_for_plan(rs_plan, axis_names, sizes, links),
@@ -335,6 +347,15 @@ def plan_stage_orders(
         ag_plan=ag_plan,
         rs_plan=rs_plan,
         ar_plan=ar_plan,
+        ag_sched=choose_hop_schedule(
+            ag_plan.factors, ag_links, shard_bytes,
+            max_chunks=max_chunks, collective="ag"),
+        rs_sched=choose_hop_schedule(
+            rs_plan.factors, rs_links, shard_bytes,
+            max_chunks=max_chunks, collective="rs"),
+        ar_sched=choose_hop_schedule(
+            rs_plan.factors, rs_links, shard_bytes,
+            max_chunks=max_chunks, collective="ar"),
     )
 
 
@@ -393,15 +414,36 @@ class StagedCollectiveEngine:
             fn, mesh=self.mesh, in_specs=in_spec, out_specs=out_spec
         )(x)
 
-    def all_gather(self, x: jax.Array, *, axis: int = 0) -> jax.Array:
-        """x sharded over ``axis_names`` along ``axis`` -> replicated."""
+    @staticmethod
+    def _mode(sched: HopSchedule, override: Optional[str]) -> str:
+        if override is None:
+            return sched.mode
+        if override not in ("oneshot", "chunked", "perhop"):
+            raise ValueError(f"mode must be oneshot|chunked|perhop, got {override!r}")
+        return override
+
+    def all_gather(
+        self, x: jax.Array, *, axis: int = 0, mode: Optional[str] = None
+    ) -> jax.Array:
+        """x sharded over ``axis_names`` along ``axis`` -> replicated.
+
+        ``mode`` overrides the planned execution mode (``oneshot`` /
+        ``chunked`` / ``perhop``); default follows the hop schedule."""
         orders = self.plan(x)
         names = self.axis_names
         shard_len = x.shape[axis] // self.n_devices
         chunks = fit_chunks(shard_len, 1, orders.ag_chunks)
+        m = self._mode(orders.ag_sched, mode)
 
         def fn(y):
-            if chunks > 1:
+            if m == "perhop":
+                from .ring_executor import perhop_all_gather
+
+                return perhop_all_gather(
+                    y, names, stage_order=orders.ag_order, axis=axis,
+                    stage_modes=orders.ag_sched.stage_modes,
+                )
+            if m == "chunked" and chunks > 1:
                 return staged_all_gather_chunked(
                     y, names, stage_order=orders.ag_order, axis=axis,
                     num_chunks=chunks,
@@ -414,32 +456,52 @@ class StagedCollectiveEngine:
         spec[axis] = names
         return self._run(fn, x, P(*spec), P())
 
-    def reduce_scatter(self, x: jax.Array, *, axis: int = 0) -> jax.Array:
+    def reduce_scatter(
+        self, x: jax.Array, *, axis: int = 0, mode: Optional[str] = None
+    ) -> jax.Array:
         """x replicated -> summed and scattered over ``axis_names``."""
         orders = self.plan(x)
         names = self.axis_names
         chunks = fit_chunks(x.shape[axis], self.n_devices, orders.rs_chunks)
+        m = self._mode(orders.rs_sched, mode)
 
         def fn(y):
+            if m == "perhop":
+                from .ring_executor import perhop_reduce_scatter
+
+                return perhop_reduce_scatter(
+                    y, names, stage_order=orders.rs_order, axis=axis,
+                    stage_modes=orders.rs_sched.stage_modes,
+                )
             return staged_reduce_scatter(
                 y, names, stage_order=orders.rs_order, axis=axis,
-                num_chunks=chunks,
+                num_chunks=chunks if m == "chunked" else 1,
             )
 
         spec = [None] * x.ndim
         spec[axis] = names
         return self._run(fn, x, P(), P(*spec))
 
-    def all_reduce(self, x: jax.Array, *, axis: int = 0) -> jax.Array:
+    def all_reduce(
+        self, x: jax.Array, *, axis: int = 0, mode: Optional[str] = None
+    ) -> jax.Array:
         """x replicated -> psum over ``axis_names`` (device count factor)."""
         orders = self.plan(x)
         names = self.axis_names
         chunks = fit_chunks(x.shape[axis], self.n_devices, orders.ar_chunks)
+        m = self._mode(orders.ar_sched, mode)
 
         def fn(y):
+            if m == "perhop":
+                from .ring_executor import perhop_all_reduce
+
+                return perhop_all_reduce(
+                    y, names, rs_order=orders.rs_order, axis=axis,
+                    stage_modes=orders.ar_sched.stage_modes,
+                )
             return staged_all_reduce(
                 y, names, rs_order=orders.rs_order, axis=axis,
-                num_chunks=chunks,
+                num_chunks=chunks if m == "chunked" else 1,
             )
 
         return self._run(fn, x, P(), P())

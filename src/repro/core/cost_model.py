@@ -13,7 +13,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, replace
 
-__all__ = ["OpticalSystem", "TERARACK", "step_time", "eq3_time", "allgather_time"]
+__all__ = ["OpticalSystem", "TERARACK", "step_time", "eq3_time", "allgather_time",
+           "eq3_overlap_time", "exposed_hidden_bytes"]
 
 
 @dataclass(frozen=True)
@@ -63,3 +64,40 @@ def allgather_time(
 ) -> float:
     """All-gather wall time when every node contributes ``message_bytes``."""
     return eq3_time(sys, message_bytes, steps, detailed=detailed)
+
+
+def eq3_overlap_time(
+    sys: OpticalSystem, d_bytes: float, steps: int, *, detailed: bool = False
+) -> float:
+    """Per-hop overlapped variant of Eq. (3).
+
+    With double-buffered hops the fixed per-step overhead ``a`` of step t+1
+    (MRR reconfiguration / launch) runs while step t's payload is still
+    serializing, so only the longer of the two chains is exposed:
+
+        T = max(S·d/B + a,  S·a + d/B)
+
+    Bandwidth-bound steps hide all but one ``a``; latency-bound steps hide
+    all but one serialization.  Eq. (3) itself, ``(d/B + a)·S``, is the
+    no-overlap upper bound.
+    """
+    serial = d_bytes * 8 / sys.bandwidth_per_wavelength
+    a = sys.mrr_reconfig_s + (sys.oeo_delay_s(d_bytes) if detailed else 0.0)
+    return max(steps * serial + a, steps * a + serial)
+
+
+def exposed_hidden_bytes(
+    sys: OpticalSystem, d_bytes: float, steps: int
+) -> tuple:
+    """(exposed, hidden) byte split for ``steps`` overlapped hops of size d.
+
+    Bandwidth-bound (d/B >= a): every byte's serialization is on the critical
+    path — all S·d bytes exposed, the overlap hides the per-step ``a``s.
+    Latency-bound: the ``a`` chain paces the pipeline and all but one
+    payload's serialization hides under it.
+    """
+    serial = d_bytes * 8 / sys.bandwidth_per_wavelength
+    total = steps * d_bytes
+    if serial >= sys.mrr_reconfig_s:
+        return float(total), 0.0
+    return float(d_bytes), float(total - d_bytes)

@@ -27,13 +27,17 @@ import math
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
+from .cost_model import TERARACK
 from .tree import balanced_factors
 
 __all__ = ["LinkSpec", "StagePlan", "AllGatherPlan", "AllReducePlan",
+           "HopSchedule", "FusedMatmulPlan",
            "plan_staged_allgather", "plan_axis_order",
            "plan_reduce_scatter_order", "plan_all_reduce",
            "pipeline_makespan", "choose_num_chunks",
-           "ICI_LINK", "DCN_LINK"]
+           "perhop_stage_time", "choose_hop_schedule",
+           "plan_collective_matmul", "matmul_block_time",
+           "ICI_LINK", "DCN_LINK", "MXU_PEAK_FLOPS"]
 
 
 @dataclass(frozen=True)
@@ -48,6 +52,8 @@ class LinkSpec:
 # TPU v5e-flavoured defaults (see roofline constants in launch/roofline.py):
 ICI_LINK = LinkSpec("ici", 50e9, 1e-6)
 DCN_LINK = LinkSpec("dcn", 6.25e9, 1e-5)  # ~50 Gbit/s/host-link class transport
+
+MXU_PEAK_FLOPS = 197e12  # v5e bf16 peak (launch/roofline.py HW model)
 
 
 @dataclass(frozen=True)
@@ -182,12 +188,24 @@ def pipeline_makespan(stage_times: Sequence[float], num_chunks: int) -> float:
     return sum(stage_times) + (num_chunks - 1) * max(stage_times)
 
 
-def _best_chunks(times_for_c, max_chunks: int) -> Tuple[int, float]:
+def _best_chunks(
+    times_for_c, max_chunks: int, *, shard_bytes: Optional[float] = None,
+    packet_bytes: int = TERARACK.packet_bytes,
+) -> Tuple[int, float]:
     """Scan power-of-two chunk counts, minimizing the pipelined makespan of
-    whatever stage chain ``times_for_c(c)`` describes."""
+    whatever stage chain ``times_for_c(c)`` describes.
+
+    Chunk counts whose per-chunk payload would drop below one packet
+    (``packet_bytes``) are never considered: below that the linear d/B model
+    is a lie — transfers are packet-quantized, so the modeled win would not
+    materialize and chunking can only add launch overhead.  C=1 is always a
+    candidate, so the returned makespan never exceeds the unchunked time.
+    """
     best_c, best_t = 1, math.inf
     c = 1
     while c <= max_chunks:
+        if c > 1 and shard_bytes is not None and shard_bytes / c < packet_bytes:
+            break  # payload per chunk under one packet; larger C only worse
         t = pipeline_makespan(times_for_c(c), c)
         if t < best_t:
             best_c, best_t = c, t
@@ -202,12 +220,16 @@ def choose_num_chunks(
     *,
     max_chunks: int = 8,
     collective: str = "ag",
+    packet_bytes: int = TERARACK.packet_bytes,
 ) -> Tuple[int, float]:
     """Pick C minimizing the pipelined makespan (alpha/bandwidth trade-off:
-    chunking amortizes bandwidth across stages but multiplies alpha)."""
+    chunking amortizes bandwidth across stages but multiplies alpha).  C is
+    clamped so one chunk never carries less than ``packet_bytes``."""
     return _best_chunks(
         lambda c: _chunked_stage_times(factors, links, shard_bytes, c, collective),
         max_chunks,
+        shard_bytes=shard_bytes,
+        packet_bytes=packet_bytes,
     )
 
 
@@ -295,8 +317,260 @@ def plan_all_reduce(
             + _chunked_stage_times(ag_factors, ag_links, shard_bytes, c, "ag")
         ),
         max_chunks,
+        shard_bytes=shard_bytes,
     )
     return AllReducePlan(
         reduce_scatter=rs, all_gather=ag, num_chunks=best_c,
         pipelined_time_s=best_t,
+    )
+
+
+# --------------------------------------------------------------------------
+# per-hop overlapped execution (double-buffered ppermute rings)
+# --------------------------------------------------------------------------
+
+def perhop_stage_time(factor: int, payload: float, link: LinkSpec) -> float:
+    """Exposed time of a double-buffered ring stage over ``factor``
+    participants with per-hop payload ``payload``.
+
+    The ring executor forwards the block received at hop t while its local
+    copy/reduce (and the next hop's launch) run concurrently, so per hop only
+    the longer of {serialization chain, launch chain} is exposed:
+
+        T = max((f-1)·p/B + α,  (f-1)·α + p/B)
+
+    This is the TPU-mesh analogue of ``cost_model.eq3_overlap_time`` — α is
+    amortized across in-flight hops when the stage is bandwidth-bound.  The
+    barrier model ``_stage_time`` = (f-1)·(α + p/B) is its upper bound.
+    """
+    if factor <= 1:
+        return 0.0
+    hops = factor - 1
+    serial = payload / link.bandwidth_bytes
+    return max(hops * serial + link.alpha_s, hops * link.alpha_s + serial)
+
+
+def _stage_exposure(factor: int, payload: float, link: LinkSpec) -> Tuple[float, float]:
+    """(exposed, hidden) bytes for one overlapped ring stage (see
+    ``cost_model.exposed_hidden_bytes``): bandwidth-bound stages expose every
+    moved byte and hide the αs; latency-bound stages hide all but one hop's
+    payload under the α chain."""
+    if factor <= 1:
+        return 0.0, 0.0
+    moved = (factor - 1) * payload
+    if payload / link.bandwidth_bytes >= link.alpha_s:
+        return float(moved), 0.0
+    return float(payload), float(moved - payload)
+
+
+@dataclass(frozen=True)
+class HopSchedule:
+    """Planner decision for HOW a staged collective executes.
+
+      * ``oneshot``  — one blocking XLA collective per stage (PR-1 engine);
+      * ``chunked``  — C-chunk wavefront over whole-stage collectives;
+      * ``perhop``   — double-buffered ppermute rings (comms/ring_executor),
+                       per-stage selectable via ``stage_modes`` ("ring" where
+                       the overlap model wins, "oneshot" where a stage is too
+                       small for hop pipelining to matter, e.g. factor 2).
+
+    All three modeled times come from the same ``LinkSpec``s;
+    ``stage_exposed_bytes``/``stage_hidden_bytes`` carry the per-stage
+    exposed-vs-hidden byte accounting of the per-hop mode.
+    """
+
+    mode: str
+    stage_modes: Tuple[str, ...]
+    num_chunks: int
+    oneshot_time_s: float
+    chunked_time_s: float
+    perhop_time_s: float
+    stage_exposed_bytes: Tuple[float, ...]
+    stage_hidden_bytes: Tuple[float, ...]
+
+    @property
+    def time_s(self) -> float:
+        return {"oneshot": self.oneshot_time_s, "chunked": self.chunked_time_s,
+                "perhop": self.perhop_time_s}[self.mode]
+
+    @property
+    def exposed_bytes(self) -> float:
+        return sum(self.stage_exposed_bytes)
+
+    @property
+    def hidden_bytes(self) -> float:
+        return sum(self.stage_hidden_bytes)
+
+
+def _stage_chain(
+    factors: Sequence[int], links: Sequence[LinkSpec], shard_bytes: float,
+    collective: str,
+) -> List[StagePlan]:
+    """The (factor, link, payload) chain a collective actually executes:
+    AG/RS stages, or the RS half followed by the reversed AG half for AR."""
+    if collective == "ag":
+        return list(_plan_for_factors(factors, links, shard_bytes).stages)
+    if collective == "rs":
+        return list(_rs_plan_for_factors(factors, links, shard_bytes).stages)
+    if collective == "ar":
+        rs = _rs_plan_for_factors(factors, links, shard_bytes).stages
+        ag = _plan_for_factors(
+            [s.factor for s in reversed(rs)], [s.link for s in reversed(rs)],
+            shard_bytes,
+        ).stages
+        return list(rs) + list(ag)
+    raise ValueError(f"collective must be ag|rs|ar, got {collective!r}")
+
+
+def choose_hop_schedule(
+    factors: Sequence[int],
+    links: Sequence[LinkSpec],
+    shard_bytes: float,
+    *,
+    max_chunks: int = 8,
+    collective: str = "ag",
+    packet_bytes: int = TERARACK.packet_bytes,
+) -> HopSchedule:
+    """Pick one-shot vs chunked-wavefront vs per-hop execution for a staged
+    collective, all from the same ``LinkSpec``s.
+
+    ``factors``/``links`` are the planned *stage order* (``plan_axis_order``
+    / ``plan_reduce_scatter_order`` output); ``shard_bytes`` is the
+    scattered-end payload, as everywhere in this module.  For ``ar`` the
+    modeled chain is the full 2k-stage RS+AG pipeline.
+    """
+    stages = _stage_chain(factors, links, shard_bytes, collective)
+
+    oneshot = sum(s.time_s for s in stages)
+
+    if collective == "ar":
+        num_chunks, chunked = _best_chunks(
+            lambda c: [
+                t.time_s
+                for t in _stage_chain(factors, links, shard_bytes / c, collective)
+            ],
+            max_chunks, shard_bytes=shard_bytes, packet_bytes=packet_bytes,
+        )
+    else:
+        num_chunks, chunked = choose_num_chunks(
+            factors, links, shard_bytes, max_chunks=max_chunks,
+            collective=collective, packet_bytes=packet_bytes,
+        )
+
+    perhop = 0.0
+    stage_modes: List[str] = []
+    exposed: List[float] = []
+    hidden: List[float] = []
+    for s in stages:
+        t_barrier = s.time_s
+        t_ring = perhop_stage_time(s.factor, s.payload_bytes, s.link)
+        # a 2-participant stage has a single hop — nothing to pipeline; keep
+        # the XLA collective (stage_mode "oneshot") and its barrier cost
+        if s.factor > 2 and t_ring < t_barrier:
+            stage_modes.append("ring")
+            perhop += t_ring
+            e, h = _stage_exposure(s.factor, s.payload_bytes, s.link)
+        else:
+            stage_modes.append("oneshot")
+            perhop += t_barrier
+            e, h = (s.factor - 1) * s.payload_bytes, 0.0
+        exposed.append(e)
+        hidden.append(h)
+
+    mode = min(
+        (("oneshot", oneshot), ("chunked", chunked), ("perhop", perhop)),
+        key=lambda kv: kv[1],
+    )[0]
+    if mode == "chunked" and num_chunks == 1:
+        mode = "oneshot"
+    return HopSchedule(
+        mode=mode,
+        stage_modes=tuple(stage_modes),
+        num_chunks=num_chunks,
+        oneshot_time_s=oneshot,
+        chunked_time_s=chunked,
+        perhop_time_s=perhop,
+        stage_exposed_bytes=tuple(exposed),
+        stage_hidden_bytes=tuple(hidden),
+    )
+
+
+# --------------------------------------------------------------------------
+# collective-matmul fusion (gather/compute overlap)
+# --------------------------------------------------------------------------
+
+def matmul_block_time(
+    rows: int, inner: int, cols: int, *, peak_flops: float = MXU_PEAK_FLOPS
+) -> float:
+    """Roofline time for one (rows × inner) @ (inner × cols) block matmul."""
+    return 2.0 * rows * inner * cols / peak_flops
+
+
+@dataclass(frozen=True)
+class FusedMatmulPlan:
+    """Fuse-or-not decision for all-gather→matmul / matmul→reduce-scatter.
+
+    ``fused_time_s`` models the per-hop schedule where each gathered (or
+    about-to-be-scattered) block's matmul runs while the next hop is in
+    flight; ``unfused_time_s`` is the blocking collective followed (or
+    preceded) by one full matmul.  ``hidden_comm_s`` is the transfer time the
+    fused schedule hides behind compute.
+    """
+
+    fuse: bool
+    fused_time_s: float
+    unfused_time_s: float
+    hidden_comm_s: float
+
+
+def plan_collective_matmul(
+    factors: Sequence[int],
+    links: Sequence[LinkSpec],
+    shard_bytes: float,
+    block_compute_s: float,
+    *,
+    kernel_alpha_s: float = 2e-6,
+) -> FusedMatmulPlan:
+    """Decide whether to decompose a gather-adjacent matmul per hop.
+
+    ``block_compute_s`` is the matmul time for ONE device block (the
+    scattered shard's worth of rows); ``kernel_alpha_s`` is the per-block
+    launch/efficiency penalty of running N skinny matmuls instead of one wide
+    one — the only force that can make fusion lose under this model.
+
+    Fused schedule over the AG stage chain (payload and blocks-per-hop grow
+    stage by stage): each hop's transfer runs concurrently with the matmul of
+    the blocks the *previous* hop delivered, so a stage costs
+    ``(f-1)·max(hop, blocks·t_blk)`` and only the final delivery's matmul is
+    exposed.  Applies symmetrically to the reduce-scatter dual (just-in-time
+    block matmuls feeding the ring).
+    """
+    t_blk = block_compute_s + kernel_alpha_s
+    n = math.prod(factors)
+
+    payload = float(shard_bytes)
+    blocks = 1  # device blocks carried per hop at this stage
+    fused = block_compute_s  # local block's matmul (overlaps the first send)
+    comm = 0.0
+    exposed_comm = 0.0
+    trailing_blocks = 0  # per-hop block count of the last stage with hops
+    for f, link in zip(factors, links):
+        if f <= 1:
+            continue
+        hop = link.alpha_s + payload / link.bandwidth_bytes
+        fused += (f - 1) * max(hop, blocks * t_blk)
+        comm += (f - 1) * hop
+        exposed_comm += (f - 1) * max(0.0, hop - blocks * t_blk)
+        trailing_blocks = blocks
+        payload *= f
+        blocks *= f
+    # the last hop's delivery is multiplied after the wire goes quiet
+    fused += trailing_blocks * t_blk
+
+    unfused = comm + n * block_compute_s
+    return FusedMatmulPlan(
+        fuse=fused < unfused,
+        fused_time_s=fused,
+        unfused_time_s=unfused,
+        hidden_comm_s=comm - exposed_comm,
     )

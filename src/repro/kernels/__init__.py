@@ -7,6 +7,7 @@ WKV6 recurrence.  Each has a pure-jnp oracle in ``ref.py`` and is validated
 in interpret mode over shape/dtype sweeps in tests/test_kernels.py.
 """
 from . import ops, ref  # noqa: F401
+from .collective_matmul import allgather_matmul, matmul_reduce_scatter  # noqa: F401
 from .flash_attention import flash_attention_pallas  # noqa: F401
 from .rmsnorm import rmsnorm_pallas  # noqa: F401
 from .rwkv6_scan import rwkv6_scan_pallas  # noqa: F401

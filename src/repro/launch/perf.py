@@ -1,6 +1,8 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# (must precede jax import — same rule as dryrun.py)
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# (must precede jax import — same rule as dryrun.py; setdefault so CI can
+# run the --collectives smoke on its own 8-device setting)
 
 DOC = """Perf hillclimb driver (§Perf): re-lower one cell under a set of
 named override variants and report the three roofline terms per variant.
@@ -14,10 +16,12 @@ loss_chunk / kv_shard / dtype / moe capacity).
 
   python -m repro.launch.perf --collectives 2,4 --sizes-kb 64,1024
 
-runs the staged-collective microbenchmarks instead: modeled staged
-AG/RS/AR times (incl. the chunked-overlap decision) vs the flat
-single-shot model, plus measured wall-clock on a fake-device mesh of the
-given factorization vs the XLA one-shot collectives.
+runs the staged-collective microbenchmarks instead: modeled AND measured
+time for each execution mode (one-shot stage barriers / chunked wavefront /
+per-hop ppermute rings) per AG/RS/AR per size, plus the XLA flat one-shot
+baseline, on a fake-device mesh of the given factorization.  Add
+--calibrate to instead fit per-axis LinkSpec alpha/bandwidth from the
+measured sweep (least squares; printed as JSON).
 """
 
 import argparse
@@ -97,21 +101,11 @@ def run_variant(arch, shape, name, overrides, out_dir):
     return row
 
 
-def collectives_bench(factors_csv: str, sizes_kb_csv: str) -> None:
-    """Staged-RS/AR/AG microbenchmarks vs the XLA single-shot baselines."""
-    import time
-
-    import jax
-    import jax.numpy as jnp
+def _bench_setup(factors_csv: str):
     import numpy as np
-    from jax.sharding import NamedSharding, PartitionSpec as P
 
-    from repro.compat import shard_map
     from repro.comms import StagedCollectiveEngine, make_factorized_mesh
-    from repro.core.planner import (
-        DCN_LINK, ICI_LINK, plan_all_reduce, plan_axis_order,
-        plan_reduce_scatter_order,
-    )
+    from repro.core.planner import DCN_LINK, ICI_LINK
 
     try:
         factors = [int(x) for x in factors_csv.split(",")]
@@ -126,60 +120,151 @@ def collectives_bench(factors_csv: str, sizes_kb_csv: str) -> None:
     link_map = {names[i]: (DCN_LINK if i == 0 and len(factors) > 1 else ICI_LINK)
                 for i in range(len(factors))}
     eng = StagedCollectiveEngine(mesh, names, links=link_map)
-    links = [(f, link_map[names[i]]) for i, f in enumerate(factors)]
+    return factors, names, n, mesh, link_map, eng
 
-    def timed(fn, x, reps=10):
-        fn(x).block_until_ready()  # compile
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            out = fn(x)
-        out.block_until_ready()
-        return (time.perf_counter() - t0) / reps * 1e6
+
+def _timed(fn, x, reps=10):
+    import time
+
+    fn(x).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(x)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def collectives_bench(factors_csv: str, sizes_kb_csv: str, reps: int = 10) -> None:
+    """Staged-collective microbenchmarks: modeled AND measured time for all
+    three execution modes (one-shot stage barriers / chunked wavefront /
+    per-hop ppermute rings) per collective per size, vs the XLA flat
+    single-shot baseline."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.comms.staged_collectives import plan_stage_orders
+
+    factors, names, n, mesh, link_map, eng = _bench_setup(factors_csv)
 
     for kb in (int(s) for s in sizes_kb_csv.split(",")):
         rows = kb * 256 // n * n  # f32 rows, divisible by the device count
         shard_bytes = rows * 4 / n
-        ag_plan = plan_axis_order(links, shard_bytes)
-        rs_plan = plan_reduce_scatter_order(links, shard_bytes)
-        ar_plan = plan_all_reduce(links, shard_bytes)
+        orders = plan_stage_orders(mesh, names, shard_bytes, links=link_map)
         x = jnp.arange(rows, dtype=jnp.float32)
         xs = jax.device_put(x, NamedSharding(mesh, P(tuple(names))))
 
-        flat_ar = shard_map(
-            lambda y: jax.lax.psum(y, tuple(names)), mesh=mesh,
-            in_specs=P(), out_specs=P(),
-        )
-        flat_rs = shard_map(
-            lambda y: jax.lax.psum_scatter(
-                y, tuple(names), scatter_dimension=0, tiled=True),
-            mesh=mesh, in_specs=P(), out_specs=P(tuple(names)),
-        )
-        flat_ag = shard_map(
-            lambda y: jax.lax.all_gather(y, tuple(names), axis=0, tiled=True),
-            mesh=mesh, in_specs=P(tuple(names)), out_specs=P(),
-        )
-        # jit the engine entry points so reps measure execution, not tracing
-        meas = {
-            "ag": (timed(jax.jit(eng.all_gather), xs), timed(jax.jit(flat_ag), xs)),
-            "rs": (timed(jax.jit(eng.reduce_scatter), x), timed(jax.jit(flat_rs), x)),
-            "ar": (timed(jax.jit(eng.all_reduce), x), timed(jax.jit(flat_ar), x)),
+        flat = {
+            "ar": shard_map(
+                lambda y: jax.lax.psum(y, tuple(names)), mesh=mesh,
+                in_specs=P(), out_specs=P()),
+            "rs": shard_map(
+                lambda y: jax.lax.psum_scatter(
+                    y, tuple(names), scatter_dimension=0, tiled=True),
+                mesh=mesh, in_specs=P(), out_specs=P(tuple(names))),
+            "ag": shard_map(
+                lambda y: jax.lax.all_gather(y, tuple(names), axis=0, tiled=True),
+                mesh=mesh, in_specs=P(tuple(names)), out_specs=P()),
         }
-        model = {
-            "ag": (ag_plan.pipelined_time_s or ag_plan.total_time_s,
-                   ag_plan.num_chunks),
-            "rs": (rs_plan.pipelined_time_s or rs_plan.total_time_s,
-                   rs_plan.num_chunks),
-            "ar": (ar_plan.pipelined_time_s, ar_plan.num_chunks),
-        }
+        entry = {"ag": (eng.all_gather, xs), "rs": (eng.reduce_scatter, x),
+                 "ar": (eng.all_reduce, x)}
+        scheds = {"ag": orders.ag_sched, "rs": orders.rs_sched,
+                  "ar": orders.ar_sched}
+
         for coll in ("ag", "rs", "ar"):
-            staged_us, flat_us = meas[coll]
-            t_model, chunks = model[coll]
+            fn, arg = entry[coll]
+            sched = scheds[coll]
+            modeled = {"oneshot": sched.oneshot_time_s,
+                       "chunked": sched.chunked_time_s,
+                       "perhop": sched.perhop_time_s}
+            # jit per mode so reps measure execution, not tracing
+            measured = {
+                m: _timed(jax.jit(lambda y, m=m, fn=fn: fn(y, mode=m)), arg,
+                          reps)
+                for m in ("oneshot", "chunked", "perhop")
+            }
+            flat_us = _timed(jax.jit(flat[coll]), arg, reps)
+            parts = " ".join(
+                f"{m}={modeled[m]*1e6:.1f}/{measured[m]:.0f}us"
+                for m in ("oneshot", "chunked", "perhop"))
             print(f"[perf/collectives] {coll} {kb}KB mesh={factors} "
-                  f"modeled={t_model*1e6:.1f}us chunks={chunks} "
-                  f"staged_wallclock={staged_us:.0f}us "
-                  f"xla_oneshot_wallclock={flat_us:.0f}us "
+                  f"modeled/measured: {parts} "
+                  f"xla_oneshot={flat_us:.0f}us "
+                  f"chosen={sched.mode} chunks={sched.num_chunks} "
+                  f"stage_modes={list(sched.stage_modes)} "
+                  f"exposed={sched.exposed_bytes/2**10:.0f}KB "
+                  f"hidden={sched.hidden_bytes/2**10:.0f}KB "
                   f"(wall-clock on fake host devices; modeled times are the "
                   f"decision signal)")
+
+
+def calibrate_links(factors_csv: str, sizes_kb_csv: str, reps: int = 10) -> None:
+    """Fit per-axis LinkSpec alpha/bandwidth from measured wall-clock.
+
+    For each mesh axis, times the flat XLA all-gather over that axis alone
+    across the ``--sizes-kb`` sweep, then least-squares the staged model
+    ``t = steps·α + steps·shard/B`` over (steps, steps·shard) — replacing the
+    hard-coded v5e constants with what this host actually does.  Prints the
+    fitted specs as JSON, ready to paste into a ``links=`` map.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    factors, names, n, mesh, link_map, _ = _bench_setup(factors_csv)
+    sizes_kb = [int(s) for s in sizes_kb_csv.split(",")]
+    if len(sizes_kb) < 2:
+        raise SystemExit("--calibrate needs >= 2 sizes in --sizes-kb to fit "
+                         "alpha and bandwidth")
+
+    fitted = {}
+    for i, name in enumerate(names):
+        m = factors[i]
+        if m == 1:
+            continue
+        steps = m - 1
+        rows_a, rhs = [], []
+        ag = shard_map(
+            lambda y, name=name: jax.lax.all_gather(y, name, axis=0, tiled=True),
+            mesh=mesh, in_specs=P(name), out_specs=P(),
+        )
+        for kb in sizes_kb:
+            rows = kb * 256 // m * m
+            shard = rows * 4 / m
+            x = jax.device_put(
+                jnp.arange(rows, dtype=jnp.float32),
+                NamedSharding(mesh, P(name)),
+            )
+            t = _timed(jax.jit(ag), x, reps) * 1e-6
+            rows_a.append([steps, steps * shard])
+            rhs.append(t)
+        sol, *_ = np.linalg.lstsq(np.asarray(rows_a), np.asarray(rhs),
+                                  rcond=None)
+        alpha = max(0.0, float(sol[0]))
+        inv_b = float(sol[1])
+        # a non-positive slope means wall-clock didn't grow with payload over
+        # this sweep (launch/barrier cost dominates, e.g. fake host devices):
+        # bandwidth is unidentifiable — report null rather than a fake number
+        bandwidth = (1.0 / inv_b) if inv_b > 1e-18 else None
+        fitted[name] = {
+            "name": name,
+            "bandwidth_bytes": bandwidth,
+            "alpha_s": alpha,
+            "hardcoded": {
+                "bandwidth_bytes": link_map[name].bandwidth_bytes,
+                "alpha_s": link_map[name].alpha_s,
+            },
+        }
+        if bandwidth is None:
+            fitted[name]["note"] = (
+                "no measurable size dependence over this sweep "
+                "(alpha-dominated); widen --sizes-kb to identify bandwidth"
+            )
+    print(json.dumps({"mesh": factors, "fitted_links": fitted}, indent=2))
 
 
 def main():
@@ -188,6 +273,12 @@ def main():
     ap.add_argument("--collectives", default=None, metavar="F1,F2",
                     help="run staged-collective microbenchmarks on this "
                          "mesh factorization instead of the hillclimb")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="with --collectives: fit LinkSpec alpha/bandwidth "
+                         "per mesh axis from measured wall-clock (printed "
+                         "as JSON) instead of benchmarking")
+    ap.add_argument("--reps", type=int, default=10,
+                    help="timing repetitions for --collectives/--calibrate")
     ap.add_argument("--sizes-kb", default="64,1024")
     ap.add_argument("--shape")
     ap.add_argument("--variants", default="baseline")
@@ -199,7 +290,10 @@ def main():
     args = ap.parse_args()
 
     if args.collectives:
-        collectives_bench(args.collectives, args.sizes_kb)
+        if args.calibrate:
+            calibrate_links(args.collectives, args.sizes_kb, args.reps)
+        else:
+            collectives_bench(args.collectives, args.sizes_kb, args.reps)
         return
     if not args.arch:
         ap.error("--arch is required unless --collectives is given")

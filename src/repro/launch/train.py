@@ -25,7 +25,28 @@ from repro.data import DataConfig, SyntheticLMPipeline
 from repro.models import init_params, loss_fn
 from repro.models import sharding as shd
 from repro.optim import OptimizerConfig, adamw_init, adamw_update, opt_state_specs
+from repro.optim.zero1 import zero1_shard_grads, zero1_unshard_params
 from repro.checkpoint import Checkpointer
+
+
+def modeled_pod_traffic_note(grad_bytes: float, mesh) -> str:
+    """Modeled per-device pod(DCN)-axis gradient-sync traffic per step.
+
+    Spec-based path: GSPMD's flat all-reduce over all data axes moves the
+    full gradient over every axis, pod included — 2·G·(pod-1)/pod per device
+    (RS+AG halves of the ring).  Explicit ZeRO-1 path
+    (``zero1_shard_grads``): the pod axis is reduced on the already
+    data-scattered shard, so it carries only G/data of that.
+    """
+    pod = mesh.shape.get("pod", 1)
+    if pod == 1:
+        return "pod-axis traffic: n/a (no pod axis in this mesh)"
+    data = mesh.shape["data"]
+    spec_mb = 2 * grad_bytes * (pod - 1) / pod / 2**20
+    expl_mb = spec_mb / data
+    return (f"modeled pod-axis traffic/device: spec={spec_mb:.2f}MiB/step "
+            f"explicit={expl_mb:.2f}MiB/step ({data:.0f}x less: pod reduces "
+            f"the data-scattered shard)")
 
 
 def main():
@@ -39,6 +60,13 @@ def main():
                     help="smoke-scale config (CPU)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
     ap.add_argument("--ckpt-interval", type=int, default=50)
+    ap.add_argument("--zero1", choices=["spec", "explicit"], default="spec",
+                    help="gradient sync: 'spec' lets GSPMD emit the "
+                         "collectives from the ZeRO-1 sharding specs; "
+                         "'explicit' runs the staged shard_map path "
+                         "(zero1_shard_grads: reduce-scatter over data, pod "
+                         "reduced on the scattered shard, staged re-gather). "
+                         "Explicit is the pure-DP path (model axis must be 1).")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -54,7 +82,14 @@ def main():
     mesh = compat.make_mesh(dims, names)
     print(f"mesh={dict(mesh.shape)} devices={len(jax.devices())}")
 
-    shd.set_activation_policy({"dp": shd.dp_axes(mesh), "tp": "model",
+    explicit = args.zero1 == "explicit"
+    if explicit and mesh.shape.get("model", 1) != 1:
+        raise SystemExit("--zero1 explicit is the pure-DP shard_map path; "
+                         "use a mesh with model axis 1")
+    # explicit mode runs the model inside shard_map (manual axes): GSPMD
+    # activation constraints don't apply there
+    shd.set_activation_policy(None if explicit else
+                              {"dp": shd.dp_axes(mesh), "tp": "model",
                                "sequence_parallel": not args.reduced})
 
     params = init_params(jax.random.key(0), cfg)
@@ -63,22 +98,60 @@ def main():
     ospecs = shd.sanitize_tree(
         opt_state_specs(pspecs, params, mesh), opt_state, mesh
     )
-    params = jax.device_put(params, shd.named(mesh, pspecs))
-    opt_state = jax.device_put(opt_state, shd.named(mesh, ospecs))
+    if explicit:
+        params = jax.device_put(params, NamedSharding(mesh, P()))
+        opt_state = jax.device_put(opt_state, NamedSharding(mesh, P()))
+    else:
+        params = jax.device_put(params, shd.named(mesh, pspecs))
+        opt_state = jax.device_put(opt_state, shd.named(mesh, ospecs))
 
     opt_cfg = OptimizerConfig(warmup_steps=min(20, args.steps // 5 + 1),
                               decay_steps=args.steps)
 
-    bspec = NamedSharding(mesh, P(shd.dp_axes(mesh), None)) \
-        if batch % np.prod([mesh.shape[a] for a in shd.dp_axes(mesh)]) == 0 \
+    dp = shd.dp_axes(mesh)
+    dp_divides = batch % np.prod([mesh.shape[a] for a in dp]) == 0
+    bspec = NamedSharding(mesh, P(dp, None)) if dp_divides \
         else NamedSharding(mesh, P())
 
-    @jax.jit
-    def train_step(params, opt_state, batch):
-        (_, metrics), grads = jax.value_and_grad(
-            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
-        new_p, new_o = adamw_update(grads, opt_state, params, opt_cfg)
-        return new_p, new_o, metrics["loss"]
+    if explicit:
+        if not dp_divides:
+            raise SystemExit(f"--zero1 explicit needs batch {batch} divisible "
+                             f"by the data axes {dp}")
+        fast = ("data",)
+        slow = ("pod",) if "pod" in mesh.shape else ()
+        ndp = int(np.prod([mesh.shape[a] for a in fast + slow]))
+
+        def explicit_step(params, opt_state, batch):
+            # local grads on the local batch shard; the global mean-loss
+            # gradient is (1/ndp)·Σ_ranks local, realized by the staged
+            # reduce-scatter below (pod only ever sees the scattered shard)
+            (_, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+            grads = jax.tree.map(lambda g: g / ndp, grads)
+            grads = zero1_shard_grads(grads, fast, slow)
+            grads = zero1_unshard_params(grads, fast, reference=params)
+            new_p, new_o = adamw_update(grads, opt_state, params, opt_cfg)
+            loss = jax.lax.psum(metrics["loss"], fast + slow) / ndp
+            return new_p, new_o, loss
+
+        train_step = jax.jit(compat.shard_map(
+            explicit_step, mesh=mesh,
+            in_specs=(P(), P(), P(dp, None)),
+            out_specs=(P(), P(), P()),
+        ))
+        grad_bytes = sum(l.size * l.dtype.itemsize
+                         for l in jax.tree.leaves(params))
+        traffic_note = modeled_pod_traffic_note(grad_bytes, mesh)
+        print(f"[train/zero1-explicit] {traffic_note}")
+    else:
+        traffic_note = ""
+
+        @jax.jit
+        def train_step(params, opt_state, batch):
+            (_, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+            new_p, new_o = adamw_update(grads, opt_state, params, opt_cfg)
+            return new_p, new_o, metrics["loss"]
 
     pipe = SyntheticLMPipeline(DataConfig(
         vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch)).start()
@@ -95,8 +168,9 @@ def main():
             if step % 10 == 0 or step == args.steps - 1:
                 lv = float(loss)
                 loss0 = lv if loss0 is None else loss0
+                extra = f" [{traffic_note}]" if traffic_note else ""
                 print(f"step {step:5d} loss {lv:.4f} "
-                      f"({(time.time()-t0)/(step+1):.2f}s/step)")
+                      f"({(time.time()-t0)/(step+1):.2f}s/step){extra}")
             if step and step % args.ckpt_interval == 0:
                 ckpt.save(step, {"params": params, "opt": opt_state},
                           blocking=False)

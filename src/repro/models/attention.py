@@ -12,12 +12,13 @@ from typing import Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..comms.staged_collectives import tp_all_reduce
+from ..comms.staged_collectives import staged_reduce_scatter, tp_all_reduce
 from ..configs.base import ModelConfig
 from ..kernels import ops
+from ..kernels.collective_matmul import matmul_reduce_scatter
 from .layers import apply_rope, dense, dense_init, rmsnorm, rmsnorm_init
 
-__all__ = ["attn_init", "attention", "attention_tp_out"]
+__all__ = ["attn_init", "attention", "attention_tp_out", "attention_tp_out_sp"]
 
 
 def attn_init(key, cfg: ModelConfig, *, dtype) -> Dict:
@@ -100,3 +101,48 @@ def attention_tp_out(
     """
     partial = dense(p["wo"], out_local)
     return tp_all_reduce(partial, axis_names, num_chunks=num_chunks)
+
+
+def attention_tp_out_sp(
+    p: Dict,
+    out_local: jax.Array,  # (B, S, local_q_dim) — this shard's heads
+    axis_names: Sequence[str],
+    *,
+    seq_axis: int = 1,
+    fuse: object = "auto",
+    links: Optional[Dict] = None,
+) -> jax.Array:
+    """Sequence-parallel TP output projection (inside shard_map).
+
+    Like ``attention_tp_out`` but combining back to *sequence shards* (the
+    SP residual-stream layout): ``psum_scatter(out_local @ wo)`` over
+    ``axis_names`` along ``seq_axis``.  When ``fuse`` (default: the planner's
+    overlap model), the wo matmul is decomposed per sequence block so each
+    block feeds its reduce-scatter hop just-in-time — the combine's transfer
+    time hides behind the MXU.  A wo bias, if present, is added once to the
+    scattered output (never into the partial sums).
+    """
+    import math
+
+    from ..compat import axis_size
+    from .mlp import plan_tp_fusion
+
+    axis_names = tuple(axis_names)
+    w = p["wo"]["w"]
+    rows = out_local.size // out_local.shape[-1]
+    n_total = math.prod(axis_size(n) for n in axis_names)
+
+    if fuse == "auto":
+        fuse = plan_tp_fusion(
+            axis_names, max(1, rows // n_total), w.shape[0], w.shape[1],
+            out_local.dtype.itemsize, links=links,
+        )
+
+    if fuse:
+        out = matmul_reduce_scatter(out_local, w, axis_names, axis=seq_axis)
+    else:
+        partial = jnp.einsum("...d,df->...f", out_local, w)
+        out = staged_reduce_scatter(partial, axis_names, axis=seq_axis)
+    if "b" in p["wo"]:
+        out = out + p["wo"]["b"]
+    return out

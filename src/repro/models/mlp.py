@@ -7,17 +7,22 @@ execution, combining the row-parallel partial sums with the staged
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from ..comms.staged_collectives import tp_all_reduce
+from ..compat import axis_size
+from ..comms.staged_allgather import link_for_axis, staged_all_gather
+from ..comms.staged_collectives import staged_reduce_scatter, tp_all_reduce
 from ..configs.base import ModelConfig
+from ..core.planner import matmul_block_time, plan_collective_matmul
 from ..kernels import ops
+from ..kernels.collective_matmul import allgather_matmul, matmul_reduce_scatter
 from .layers import dense, dense_init
 
-__all__ = ["mlp_init", "mlp", "ffn_init", "ffn_apply", "ffn_apply_tp"]
+__all__ = ["mlp_init", "mlp", "ffn_init", "ffn_apply", "ffn_apply_tp",
+           "ffn_apply_tp_sp", "plan_tp_fusion"]
 
 
 def ffn_init(key, d_model: int, d_ff: int, num_layers: int, *, dtype,
@@ -65,6 +70,82 @@ def ffn_apply_tp(
     """
     partial = ffn_apply(p, x)
     return tp_all_reduce(partial, axis_names, num_chunks=num_chunks)
+
+
+def plan_tp_fusion(
+    axis_names: Sequence[str],
+    rows: int,
+    d_in: int,
+    d_out: int,
+    itemsize: int,
+    *,
+    links: Optional[Dict] = None,
+    n_matmuls: int = 1,
+) -> bool:
+    """Collective-matmul fuse decision for one gather-adjacent projection.
+
+    ``rows`` is the per-block row count (the scattered shard's worth),
+    ``d_in @ d_out`` the projection, ``n_matmuls`` how many projections share
+    one gather (SwiGLU gate+up = 2).  Static per trace — shapes and mesh axis
+    sizes are known at trace time, so the planner runs inside shard_map.
+    """
+    axis_names = tuple(axis_names)
+    factors = [axis_size(n) for n in axis_names]
+    lks = [link_for_axis(n, links) for n in axis_names]
+    shard_bytes = rows * d_in * itemsize
+    t_blk = n_matmuls * matmul_block_time(rows, d_in, d_out)
+    return plan_collective_matmul(factors, lks, shard_bytes, t_blk).fuse
+
+
+def ffn_apply_tp_sp(
+    p: Dict,
+    x: jax.Array,
+    axis_names: Sequence[str],
+    *,
+    seq_axis: int = 1,
+    fuse: object = "auto",
+    links: Optional[Dict] = None,
+) -> jax.Array:
+    """Sequence-parallel explicit-TP FFN body (inside shard_map).
+
+    ``x`` arrives *sequence-sharded* over ``axis_names`` (the usual SP
+    residual-stream layout); ``p`` holds this shard's d_ff slice as in
+    ``ffn_apply_tp``.  The TP all-gather of ``x`` and the gate/up matmuls are
+    fused — each gathered sequence block is projected the hop it lands — and
+    the down-projection is decomposed per output block so it feeds the
+    reduce-scatter back to sequence shards just-in-time
+    (``kernels.collective_matmul``).  Returns this shard's sequence slice of
+    the combined FFN output.
+
+    ``fuse``: True / False / ``"auto"`` — auto asks
+    ``core.planner.plan_collective_matmul`` whether the overlap model
+    predicts a win for this (shape, mesh) point.
+    """
+    axis_names = tuple(axis_names)
+    up_w = p["up"]["w"]
+    d_model, d_ff_local = up_w.shape
+    rows = x.size // x.shape[-1]  # per-block rows = local batch*seq product
+
+    if fuse == "auto":
+        fuse = plan_tp_fusion(
+            axis_names, rows, d_model, d_ff_local, x.dtype.itemsize,
+            links=links, n_matmuls=2 if "gate" in p else 1,
+        )
+
+    if not fuse:
+        xg = staged_all_gather(x, axis_names, axis=seq_axis)
+        partial = ffn_apply(p, xg)
+        return staged_reduce_scatter(partial, axis_names, axis=seq_axis)
+
+    if "gate" in p:
+        _, (g, u) = allgather_matmul(
+            x, (p["gate"]["w"], up_w), axis_names, axis=seq_axis
+        )
+        h = ops.swiglu(g, u)
+    else:
+        _, u = allgather_matmul(x, up_w, axis_names, axis=seq_axis)
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    return matmul_reduce_scatter(h, p["down"]["w"], axis_names, axis=seq_axis)
 
 
 def mlp_init(key, cfg: ModelConfig, *, dtype) -> Dict:

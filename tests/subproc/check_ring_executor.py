@@ -1,0 +1,240 @@
+"""Multi-device correctness checks for the per-hop ring executor and the
+collective-matmul fusion — run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count={8,16}
+(tests/test_ring_executor.py drives both device counts).
+
+Contracts (ISSUE 2):
+  * perhop AG / RS are BIT-identical to the XLA one-shot collective for
+    every stage order, stage-mode mix, and mesh factorization — including
+    non-power-of-two factorizations ([2,3], [3,4]).
+  * perhop AR and the fused collective-matmuls are allclose (ring reduction
+    order); with integer-valued inputs the sums are exact, so we check
+    bit-equality there too.
+"""
+import math
+import os
+
+assert "xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", ""), (
+    "run me via tests/test_ring_executor.py"
+)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.comms import (
+    StagedCollectiveEngine,
+    make_factorized_mesh,
+    perhop_all_gather,
+    perhop_all_reduce,
+    perhop_reduce_scatter,
+)
+from repro.kernels.collective_matmul import allgather_matmul, matmul_reduce_scatter
+
+N_DEV = len(jax.devices())
+rng = np.random.default_rng(0)
+checks = []
+
+
+def check(name, got, want, atol=0.0, exact=False):
+    got = np.asarray(got)
+    want = np.asarray(want)
+    ok = got.shape == want.shape and (
+        np.array_equal(got, want) if exact else np.allclose(got, want, atol=atol)
+    )
+    checks.append((name, ok))
+    if not ok:
+        print(f"FAIL {name}: shapes {got.shape} vs {want.shape}")
+        print(" got ", got.ravel()[:8])
+        print(" want", want.ravel()[:8])
+
+
+def shmap(fn, mesh, in_specs, out_specs):
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+# factorizations to exercise per device budget (incl. non-power-of-two);
+# the flagged mesh gets the full order x stage-mode matrix, the rest the
+# minimal set (compile time on fake devices is the budget)
+CASES = {
+    8: [([8], ["r"], False), ([2, 4], ["a", "b"], True),
+        ([2, 2, 2], ["a", "b", "c"], False), ([2, 3], ["a", "b"], False)],
+    16: [([16], ["r"], False), ([4, 4], ["a", "b"], True),
+         ([3, 4], ["a", "b"], False)],
+}[N_DEV]
+
+for factors, names, full in CASES:
+    n = math.prod(factors)
+    mesh = make_factorized_mesh(factors, names)
+    tag = "x".join(map(str, factors))
+    names_t = tuple(names)
+    k = len(names)
+
+    # ---- all-gather: bit-identical, stage orders x stage-mode mixes ------
+    x = rng.normal(size=(n * 3, 5)).astype(np.float32)
+    combos = {(names_t, None)}
+    if full:
+        combos |= {
+            (tuple(reversed(names_t)), None),
+            (names_t, ("oneshot",) * k),
+            (names_t, tuple("ring" if i % 2 == 0 else "oneshot"
+                            for i in range(k))),
+        }
+    for order, modes in sorted(combos, key=repr):
+        got = shmap(
+            lambda y, o=order, m=modes: perhop_all_gather(
+                y, names_t, stage_order=o, stage_modes=m),
+            mesh, P(names_t), P(),
+        )(x)
+        check(f"perhop_ag {tag} order={order} modes={modes}", got, x,
+              exact=True)
+
+    # ---- reduce-scatter: bit-identical on integer-valued f32 -------------
+    # (sharded input: the local shard must still divide into n blocks)
+    xi = rng.integers(-8, 8, size=(n * n * 2, 3)).astype(np.float32)
+    want_rs = shmap(
+        lambda y: lax.psum_scatter(y, names_t, scatter_dimension=0, tiled=True),
+        mesh, P(names_t), P(names_t),
+    )(xi)
+    rs_orders = [None, names_t] if full else [None]
+    for order in rs_orders:
+        got = shmap(
+            lambda y, o=order: perhop_reduce_scatter(y, names_t, stage_order=o),
+            mesh, P(names_t), P(names_t),
+        )(xi)
+        check(f"perhop_rs {tag} order={order}", got, want_rs, exact=True)
+    if full:
+        got = shmap(
+            lambda y: perhop_reduce_scatter(
+                y, names_t, stage_modes=("oneshot",) * k),
+            mesh, P(names_t), P(names_t),
+        )(xi)
+        check(f"perhop_rs {tag} oneshot-stages", got, want_rs, exact=True)
+
+    # ---- all-reduce: exact on integer sums, allclose contract ------------
+    want_ar = shmap(
+        lambda y: lax.psum(y, names_t), mesh, P(names_t), P(names_t),
+    )(xi)
+    got = shmap(
+        lambda y: perhop_all_reduce(y, names_t), mesh, P(names_t), P(names_t),
+    )(xi)
+    check(f"perhop_ar {tag}", got, want_ar, exact=True)
+
+    if full:
+        # non-zero gather axis
+        x2 = rng.normal(size=(5, n * 2)).astype(np.float32)
+        got = shmap(
+            lambda y: perhop_all_gather(y, names_t, axis=1),
+            mesh, P(None, names_t), P(None, None),
+        )(x2)
+        check(f"perhop_ag {tag} axis=1", got, x2, exact=True)
+
+        # engine dispatch: planner-driven perhop mode
+        eng = StagedCollectiveEngine(mesh, names_t)
+        check(f"engine perhop ar {tag}",
+              eng.all_reduce(jnp.asarray(xi), mode="perhop"), n * xi,
+              exact=True)
+        xs = jax.device_put(
+            jnp.asarray(xi),
+            jax.sharding.NamedSharding(mesh, P(names_t)),
+        )
+        check(f"engine perhop ag {tag}",
+              eng.all_gather(xs, mode="perhop"), xi, exact=True)
+        check(f"engine perhop rs {tag}",
+              eng.reduce_scatter(jnp.asarray(xi), mode="perhop"),
+              n * xi, exact=True)
+
+    # ---- collective-matmul fusion ----------------------------------------
+    d_in, d_out = 8, 5
+    xm = rng.normal(size=(2, n * 2, d_in)).astype(np.float32)
+    w = rng.normal(size=(d_in, d_out)).astype(np.float32)
+    want_mm = np.einsum("bsd,df->bsf", xm, w)
+    g, got = shmap(
+        lambda y: allgather_matmul(y, w, names_t, axis=1),
+        mesh, P(None, names_t, None), (P(), P()),
+    )(xm)
+    check(f"ag_matmul {tag} gathered", g, xm, exact=True)
+    check(f"ag_matmul {tag} out", got, want_mm, atol=1e-5)
+
+    h = rng.normal(size=(2, n * 2, d_in)).astype(np.float32)
+    want_mmrs = shmap(
+        lambda y: lax.psum_scatter(
+            jnp.einsum("bsd,df->bsf", y, w), names_t,
+            scatter_dimension=1, tiled=True),
+        mesh, P(), P(None, names_t, None),
+    )(h)
+    got = shmap(
+        lambda y: matmul_reduce_scatter(y, w, names_t, axis=1),
+        mesh, P(), P(None, names_t, None),
+    )(h)
+    check(f"matmul_rs {tag}", got, want_mmrs, atol=1e-5)
+
+
+# ---- fused SP FFN vs the unfused explicit-TP path (bf16 tolerances) ------
+from repro.models.mlp import ffn_apply, ffn_apply_tp_sp, ffn_init
+from repro.models.attention import attention_tp_out_sp
+
+factors, names, _ = CASES[1]  # 2-axis mesh
+n = math.prod(factors)
+mesh = make_factorized_mesh(factors, names)
+names_t = tuple(names)
+d_model, d_ff, B = 16, 16 * n, 2
+S = 4 * n
+key = jax.random.key(0)
+pf = ffn_init(key, d_model, d_ff, num_layers=2, dtype=jnp.float32)
+xa = jnp.asarray(rng.normal(size=(B, S, d_model)).astype(np.float32))
+want_ffn = ffn_apply(pf, xa)
+
+
+def tp_sp(x, fuse):
+    idx = lax.axis_index(names_t)
+    lff = d_ff // n
+    p_local = {
+        k: {"w": lax.dynamic_slice_in_dim(
+            pf[k]["w"], idx * lff, lff, axis=(0 if k == "down" else 1))}
+        for k in ("gate", "up", "down")
+    }
+    return ffn_apply_tp_sp(p_local, x, names_t, fuse=fuse)
+
+
+for fuse in (True, False, "auto"):
+    got = shmap(
+        lambda y, f=fuse: tp_sp(y, f),
+        mesh, P(None, names_t, None), P(None, names_t, None),
+    )(xa)
+    check(f"ffn_tp_sp fuse={fuse}", got, want_ffn, atol=3e-5)
+
+q_dim = 2 * n
+wo = jnp.asarray(rng.normal(size=(q_dim, d_model)).astype(np.float32)) * 0.1
+bias = jnp.asarray(rng.normal(size=(d_model,)).astype(np.float32))
+heads_out = jnp.asarray(rng.normal(size=(B, S, q_dim)).astype(np.float32))
+want_attn = heads_out @ wo + bias
+
+
+def attn_sp(x, fuse):
+    idx = lax.axis_index(names_t)
+    lq = q_dim // n
+    lx = lax.dynamic_slice_in_dim(x, idx * lq, lq, axis=2)
+    lw = lax.dynamic_slice_in_dim(wo, idx * lq, lq, axis=0)
+    return attention_tp_out_sp({"wo": {"w": lw, "b": bias}}, lx, names_t,
+                               fuse=fuse)
+
+
+for fuse in (True, False, "auto"):
+    got = shmap(
+        lambda y, f=fuse: attn_sp(y, f),
+        mesh, P(), P(None, names_t, None),
+    )(heads_out)
+    check(f"attn_tp_out_sp fuse={fuse}", got, want_attn, atol=3e-5)
+
+
+# ---- report ---------------------------------------------------------------
+bad = [nm for nm, ok in checks if not ok]
+print(f"{len(checks) - len(bad)}/{len(checks)} ring-executor checks passed "
+      f"({N_DEV} devices)")
+if bad:
+    raise SystemExit(f"FAILED: {bad}")
+print("RING-EXECUTOR-OK")

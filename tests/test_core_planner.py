@@ -98,3 +98,129 @@ class TestChunking:
         plan = plan_axis_order(POD_AXES, SHARD, max_chunks=1)
         assert plan.num_chunks == 1
         assert plan.pipelined_time_s == pytest.approx(plan.total_time_s)
+
+
+class TestPacketClamp:
+    """Regression: tiny messages must never be chunked below one packet
+    (OpticalSystem.packet_bytes) — the linear d/B model breaks down there
+    and modeled wins would not materialize."""
+
+    def test_tiny_message_clamps_chunks(self):
+        from repro.core.cost_model import TERARACK
+
+        # bandwidth-bound link: unclamped, the makespan model would happily
+        # split 256 B into 8 chunks; the packet floor allows at most 2
+        link = LinkSpec("fat", 1e6, 1e-12)
+        c, t = choose_num_chunks([4, 4], [link, link], 256, max_chunks=8)
+        assert c <= 256 // TERARACK.packet_bytes == 2
+        # sanity: same link, ample payload still chunks deep
+        c_big, _ = choose_num_chunks([4, 4], [link, link], 64 * 2**10,
+                                     max_chunks=8)
+        assert c_big == 8
+
+    def test_chunking_never_increases_modeled_time(self):
+        link = LinkSpec("fat", 1e6, 1e-12)
+        for shard in (64, 256, 1024, 64 * 2**10):
+            c, t = choose_num_chunks([4, 4], [link, link], shard, max_chunks=8)
+            _, t1 = choose_num_chunks([4, 4], [link, link], shard, max_chunks=1)
+            assert t <= t1 * (1 + 1e-12)
+
+    def test_sub_packet_payload_stays_unchunked(self):
+        link = LinkSpec("fat", 1e6, 1e-12)
+        c, _ = choose_num_chunks([4, 4], [link, link], 100, max_chunks=8)
+        assert c == 1
+
+
+class TestHopSchedule:
+    def test_perhop_stage_time_is_overlap_max(self):
+        from repro.core.planner import perhop_stage_time
+
+        link = LinkSpec("l", 1e9, 1e-6)
+        p = 1e6  # p/B = 1ms >> alpha: bandwidth-bound
+        t = perhop_stage_time(8, p, link)
+        assert t == pytest.approx(7 * p / 1e9 + 1e-6)
+        # latency-bound: tiny payload
+        t = perhop_stage_time(8, 10.0, link)
+        assert t == pytest.approx(7 * 1e-6 + 10.0 / 1e9)
+        assert perhop_stage_time(1, p, link) == 0.0
+
+    def test_perhop_never_worse_than_oneshot(self):
+        from repro.core.planner import choose_hop_schedule
+
+        for shard in (1024, 64 * 2**10, 8 * 2**20):
+            for coll in ("ag", "rs", "ar"):
+                hs = choose_hop_schedule(
+                    [2, 16], [DCN_LINK, ICI_LINK], shard, collective=coll)
+                assert hs.perhop_time_s <= hs.oneshot_time_s * (1 + 1e-12)
+                assert hs.time_s == min(
+                    hs.oneshot_time_s, hs.chunked_time_s, hs.perhop_time_s)
+
+    def test_factor2_stages_stay_oneshot(self):
+        from repro.core.planner import choose_hop_schedule
+
+        hs = choose_hop_schedule(
+            [2, 16], [DCN_LINK, ICI_LINK], 8 * 2**20, collective="ag")
+        assert hs.stage_modes[0] == "oneshot"  # single hop: nothing to overlap
+        assert hs.stage_modes[1] == "ring"
+
+    def test_ar_schedule_covers_2k_stages(self):
+        from repro.core.planner import choose_hop_schedule
+
+        hs = choose_hop_schedule(
+            [16, 2], [ICI_LINK, DCN_LINK], 1 * 2**20, collective="ar")
+        assert len(hs.stage_modes) == 4
+        assert len(hs.stage_exposed_bytes) == 4
+
+    def test_exposure_accounting(self):
+        from repro.core.planner import choose_hop_schedule
+
+        # bandwidth-bound: every moved byte exposed, alphas hidden
+        hs = choose_hop_schedule([8], [ICI_LINK], 8 * 2**20, collective="ag")
+        assert hs.stage_modes == ("ring",)
+        assert hs.exposed_bytes == pytest.approx(7 * 8 * 2**20)
+        assert hs.hidden_bytes == 0.0
+        # latency-bound: all but one hop's payload hides under the α chain
+        hs = choose_hop_schedule([8], [ICI_LINK], 64, collective="ag")
+        assert hs.exposed_bytes == pytest.approx(64)
+        assert hs.hidden_bytes == pytest.approx(6 * 64)
+
+
+class TestCollectiveMatmulPlan:
+    def test_fusion_wins_when_compute_covers_hops(self):
+        from repro.core.planner import matmul_block_time, plan_collective_matmul
+
+        t_blk = matmul_block_time(1024, 4096, 16384)
+        fm = plan_collective_matmul(
+            (2, 16), (DCN_LINK, ICI_LINK), 1024 * 4096 * 2, t_blk)
+        assert fm.fuse
+        assert fm.fused_time_s < fm.unfused_time_s
+        assert fm.hidden_comm_s > 0
+
+    def test_fusion_loses_under_kernel_alpha(self):
+        from repro.core.planner import plan_collective_matmul
+
+        # negligible compute per block, large per-block launch penalty:
+        # decomposing into N skinny matmuls only adds overhead
+        fm = plan_collective_matmul(
+            (16,), (ICI_LINK,), 1024, 1e-9, kernel_alpha_s=1e-3)
+        assert not fm.fuse
+
+    def test_unfused_is_comm_plus_full_matmul(self):
+        from repro.core.planner import plan_collective_matmul
+
+        t_blk = 1e-5
+        fm = plan_collective_matmul((8,), (ICI_LINK,), 2**20, t_blk)
+        comm = 7 * (ICI_LINK.alpha_s + 2**20 / ICI_LINK.bandwidth_bytes)
+        assert fm.unfused_time_s == pytest.approx(comm + 8 * t_blk)
+
+    def test_trailing_size1_axis_does_not_flip_fusion(self):
+        # regression: a trailing factor-1 axis used to count every block's
+        # matmul as exposed (blocks // factors[-1] with factors[-1] == 1)
+        from repro.core.planner import matmul_block_time, plan_collective_matmul
+
+        t_blk = matmul_block_time(1024, 4096, 16384)
+        base = plan_collective_matmul((8,), (ICI_LINK,), 1024 * 4096 * 2, t_blk)
+        padded = plan_collective_matmul(
+            (8, 1), (ICI_LINK, ICI_LINK), 1024 * 4096 * 2, t_blk)
+        assert padded.fuse == base.fuse
+        assert padded.fused_time_s == pytest.approx(base.fused_time_s)

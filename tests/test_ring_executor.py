@@ -1,0 +1,38 @@
+"""Drive the per-hop ring-executor / collective-matmul checks in
+subprocesses (8 and 16 fake CPU devices) so the main pytest process keeps
+jax at a single device — same pattern as tests/test_comms.py."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run(script: str, devices: int, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = f"{REPO / 'src'}:{env.get('PYTHONPATH', '')}"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "subproc" / script)],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"{script} failed (rc={proc.returncode})\n--- stdout ---\n"
+            f"{proc.stdout}\n--- stderr ---\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("devices", [8, 16])
+def test_ring_executor_multi_device(devices):
+    out = _run("check_ring_executor.py", devices)
+    assert "RING-EXECUTOR-OK" in out
