@@ -12,7 +12,10 @@ cost matters); ``derived`` carries the paper-comparable numbers.
   planner — TPU-adaptation: staged-plan times vs flat/ring on the v5e model
   collectives — staged-RS/AR plans (all-gather duals) + chunked-overlap decision
   perhop  — hop-schedule mode decisions + collective-matmul fusion model
+  ir      — unified CollectivePlan IR: one engine plan priced electrical +
+            optical and validated in the conflict-checked simulator
   duality — optics-model step counts for RS/AR vs the all-gather numbers
+            (+ per-stage wall-time attribution)
   roofline — §Roofline table from runs/dryrun (skips if absent)
 """
 import sys
@@ -256,7 +259,9 @@ def perhop():
 
 def duality():
     """Paper-model step counts for the reduce-scatter dual + all-reduce
-    (optics backend): RS steps equal AG steps by time-reversal symmetry."""
+    (optics backend): RS steps equal AG steps by time-reversal symmetry.
+    Per-stage attribution (AlgoResult.stage_times_s) shows where the wall
+    time goes — OpTree's slow first stage vs the cheap deep stages."""
     for coll in ("all-gather", "reduce-scatter", "all-reduce"):
         res = compare_algorithms(
             paper.TABLE1_N, paper.TABLE1_W, 4 * 2**20, paper.SYSTEM,
@@ -265,6 +270,46 @@ def duality():
         _row(f"duality/{coll}", 0.0,
              ";".join(f"{k}={v.steps}steps/{v.time_s*1e3:.2f}ms"
                       for k, v in res.items()))
+        ot = res["optree"]
+        _row(f"duality/{coll}/optree_stages", 0.0,
+             f"stage_steps={list(ot.stage_steps)};stage_ms="
+             + "/".join(f"{t*1e3:.2f}" for t in ot.stage_times_s))
+
+
+def ir():
+    """Unified CollectivePlan IR: ONE plan object from the engine planner,
+    priced under both cost worlds (LinkSpec electrical + optical Eq. 3) and
+    validated step-accurately in the conflict-checked simulator."""
+    import dataclasses
+
+    from repro.core import price, schedule_from_ir
+    from repro.core.cost_model import TERARACK
+
+    axes = [(2, DCN_LINK), (16, ICI_LINK)]
+    for coll in ("ag", "rs", "ar"):
+        planner_fn = plan_axis_order if coll == "ag" else plan_reduce_scatter_order
+        for shard in (64 * 2**10, 4 * 2**20):
+            base = planner_fn(axes, shard)
+            links = [s.link for s in base.stages]
+
+            def build(f=base.factors, l=links, s=shard, c=coll):
+                hs = choose_hop_schedule(f, l, s, collective=c)
+                return hs.to_ir()
+
+            us, plan = _timeit(build)
+            elec = price(plan)
+            sys_small = dataclasses.replace(TERARACK, n_nodes=plan.n)
+            opt = price(plan, sys_small)
+            sched = schedule_from_ir(plan, sys_small.wavelengths)
+            rep = simulate(sched, sys_small, plan.shard_bytes)
+            assert abs(rep.time_s - opt.total_s) < 1e-12  # one plan, one price
+            _row(f"ir/{coll}_shard{shard//1024}K", us,
+                 f"mode={plan.mode};factors={list(plan.factors)};"
+                 f"stage_modes={'/'.join(plan.stage_modes)};"
+                 f"elec_us={elec.total_s*1e6:.1f};"
+                 f"optical_us={opt.total_s*1e6:.1f}@{opt.steps}steps;"
+                 f"sim_steps={rep.steps};txs={rep.transmissions};"
+                 f"stage_ms=" + "/".join(f"{t*1e3:.3f}" for t in rep.stage_times_s))
 
 
 def roofline():
@@ -292,6 +337,7 @@ def main() -> None:
     planner()
     collectives()
     perhop()
+    ir()
     duality()
     roofline()
 

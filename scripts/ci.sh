@@ -4,15 +4,61 @@
 # device count).  Mirrors ROADMAP.md "Tier-1 verify".
 #
 #   scripts/ci.sh                  # tier-1 pytest suite
+#   scripts/ci.sh --fast           # fast lane: skip multi-device subprocess
+#                                  # tests (-m "not subproc")
 #   scripts/ci.sh --collectives    # planner/executor microbench smoke run:
 #                                  # all three modes on a 2-axis mesh, small
 #                                  # sizes — fails fast on engine regressions
+#   scripts/ci.sh --ir-smoke       # CollectivePlan IR round trip: engine
+#                                  # plan -> schedule_from_ir -> conflict-
+#                                  # checked simulate, plus the 8-device
+#                                  # IR-interpreting-executor subprocess check
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--fast" ]]; then
+    shift
+    exec python -m pytest -x -q -m "not subproc" "$@"
+fi
+
+if [[ "${1:-}" == "--ir-smoke" ]]; then
+    shift
+    # (1) plan -> schedule -> simulate round trip on the paper side and the
+    # engine side, single process, no devices needed
+    python - <<'PY'
+from repro.core import (DCN_LINK, ICI_LINK, OpTreePlan, TERARACK,
+                        build_optree_schedule, choose_hop_schedule, price,
+                        schedule_from_ir)
+from repro.optics import simulate
+
+ir = OpTreePlan(16, (4, 4)).to_ir(shard_bytes=2**20)
+s = schedule_from_ir(ir, 64)
+ref = build_optree_schedule(OpTreePlan(16, (4, 4)), 64)
+assert s.num_steps == ref.num_steps and len(s.txs) == len(ref.txs)
+simulate(s, TERARACK, ir.shard_bytes, check=True)
+
+for coll in ("ag", "rs", "ar"):
+    hs = choose_hop_schedule([2, 8], [DCN_LINK, ICI_LINK], 2**20,
+                             collective=coll)
+    plan = hs.to_ir()
+    rep = simulate(schedule_from_ir(plan, 64), TERARACK, plan.shard_bytes,
+                   check=True)
+    po = price(plan, TERARACK)
+    assert abs(po.total_s - rep.time_s) < 1e-12, (coll, po.total_s, rep.time_s)
+    pe = price(plan)
+    assert abs(pe.total_s - hs.time_s) / hs.time_s < 1e-12, (coll,)
+print("IR round-trip OK (plan -> schedule -> simulate, priced both worlds)")
+PY
+    # (2) the 8-device subprocess executor check: engine interprets the IR,
+    # outputs bit-identical to XLA, custom_vjp grads match unfused
+    python tests/subproc/check_plan_executor.py
+    echo "CI ir-smoke OK"
+    exit 0
+fi
 
 if [[ "${1:-}" == "--collectives" ]]; then
     shift

@@ -7,8 +7,7 @@ from .staged_allgather import (  # noqa: F401
 )
 from .staged_collectives import (  # noqa: F401
     StagedCollectiveEngine,
-    CollectiveOrders,
-    plan_stage_orders,
+    plan_collectives,
     staged_all_gather_chunked,
     staged_all_reduce,
     staged_reduce_scatter,
@@ -21,6 +20,7 @@ from .ring_executor import (  # noqa: F401
     ring_all_gather_stage,
     ring_reduce_scatter_stage,
 )
+from .plan_executor import execute_plan  # noqa: F401
 from .collectives import (  # noqa: F401
     ring_all_gather,
     neighbor_exchange_all_gather,

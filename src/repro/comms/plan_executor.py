@@ -1,0 +1,115 @@
+"""IR-interpreting executor: run one CollectivePlan inside shard_map.
+
+This is consumer (3) of the unified IR (``core.plan_ir``): the JAX engine
+no longer re-derives stage orders, chunk counts, or per-stage execution
+modes at the callsite — ``execute_plan`` reads them off the plan and maps
+its stage chain onto the shard_map primitives:
+
+  * plan mode ``chunked`` → the ``num_chunks``-chunk wavefront over
+    blocking whole-stage collectives (``staged_collectives``);
+  * otherwise → the staged executors of ``ring_executor`` with one
+    ``stage_modes`` entry per stage: a stage whose effective IR mode is
+    ``perhop`` runs as a double-buffered ppermute ring, the rest as the
+    blocking XLA collective (under plan mode ``oneshot`` every stage is
+    blocking — ``effective_stage_mode``).
+
+Because the same plan object is priced (``core.cost_model.price``), lowered
+to lightpaths (``core.schedule.schedule_from_ir``) and executed here,
+planner decisions and executor behavior cannot drift.  Outputs are
+bit-identical to the XLA one-shot collectives (AG/RS exactly; AR up to
+reduction order) — enforced by ``tests/subproc/check_plan_executor.py``.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+
+from ..core.plan_ir import CollectivePlan, PlanStage, effective_stage_mode
+from .ring_executor import (
+    perhop_all_gather,
+    perhop_reduce_scatter,
+)
+from .staged_collectives import (
+    staged_all_gather_chunked,
+    staged_all_reduce,
+    staged_reduce_scatter,
+)
+
+__all__ = ["execute_plan", "plan_axis_names"]
+
+
+def plan_axis_names(plan: CollectivePlan) -> Tuple[str, ...]:
+    """Canonical (major-first mesh order) axis names the plan gathers over,
+    stamped into ``plan.meta`` by ``comms.staged_collectives.plan_collectives``."""
+    names = plan.meta.get("axis_names")
+    if not names:
+        raise ValueError(
+            "plan has no meta['axis_names']; build engine plans via "
+            "plan_collectives (paper-world plans lower through "
+            "core.schedule.schedule_from_ir instead)"
+        )
+    return tuple(names)
+
+
+def _executor_modes(
+    plan: CollectivePlan, stages: Sequence[PlanStage]
+) -> Tuple[str, ...]:
+    """Per-stage ``ring_executor`` stage_modes ("ring"/"oneshot") for the
+    stages' EFFECTIVE hop structure under the plan-level mode."""
+    return tuple(
+        "ring" if effective_stage_mode(plan, s) == "perhop" else "oneshot"
+        for s in stages
+    )
+
+
+def execute_plan(y: jax.Array, plan: CollectivePlan, *, axis: int = 0) -> jax.Array:
+    """Execute ``plan`` on the local shard ``y`` inside shard_map.
+
+    * ``ag`` — ``y`` is the local shard; returns the full gather (equals
+      ``lax.all_gather(y, names, axis=axis, tiled=True)`` bit for bit).
+    * ``rs`` — ``y`` is the full-length local addend; returns this device's
+      canonical block of the sum (equals ``lax.psum_scatter``).
+    * ``ar`` — returns ``lax.psum(y, names)`` (up to reduction order for
+      per-hop ring stages).
+    """
+    names = plan_axis_names(plan)
+    coll = plan.collective
+    chunked = plan.mode == "chunked" and plan.num_chunks > 1
+
+    if coll == "ag":
+        order = plan.axes
+        if chunked:
+            return staged_all_gather_chunked(
+                y, names, stage_order=order, axis=axis,
+                num_chunks=plan.num_chunks)
+        return perhop_all_gather(
+            y, names, stage_order=order, axis=axis,
+            stage_modes=_executor_modes(plan, plan.stages))
+
+    if coll == "rs":
+        order = plan.axes
+        if chunked:
+            return staged_reduce_scatter(
+                y, names, stage_order=order, axis=axis,
+                num_chunks=plan.num_chunks)
+        return perhop_reduce_scatter(
+            y, names, stage_order=order, axis=axis,
+            stage_modes=_executor_modes(plan, plan.stages))
+
+    if coll == "ar":
+        k = len(plan.stages) // 2
+        rs_stages, ag_stages = plan.stages[:k], plan.stages[k:]
+        rs_order = tuple(st.axis for st in rs_stages)
+        if chunked:
+            return staged_all_reduce(
+                y, names, rs_order=rs_order, axis=axis,
+                num_chunks=plan.num_chunks)
+        y = perhop_reduce_scatter(
+            y, names, stage_order=rs_order, axis=axis,
+            stage_modes=_executor_modes(plan, rs_stages))
+        return perhop_all_gather(
+            y, names, stage_order=tuple(st.axis for st in ag_stages),
+            axis=axis, stage_modes=_executor_modes(plan, ag_stages))
+
+    raise ValueError(f"unknown collective {coll!r}")

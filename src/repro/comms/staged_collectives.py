@@ -27,7 +27,7 @@ orders + chunking from the cost model and wraps shard_map.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -36,13 +36,10 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..compat import axis_size, shard_map
+from ..core.plan_ir import CollectivePlan
 from ..core.planner import (
-    AllGatherPlan,
-    AllReducePlan,
-    HopSchedule,
     LinkSpec,
     choose_hop_schedule,
-    plan_all_reduce,
     plan_axis_order,
     plan_reduce_scatter_order,
 )
@@ -54,8 +51,7 @@ __all__ = [
     "staged_all_gather_chunked",
     "tp_all_reduce",
     "fit_chunks",
-    "CollectiveOrders",
-    "plan_stage_orders",
+    "plan_collectives",
     "StagedCollectiveEngine",
 ]
 
@@ -297,66 +293,53 @@ def tp_all_reduce(
 # planning + user-facing engine
 # --------------------------------------------------------------------------
 
-@dataclass(frozen=True)
-class CollectiveOrders:
-    """Planner output for one (mesh axes, payload) point.
-
-    ``*_sched`` carry the execution-mode decision (one-shot stage barriers
-    vs chunked wavefront vs per-hop ppermute rings) from
-    ``core.planner.choose_hop_schedule``; the AR schedule spans the full
-    2k-stage RS+AG chain."""
-
-    ag_order: Tuple[str, ...]
-    rs_order: Tuple[str, ...]
-    ag_chunks: int
-    rs_chunks: int
-    ar_chunks: int  # shared C for the combined RS+AG pipeline
-    ag_plan: AllGatherPlan
-    rs_plan: AllGatherPlan
-    ar_plan: AllReducePlan
-    ag_sched: HopSchedule
-    rs_sched: HopSchedule
-    ar_sched: HopSchedule
-
-
-def plan_stage_orders(
+def plan_collectives(
     mesh: Mesh,
     axis_names: Sequence[str],
     shard_bytes: float,
     *,
     links: Optional[Dict[str, LinkSpec]] = None,
     max_chunks: int = 8,
-) -> CollectiveOrders:
-    """Cost-model stage orders + chunking + hop schedules for all primitives
-    over ``axis_names``.  ``shard_bytes`` is the per-device payload at the
+) -> Dict[str, CollectivePlan]:
+    """One :class:`~repro.core.plan_ir.CollectivePlan` per collective
+    ("ag" / "rs" / "ar") for this (mesh axes, payload) point.
+
+    Stage orders come from the cost-model planners (slow axis first for AG,
+    last for RS; the AR chain is the RS order followed by its reverse), the
+    execution mode + per-stage hop structure + chunk count from
+    ``core.planner.choose_hop_schedule`` — all carried ON the plan, so the
+    executor (``comms.plan_executor.execute_plan``), the pricer
+    (``core.cost_model.price``) and the optical validator
+    (``core.schedule.schedule_from_ir`` → ``optics.simulator``) consume the
+    same object.  ``shard_bytes`` is the per-device payload at the
     scattered end (AG input / RS output)."""
     axis_names = tuple(axis_names)
     sizes = {n: mesh.shape[n] for n in axis_names}
     axes = [(sizes[n], link_for_axis(n, links)) for n in axis_names]
     ag_plan = plan_axis_order(axes, shard_bytes, max_chunks=max_chunks)
     rs_plan = plan_reduce_scatter_order(axes, shard_bytes, max_chunks=max_chunks)
-    ar_plan = plan_all_reduce(axes, shard_bytes, max_chunks=max_chunks)
+    ag_order = names_for_plan(ag_plan, axis_names, sizes, links)
+    rs_order = names_for_plan(rs_plan, axis_names, sizes, links)
     ag_links = [s.link for s in ag_plan.stages]
     rs_links = [s.link for s in rs_plan.stages]
-    return CollectiveOrders(
-        ag_order=names_for_plan(ag_plan, axis_names, sizes, links),
-        rs_order=names_for_plan(rs_plan, axis_names, sizes, links),
-        ag_chunks=ag_plan.num_chunks,
-        rs_chunks=rs_plan.num_chunks,
-        ar_chunks=ar_plan.num_chunks,
-        ag_plan=ag_plan,
-        rs_plan=rs_plan,
-        ar_plan=ar_plan,
-        ag_sched=choose_hop_schedule(
+    scheds = {
+        "ag": (choose_hop_schedule(
             ag_plan.factors, ag_links, shard_bytes,
-            max_chunks=max_chunks, collective="ag"),
-        rs_sched=choose_hop_schedule(
+            max_chunks=max_chunks, collective="ag"), ag_order),
+        "rs": (choose_hop_schedule(
             rs_plan.factors, rs_links, shard_bytes,
-            max_chunks=max_chunks, collective="rs"),
-        ar_sched=choose_hop_schedule(
+            max_chunks=max_chunks, collective="rs"), rs_order),
+        "ar": (choose_hop_schedule(
             rs_plan.factors, rs_links, shard_bytes,
             max_chunks=max_chunks, collective="ar"),
-    )
+            rs_order + tuple(reversed(rs_order))),
+    }
+    plans: Dict[str, CollectivePlan] = {}
+    for coll, (sched, order) in scheds.items():
+        plan = sched.to_ir(order)
+        plans[coll] = dataclasses.replace(
+            plan, meta={**plan.meta, "axis_names": axis_names})
+    return plans
 
 
 def fit_chunks(length: int, granularity: int, chunks: int) -> int:
@@ -370,13 +353,18 @@ def fit_chunks(length: int, granularity: int, chunks: int) -> int:
 class StagedCollectiveEngine:
     """User-facing staged collectives over the factorized axes of a mesh.
 
-    Plans stage orders and chunking from the cost model once per
-    (shape, dtype) and wraps the shard_map primitives:
+    Plans one :class:`~repro.core.plan_ir.CollectivePlan` per collective
+    per scattered-payload point (memoized) and executes it by interpreting
+    the IR (``comms.plan_executor.execute_plan``) under shard_map:
 
         eng = StagedCollectiveEngine(mesh, ("pod", "data"))
         y = eng.all_reduce(x)          # == jax.lax.psum over both axes
         s = eng.reduce_scatter(x)      # == psum_scatter, canonical blocks
         g = eng.all_gather(s)          # == all_gather tiled
+
+    The same plan objects are priceable (``core.cost_model.price``) and
+    lower to the optical simulator (``core.schedule.schedule_from_ir``) —
+    ``eng.plan(x, "ag")`` hands them out.
     """
 
     def __init__(
@@ -392,35 +380,47 @@ class StagedCollectiveEngine:
         self.links = links
         self.max_chunks = max_chunks
         self.n_devices = math.prod(mesh.shape[n] for n in self.axis_names)
-        self._plan_cache: Dict[float, CollectiveOrders] = {}
+        self._plan_cache: Dict[float, Dict[str, CollectivePlan]] = {}
 
-    def plan(self, x: jax.Array) -> CollectiveOrders:
-        # x is the full-length array in every case (sharded for AG,
-        # replicated for RS/AR); the scattered-end payload is nbytes/N.
-        # Plans are memoized on that payload — the only planner input that
-        # varies per call.
+    def plan(self, x: jax.Array, collective: str = "ag") -> CollectivePlan:
+        """The CollectivePlan this engine would execute for ``x``.
+
+        ``x`` is the full-length array in every case (sharded for AG,
+        replicated for RS/AR); the scattered-end payload is nbytes/N.
+        Plans are memoized on that payload — the only planner input that
+        varies per call."""
+        if collective not in ("ag", "rs", "ar"):
+            raise ValueError(f"collective must be ag|rs|ar, got {collective!r}")
         shard_bytes = x.size * x.dtype.itemsize / self.n_devices
         cached = self._plan_cache.get(shard_bytes)
         if cached is None:
-            cached = plan_stage_orders(
+            cached = plan_collectives(
                 self.mesh, self.axis_names, shard_bytes,
                 links=self.links, max_chunks=self.max_chunks,
             )
             self._plan_cache[shard_bytes] = cached
-        return cached
+        return cached[collective]
 
     def _run(self, fn, x, in_spec: P, out_spec: P):
         return shard_map(
             fn, mesh=self.mesh, in_specs=in_spec, out_specs=out_spec
         )(x)
 
-    @staticmethod
-    def _mode(sched: HopSchedule, override: Optional[str]) -> str:
-        if override is None:
-            return sched.mode
-        if override not in ("oneshot", "chunked", "perhop"):
-            raise ValueError(f"mode must be oneshot|chunked|perhop, got {override!r}")
-        return override
+    def _resolved(
+        self, x: jax.Array, collective: str, axis: int,
+        mode: Optional[str], chunk_granularity: int,
+    ) -> CollectivePlan:
+        """The plan as it will execute: mode override applied, chunk count
+        clamped to what divides the payload."""
+        plan = self.plan(x, collective)
+        if mode is not None:
+            plan = plan.with_mode(mode)  # validates the mode string
+        if plan.num_chunks > 1:
+            length = (x.shape[axis] // self.n_devices
+                      if collective == "ag" else x.shape[axis])
+            plan = plan.with_chunks(
+                fit_chunks(length, chunk_granularity, plan.num_chunks))
+        return plan
 
     def all_gather(
         self, x: jax.Array, *, axis: int = 0, mode: Optional[str] = None
@@ -428,80 +428,33 @@ class StagedCollectiveEngine:
         """x sharded over ``axis_names`` along ``axis`` -> replicated.
 
         ``mode`` overrides the planned execution mode (``oneshot`` /
-        ``chunked`` / ``perhop``); default follows the hop schedule."""
-        orders = self.plan(x)
-        names = self.axis_names
-        shard_len = x.shape[axis] // self.n_devices
-        chunks = fit_chunks(shard_len, 1, orders.ag_chunks)
-        m = self._mode(orders.ag_sched, mode)
+        ``chunked`` / ``perhop``); default follows the plan."""
+        from .plan_executor import execute_plan
 
-        def fn(y):
-            if m == "perhop":
-                from .ring_executor import perhop_all_gather
-
-                return perhop_all_gather(
-                    y, names, stage_order=orders.ag_order, axis=axis,
-                    stage_modes=orders.ag_sched.stage_modes,
-                )
-            if m == "chunked" and chunks > 1:
-                return staged_all_gather_chunked(
-                    y, names, stage_order=orders.ag_order, axis=axis,
-                    num_chunks=chunks,
-                )
-            return staged_all_gather(
-                y, names, stage_order=orders.ag_order, axis=axis
-            )
-
+        plan = self._resolved(x, "ag", axis, mode, 1)
         spec = [None] * (x.ndim)
-        spec[axis] = names
-        return self._run(fn, x, P(*spec), P())
+        spec[axis] = self.axis_names
+        return self._run(
+            lambda y: execute_plan(y, plan, axis=axis), x, P(*spec), P())
 
     def reduce_scatter(
         self, x: jax.Array, *, axis: int = 0, mode: Optional[str] = None
     ) -> jax.Array:
         """x replicated -> summed and scattered over ``axis_names``."""
-        orders = self.plan(x)
-        names = self.axis_names
-        chunks = fit_chunks(x.shape[axis], self.n_devices, orders.rs_chunks)
-        m = self._mode(orders.rs_sched, mode)
+        from .plan_executor import execute_plan
 
-        def fn(y):
-            if m == "perhop":
-                from .ring_executor import perhop_reduce_scatter
-
-                return perhop_reduce_scatter(
-                    y, names, stage_order=orders.rs_order, axis=axis,
-                    stage_modes=orders.rs_sched.stage_modes,
-                )
-            return staged_reduce_scatter(
-                y, names, stage_order=orders.rs_order, axis=axis,
-                num_chunks=chunks if m == "chunked" else 1,
-            )
-
+        plan = self._resolved(x, "rs", axis, mode, self.n_devices)
         spec = [None] * x.ndim
-        spec[axis] = names
-        return self._run(fn, x, P(), P(*spec))
+        spec[axis] = self.axis_names
+        return self._run(
+            lambda y: execute_plan(y, plan, axis=axis), x, P(), P(*spec))
 
     def all_reduce(
         self, x: jax.Array, *, axis: int = 0, mode: Optional[str] = None
     ) -> jax.Array:
         """x replicated -> psum over ``axis_names`` (device count factor)."""
-        orders = self.plan(x)
-        names = self.axis_names
-        chunks = fit_chunks(x.shape[axis], self.n_devices, orders.ar_chunks)
-        m = self._mode(orders.ar_sched, mode)
+        from .plan_executor import execute_plan
 
-        def fn(y):
-            if m == "perhop":
-                from .ring_executor import perhop_all_reduce
-
-                return perhop_all_reduce(
-                    y, names, rs_order=orders.rs_order, axis=axis,
-                    stage_modes=orders.ar_sched.stage_modes,
-                )
-            return staged_all_reduce(
-                y, names, rs_order=orders.rs_order, axis=axis,
-                num_chunks=chunks if m == "chunked" else 1,
-            )
-
-        return self._run(fn, x, P(), P())
+        plan = self._resolved(x, "ar", axis, mode, self.n_devices)
+        return self._run(
+            lambda y: execute_plan(y, plan, axis=axis), x, P(), P())

@@ -25,14 +25,33 @@ from .schedule import (  # noqa: F401
     build_one_stage_schedule,
     build_optree_schedule,
     build_ring_schedule,
+    schedule_from_ir,
 )
 from .validate import validate_schedule  # noqa: F401
-from .cost_model import TERARACK, OpticalSystem, allgather_time, eq3_time, step_time  # noqa: F401
+from .cost_model import (  # noqa: F401
+    TERARACK,
+    OpticalSystem,
+    PriceReport,
+    allgather_time,
+    eq3_time,
+    price,
+    step_time,
+)
+from .plan_ir import (  # noqa: F401
+    CollectivePlan,
+    Hop,
+    PlanStage,
+    Transfer,
+    expand_hops,
+)
 from .planner import (  # noqa: F401
     DCN_LINK,
     ICI_LINK,
     AllGatherPlan,
+    HopSchedule,
     LinkSpec,
+    choose_hop_schedule,
+    load_links,
     plan_axis_order,
     plan_staged_allgather,
 )

@@ -14,7 +14,7 @@ import math
 from dataclasses import dataclass, replace
 
 __all__ = ["OpticalSystem", "TERARACK", "step_time", "eq3_time", "allgather_time",
-           "eq3_overlap_time", "exposed_hidden_bytes"]
+           "eq3_overlap_time", "exposed_hidden_bytes", "PriceReport", "price"]
 
 
 @dataclass(frozen=True)
@@ -84,6 +84,106 @@ def eq3_overlap_time(
     serial = d_bytes * 8 / sys.bandwidth_per_wavelength
     a = sys.mrr_reconfig_s + (sys.oeo_delay_s(d_bytes) if detailed else 0.0)
     return max(steps * serial + a, steps * a + serial)
+
+
+# --------------------------------------------------------------------------
+# unified IR pricing — one entry point for both cost worlds
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PriceReport:
+    """What one CollectivePlan costs under one transport model.
+
+    ``stage_times_s`` attributes the total per IR stage; under the chunked
+    mode they are the per-chunk pipeline stage costs, so
+    ``total_s = sum + (C-1)·max`` (the pipeline makespan).  ``steps`` is
+    the optical backend's communication-step count (None for electrical).
+    """
+
+    backend: str  # "linkspec" | "optical"
+    mode: str
+    total_s: float
+    stage_times_s: tuple
+    steps: int = None
+    num_chunks: int = 1
+
+
+def _price_linkspec(plan) -> PriceReport:
+    from .planner import perhop_stage_time, pipeline_makespan  # lazy: planner imports us
+
+    for s in plan.stages:
+        if s.link is None:
+            raise ValueError(
+                f"stage {s} has no LinkSpec; the electrical backend needs one")
+
+    def barrier(s, payload):
+        return (s.factor - 1) * (s.link.alpha_s + payload / s.link.bandwidth_bytes)
+
+    if plan.mode == "chunked" and plan.num_chunks > 1:
+        c = plan.num_chunks
+        times = tuple(barrier(s, s.payload_bytes / c) for s in plan.stages)
+        return PriceReport("linkspec", plan.mode,
+                           pipeline_makespan(times, c), times, num_chunks=c)
+    times = []
+    for s in plan.stages:
+        if plan.mode == "perhop" and s.mode == "perhop":
+            times.append(perhop_stage_time(s.factor, s.payload_bytes, s.link))
+        else:
+            times.append(barrier(s, s.payload_bytes))
+    return PriceReport("linkspec", plan.mode, sum(times), tuple(times),
+                       num_chunks=plan.num_chunks)
+
+
+def _price_optical(plan, sys: "OpticalSystem", *, detailed: bool = False) -> PriceReport:
+    from .schedule import schedule_from_ir  # lazy: avoid a cycle
+
+    sched = schedule_from_ir(plan, sys.wavelengths)
+    per_step = step_time(sys, plan.shard_bytes, detailed=detailed)
+    times = tuple(per_step * s for s in sched.stage_steps)
+    return PriceReport("optical", plan.mode, per_step * sched.num_steps,
+                       times, steps=sched.num_steps,
+                       num_chunks=plan.num_chunks)
+
+
+def plan_exposure(plan) -> tuple:
+    """Per-stage (exposed, hidden) byte tuples of a CollectivePlan under
+    per-hop execution — same accounting as
+    ``HopSchedule.stage_exposed_bytes``/``stage_hidden_bytes``: ring stages
+    split by the overlap model, blocking stages expose every moved byte."""
+    from .planner import _stage_exposure  # lazy: planner imports us
+
+    exposed, hidden = [], []
+    for s in plan.stages:
+        if s.mode == "perhop" and s.link is not None:
+            e, h = _stage_exposure(s.factor, s.payload_bytes, s.link)
+        else:
+            e, h = float((s.factor - 1) * s.payload_bytes), 0.0
+        exposed.append(e)
+        hidden.append(h)
+    return tuple(exposed), tuple(hidden)
+
+
+def price(plan, model=None, *, detailed: bool = False) -> PriceReport:
+    """Price one :class:`~repro.core.plan_ir.CollectivePlan` under a model.
+
+    * ``model=None`` (or ``"electrical"``/``"linkspec"``) — the TPU-mesh
+      alpha/bandwidth model from each stage's ``LinkSpec``: barrier stages
+      cost ``(f-1)·(α + p/B)``, per-hop stages the overlap max-form, and the
+      chunked mode prices the C-chunk wavefront makespan — numerically
+      identical to ``core.planner.choose_hop_schedule``'s modeled times for
+      the same chain, so planner and pricer cannot drift.
+    * ``model=OpticalSystem`` — the paper's Eq.-3 model on the RWA-lowered
+      schedule: ``T = (d/B + a) · S`` with S counted by
+      ``schedule_from_ir`` — byte-identical to what
+      ``optics.simulator.simulate`` reports for the same plan (chunking is
+      an executor concept and does not change the optical step structure).
+    """
+    if model is None or model in ("electrical", "linkspec"):
+        return _price_linkspec(plan)
+    if isinstance(model, OpticalSystem):
+        return _price_optical(plan, model, detailed=detailed)
+    raise TypeError(f"model must be None, 'electrical' or OpticalSystem, "
+                    f"got {model!r}")
 
 
 def exposed_hidden_bytes(

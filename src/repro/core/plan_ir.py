@@ -1,0 +1,296 @@
+"""Unified CollectivePlan IR — ONE plan object from scheduler to executor.
+
+The repo used to hold two disjoint plan worlds: the paper side
+(``core.tree.OpTreePlan`` → ``core.schedule`` Tx lightpaths → the Eq.-3
+optical simulator) and the engine side (``core.planner`` stage plans →
+``comms`` shard_map executors), each priced by its own cost model.  This
+module is the bridge: a single IR
+
+    CollectivePlan
+      └─ PlanStage(factor, axis, link, mode ∈ {oneshot, perhop})
+           └─ Hop
+                └─ Transfer(src, dst, item, bytes)
+
+with builders from both worlds (``OpTreePlan.to_ir()``,
+``HopSchedule.to_ir()``) and consumers in all four layers:
+
+  * ``core.cost_model.price(plan, model)`` — one pricing entry point for
+    the LinkSpec alpha/bandwidth model AND the paper's optical Eq.-3 model;
+  * ``core.schedule.schedule_from_ir(plan, w)`` — lowers a plan to Tx
+    lightpaths for step-accurate, conflict-checked validation in
+    ``optics.simulator.simulate``;
+  * ``comms.plan_executor.execute_plan`` — the JAX executor interprets the
+    plan's stages directly (no re-derivation, no drift);
+  * ``launch/perf.py --collectives`` / ``benchmarks/run.py`` — report
+    modeled-electrical, modeled-optical and measured time off the same
+    plan object.
+
+Semantics.  ``stages`` are in EXECUTION order.  A plan with factors
+(f_1..f_k) places participant p at ring/mixed-radix position with the
+first-executed factor most significant, which makes the transfer structure
+of an all-gather plan literally ``OpTreePlan(n, factors)``: stage j gathers
+coordinate c_j inside "same position across siblings" subsets.  The dual
+collectives reuse the gather algebra by time reversal: a reduce-scatter's
+transfer structure is the mirrored all-gather run backwards (identical hop
+and step counts — see ``optics/comparison.py``), an all-reduce is RS then
+AG.
+
+``PlanStage.mode`` is the hop structure: ``"oneshot"`` — the stage is one
+synchronized all-to-all round (paper §III-D; XLA blocking collective on the
+engine side); ``"perhop"`` — the stage runs as ``factor-1`` double-buffered
+ring hops (``comms.ring_executor``).  ``CollectivePlan.mode`` is the
+plan-level execution decision (``oneshot`` / ``chunked`` / ``perhop``);
+``num_chunks`` carries the wavefront chunk count for the chunked mode.
+Hops/transfers are materialized lazily (``expand_hops``) — consumers that
+only price or execute a plan never pay the O(N^2) enumeration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .tree import OpTreePlan
+
+__all__ = [
+    "Transfer",
+    "Hop",
+    "PlanStage",
+    "CollectivePlan",
+    "expand_hops",
+    "stage_hops",
+    "gather_chain",
+    "effective_stage_mode",
+]
+
+STAGE_MODES = ("oneshot", "perhop")
+PLAN_MODES = ("oneshot", "chunked", "perhop")
+
+
+@dataclass(frozen=True)
+class Transfer:
+    """One logical block movement: ``src`` sends origin-block ``item`` to
+    ``dst``.  ``bytes`` is the block size (the scattered shard d)."""
+
+    src: int
+    dst: int
+    item: int
+    bytes: float
+
+
+@dataclass(frozen=True)
+class Hop:
+    """One synchronized communication round within a stage.  A ``oneshot``
+    stage has exactly one hop (the all-to-all broadcast); a ``perhop``
+    stage has ``factor - 1`` ring hops, each causally after the previous."""
+
+    transfers: Tuple[Transfer, ...]
+
+
+@dataclass(frozen=True)
+class PlanStage:
+    """One stage of a staged collective.
+
+    ``payload_bytes`` is the PER-HOP per-device payload the stage moves:
+    the entering payload for a gather stage (grows by the already-gathered
+    factors), the leaving payload for a scatter stage (shrinks) — exactly
+    the ``p`` in the ``(f-1)·(α + p/B)`` barrier and
+    ``max((f-1)·p/B + α, (f-1)·α + p/B)`` overlap models.  ``axis`` is the
+    mesh axis the engine executes this stage over (None for paper-world
+    plans); ``link`` is the transport model pricing it (None for pure
+    optical plans).
+    """
+
+    factor: int
+    mode: str  # "oneshot" | "perhop"
+    payload_bytes: float
+    axis: Optional[str] = None
+    link: Optional[object] = None  # core.planner.LinkSpec (kept untyped: no cycle)
+    hops: Tuple[Hop, ...] = ()
+
+    def __post_init__(self):
+        if self.mode not in STAGE_MODES:
+            raise ValueError(f"stage mode must be one of {STAGE_MODES}, got {self.mode!r}")
+        if self.factor < 1:
+            raise ValueError("stage factor must be >= 1")
+
+
+@dataclass(frozen=True)
+class CollectivePlan:
+    """The unified staged-collective plan (see module docstring).
+
+    ``shard_bytes`` is the scattered-end payload — the AG input / RS output
+    shard, the paper's item size d.  ``stages`` are in execution order; for
+    ``collective == "ar"`` they span the full 2k-stage RS+AG chain.
+    """
+
+    collective: str  # "ag" | "rs" | "ar"
+    n: int
+    shard_bytes: float
+    stages: Tuple[PlanStage, ...]
+    mode: str = "oneshot"
+    num_chunks: int = 1
+    meta: Dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.collective not in ("ag", "rs", "ar"):
+            raise ValueError(f"collective must be ag|rs|ar, got {self.collective!r}")
+        if self.mode not in PLAN_MODES:
+            raise ValueError(f"plan mode must be one of {PLAN_MODES}, got {self.mode!r}")
+        prod = math.prod(s.factor for s in self.stages)
+        expect = self.n * self.n if self.collective == "ar" else self.n
+        if prod != expect:
+            raise ValueError(
+                f"stage factors {tuple(s.factor for s in self.stages)} do not "
+                f"cover n={self.n} for collective {self.collective!r}"
+            )
+
+    # -- convenience ---------------------------------------------------------
+    @property
+    def factors(self) -> Tuple[int, ...]:
+        return tuple(s.factor for s in self.stages)
+
+    @property
+    def axes(self) -> Tuple[Optional[str], ...]:
+        return tuple(s.axis for s in self.stages)
+
+    @property
+    def stage_modes(self) -> Tuple[str, ...]:
+        return tuple(s.mode for s in self.stages)
+
+    def with_mode(self, mode: str) -> "CollectivePlan":
+        """Same plan, different plan-level execution mode (the per-stage hop
+        structure is preserved; it only takes effect under ``perhop``)."""
+        if mode not in PLAN_MODES:
+            raise ValueError(f"plan mode must be one of {PLAN_MODES}, got {mode!r}")
+        return dataclasses.replace(self, mode=mode)
+
+    def with_chunks(self, num_chunks: int) -> "CollectivePlan":
+        return dataclasses.replace(self, num_chunks=num_chunks)
+
+    # -- transfer-structure algebra -----------------------------------------
+    def gather_tree(self) -> OpTreePlan:
+        """The OpTree plan whose subset algebra generates this plan's
+        transfers (gather-order factors; RS/AR reuse it by time reversal)."""
+        return OpTreePlan(self.n, gather_chain(self)[0] or (1,))
+
+
+def gather_chain(plan: CollectivePlan) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """(factors, stage_modes) of the plan's gather-equivalent chain.
+
+    * ``ag`` — the stages as executed.
+    * ``rs`` — the time-reversed mirror: an RS with execution factors
+      (f_1..f_k) moves exactly the transfers of the mirrored AG with factors
+      (f_k..f_1) run backwards, so hop/step counts are identical.
+    * ``ar`` — only the gather half is a single gather chain; callers that
+      need the full AR structure handle the two halves explicitly (see
+      ``schedule_from_ir``).
+
+    Per-stage hop structure is the EFFECTIVE mode: a stage's ``perhop``
+    preference only materializes when the plan-level mode is ``perhop`` —
+    under ``oneshot``/``chunked`` every stage runs as a blocking collective,
+    exactly as the executor would run it.  Factor-1 stages carry no
+    transfers and are dropped.
+    """
+    if plan.collective == "ar":
+        raise ValueError("ar spans two chains; lower the halves separately")
+    stages = plan.stages
+    if plan.collective == "rs":
+        stages = tuple(reversed(stages))
+    pairs = [(s.factor, effective_stage_mode(plan, s)) for s in stages
+             if s.factor > 1]
+    factors = tuple(f for f, _ in pairs)
+    modes = tuple(m for _, m in pairs)
+    return factors, modes
+
+
+def effective_stage_mode(plan: CollectivePlan, stage: PlanStage) -> str:
+    """The hop structure a stage actually executes/lowers with under the
+    plan-level mode (stage ``perhop`` applies only when the plan is
+    ``perhop``)."""
+    return stage.mode if plan.mode == "perhop" else "oneshot"
+
+
+def _ring_hops(
+    tree: OpTreePlan, stage: int, shard_bytes: float
+) -> List[Hop]:
+    """``m - 1`` double-buffered ring hops for stage ``stage`` (1-indexed).
+
+    Hop t: within every subset (members ascending ring position), the
+    member at subset position q forwards to position (q+1) mod m the
+    stage-entry items of position (q - t + 1) mod m — the block received at
+    hop t-1 (at t=1, its own holding).  After m-1 hops every member has
+    every sibling's stage-entry items: the ring all-gather the per-hop
+    executor runs (``comms.ring_executor.ring_all_gather_stage``).
+    """
+    m = tree.factors[stage - 1]
+    hops: List[Hop] = []
+    subsets = list(tree.subsets(stage))
+    entry_items = {
+        p: tree.items_to_send(stage, p)
+        for sub in subsets
+        for p in sub.members
+    }
+    for t in range(1, m):
+        transfers: List[Transfer] = []
+        for sub in subsets:
+            members = sub.members
+            for q, src in enumerate(members):
+                dst = members[(q + 1) % m]
+                origin = members[(q - t + 1) % m]
+                for item in entry_items[origin]:
+                    transfers.append(Transfer(src, dst, item, shard_bytes))
+        hops.append(Hop(tuple(transfers)))
+    return hops
+
+
+def _oneshot_hop(
+    tree: OpTreePlan, stage: int, shard_bytes: float
+) -> List[Hop]:
+    """The paper's stage: one all-to-all broadcast round per subset — each
+    member sends every item it entered the stage with to every sibling."""
+    transfers: List[Transfer] = []
+    for sub in tree.subsets(stage):
+        for src in sub.members:
+            items = tree.items_to_send(stage, src)
+            for dst in sub.members:
+                if dst == src:
+                    continue
+                for item in items:
+                    transfers.append(Transfer(src, dst, item, shard_bytes))
+    return [Hop(tuple(transfers))]
+
+
+def stage_hops(
+    factors: Sequence[int],
+    modes: Sequence[str],
+    stage_idx: int,
+    shard_bytes: float,
+) -> List[Hop]:
+    """Hops of gather-chain stage ``stage_idx`` (0-indexed execution order)."""
+    tree = OpTreePlan(int(math.prod(factors)), tuple(factors))
+    if modes[stage_idx] == "perhop":
+        return _ring_hops(tree, stage_idx + 1, shard_bytes)
+    return _oneshot_hop(tree, stage_idx + 1, shard_bytes)
+
+
+def expand_hops(plan: CollectivePlan) -> CollectivePlan:
+    """Materialize ``hops`` on every stage of an ``ag``/``rs`` plan.
+
+    RS stages get the hops of their time-reversed mirror AG (identical
+    counts; the executed RS runs them backwards carrying partial sums).
+    O(N^2) transfers — validation-sized plans only.
+    """
+    factors, modes = gather_chain(plan)
+    per_stage: List[Tuple[Hop, ...]] = []
+    for j in range(len(factors)):
+        per_stage.append(tuple(stage_hops(factors, modes, j, plan.shard_bytes)))
+    if plan.collective == "rs":
+        per_stage = list(reversed(per_stage))
+    out: List[PlanStage] = []
+    it = iter(per_stage)
+    for st in plan.stages:
+        hops = next(it) if st.factor > 1 else ()
+        out.append(dataclasses.replace(st, hops=hops))
+    return dataclasses.replace(plan, stages=tuple(out))

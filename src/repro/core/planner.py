@@ -31,7 +31,7 @@ from .cost_model import TERARACK
 from .tree import balanced_factors
 
 __all__ = ["LinkSpec", "StagePlan", "AllGatherPlan", "AllReducePlan",
-           "HopSchedule", "FusedMatmulPlan",
+           "HopSchedule", "FusedMatmulPlan", "load_links",
            "plan_staged_allgather", "plan_axis_order",
            "plan_reduce_scatter_order", "plan_all_reduce",
            "pipeline_makespan", "choose_num_chunks",
@@ -47,6 +47,55 @@ class LinkSpec:
     name: str
     bandwidth_bytes: float  # per-device injection bandwidth over this link
     alpha_s: float  # fixed per-hop cost (launch + hop latency)
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "bandwidth_bytes": self.bandwidth_bytes,
+                "alpha_s": self.alpha_s}
+
+    @staticmethod
+    def from_json(d: dict, fallback: Optional["LinkSpec"] = None) -> "LinkSpec":
+        """Build a LinkSpec from a dict — the ``to_json`` form or one entry
+        of ``launch/perf.py --calibrate``'s ``fitted_links`` output.
+
+        A calibration sweep on alpha-dominated transport reports
+        ``bandwidth_bytes: null`` (unidentifiable); those fall back to
+        ``fallback`` (or the entry's own ``hardcoded`` record) so a fitted
+        file always round-trips into a usable spec.
+        """
+        bw = d.get("bandwidth_bytes")
+        alpha = d.get("alpha_s")
+        hard = d.get("hardcoded") or {}
+        if bw is None:
+            bw = (fallback.bandwidth_bytes if fallback is not None
+                  else hard.get("bandwidth_bytes"))
+        if alpha is None:
+            alpha = (fallback.alpha_s if fallback is not None
+                     else hard.get("alpha_s"))
+        if bw is None or alpha is None:
+            raise ValueError(f"cannot build LinkSpec from {d!r}: missing "
+                             f"bandwidth/alpha and no fallback")
+        return LinkSpec(name=str(d.get("name", "link")),
+                        bandwidth_bytes=float(bw), alpha_s=float(alpha))
+
+
+def load_links(path, fallbacks: Optional[dict] = None) -> dict:
+    """Load an axis-name -> LinkSpec map from a JSON file.
+
+    Accepts either a plain ``{axis: LinkSpec.to_json()}`` map or the full
+    ``launch/perf.py --calibrate`` output (``{"fitted_links": {...}}``) —
+    the calibration loop's feedback path into
+    ``StagedCollectiveEngine(links=...)``.
+    """
+    import json
+    from pathlib import Path
+
+    doc = json.loads(Path(path).read_text())
+    entries = doc.get("fitted_links", doc)
+    out = {}
+    for axis, d in entries.items():
+        fb = (fallbacks or {}).get(axis)
+        out[axis] = LinkSpec.from_json(d, fallback=fb)
+    return out
 
 
 # TPU v5e-flavoured defaults (see roofline constants in launch/roofline.py):
@@ -387,6 +436,11 @@ class HopSchedule:
     perhop_time_s: float
     stage_exposed_bytes: Tuple[float, ...]
     stage_hidden_bytes: Tuple[float, ...]
+    # the priced stage chain (for "ar": the full 2k-stage RS+AG sequence),
+    # carried so the schedule lowers losslessly into the CollectivePlan IR
+    stages: Tuple[StagePlan, ...] = ()
+    collective: str = "ag"
+    shard_bytes: float = 0.0
 
     @property
     def time_s(self) -> float:
@@ -400,6 +454,54 @@ class HopSchedule:
     @property
     def hidden_bytes(self) -> float:
         return sum(self.stage_hidden_bytes)
+
+    def to_ir(self, axis_names: Optional[Sequence[str]] = None, *,
+              mode: Optional[str] = None):
+        """Lower this planner decision into the unified CollectivePlan IR.
+
+        ``axis_names`` labels each stage with the mesh axis the engine
+        executes it over (execution order — for ``ar`` the 2k-long RS+AG
+        name sequence).  Per-stage hop structure maps ``"ring"`` →
+        ``"perhop"``; the plan-level ``mode`` (overridable) selects which
+        modeled execution the plan carries.
+        """
+        from .plan_ir import CollectivePlan, PlanStage  # local: avoid a cycle
+
+        if not self.stages:
+            raise ValueError("HopSchedule built without its stage chain "
+                             "cannot lower to IR")
+        names: Sequence[Optional[str]]
+        names = tuple(axis_names) if axis_names is not None else (None,) * len(self.stages)
+        if len(names) != len(self.stages):
+            raise ValueError(
+                f"axis_names must have {len(self.stages)} entries, got {names}"
+            )
+        ir_stages = tuple(
+            PlanStage(
+                factor=s.factor,
+                mode="perhop" if m == "ring" else "oneshot",
+                payload_bytes=s.payload_bytes,  # per-hop payload, both duals
+                axis=name,
+                link=s.link,
+            )
+            for s, m, name in zip(self.stages, self.stage_modes, names)
+        )
+        n = math.prod(
+            s.factor for s in (self.stages[: len(self.stages) // 2]
+                               if self.collective == "ar" else self.stages)
+        )
+        return CollectivePlan(
+            collective=self.collective,
+            n=n,
+            shard_bytes=self.shard_bytes,
+            stages=ir_stages,
+            mode=mode or self.mode,
+            num_chunks=self.num_chunks,
+            meta={"source": "hop_schedule",
+                  "modeled": {"oneshot": self.oneshot_time_s,
+                              "chunked": self.chunked_time_s,
+                              "perhop": self.perhop_time_s}},
+        )
 
 
 def _stage_chain(
@@ -492,6 +594,9 @@ def choose_hop_schedule(
         perhop_time_s=perhop,
         stage_exposed_bytes=tuple(exposed),
         stage_hidden_bytes=tuple(hidden),
+        stages=tuple(stages),
+        collective=collective,
+        shard_bytes=float(shard_bytes),
     )
 
 

@@ -38,6 +38,7 @@ __all__ = [
     "build_one_stage_schedule",
     "build_ring_schedule",
     "build_ne_schedule",
+    "schedule_from_ir",
 ]
 
 CW, CCW = 0, 1
@@ -282,6 +283,113 @@ def build_optree_schedule(plan: OpTreePlan, w: int) -> Schedule:
         sched.txs.extend(txs)
         sched.stage_steps.append(steps)
         offset += steps
+    return sched
+
+
+def _lower_gather_chain(
+    sched: Schedule,
+    factors: Sequence[int],
+    modes: Sequence[str],
+    w: int,
+    offset: int,
+) -> int:
+    """Lower one gather chain (execution-order ``factors`` with per-stage hop
+    ``modes``) into ``sched``, starting at step ``offset``.
+
+    The transfers come straight from ``plan_ir.stage_hops`` — the IR's own
+    hop expansion is the single source of truth; this function only adds
+    routing and RWA coloring.  The IR places participants in
+    execution-major mixed-radix ring order, so stage-1 transfers route on
+    the whole ring and stage-j>=2 transfers inside their contiguous parent
+    segment of size ``prod(factors[j-1:])`` — exactly like
+    ``build_optree_schedule``.  A ``oneshot`` stage is one all-to-all
+    broadcast round; a ``perhop`` stage is ``m-1`` causally ordered ring
+    hops, each colored into its own step block.  Returns the new step
+    offset; appends one ``stage_steps`` entry per stage.
+    """
+    from .plan_ir import stage_hops  # local import: avoid a cycle
+    from .tree import mixed_radix_sizes
+
+    n = math.prod(factors)
+    child_sizes = mixed_radix_sizes(factors)
+    for j, (m, mode) in enumerate(zip(factors, modes)):
+        parent_sz = child_sizes[j] * m
+        stage_steps = 0
+        for hop in stage_hops(factors, modes, j, 0.0):
+            raw: List[RawTx] = []
+            for t in hop.transfers:
+                if j == 0:
+                    d, links = route_ring(n, t.src, t.dst)
+                else:
+                    seg_start = (t.src // parent_sz) * parent_sz
+                    d, links = route_line(n, seg_start, parent_sz, t.src, t.dst)
+                raw.append((t.src, t.dst, t.item, d, links))
+            txs, steps = _color_stage(raw, n, w, offset, ring_mode=(j == 0))
+            sched.txs.extend(txs)
+            offset += steps
+            stage_steps += steps
+        sched.stage_steps.append(stage_steps)
+    return offset
+
+
+def schedule_from_ir(plan, w: int) -> Schedule:
+    """Lower a :class:`~repro.core.plan_ir.CollectivePlan` to a Tx-level
+    :class:`Schedule` the optical simulator can execute and conflict-check.
+
+    * ``ag`` — lowered directly: the plan's execution-order stages become
+      OpTree stages (oneshot = all-to-all broadcast round, perhop = m-1 ring
+      hops).  For an all-oneshot plan this reproduces
+      ``build_optree_schedule(OpTreePlan(n, factors), w)`` transmission for
+      transmission.
+    * ``rs`` — lowered as the time-reversed mirror all-gather (reversed
+      stage order): a reduce-scatter runs exactly those lightpaths backwards
+      carrying partial sums, so step and transmission counts are identical
+      (the duality ``optics/comparison.py`` prices).  Items flow in gather
+      direction so the simulator's causality/completeness checks apply.
+      ``stage_steps`` is re-reversed to the plan's EXECUTION order, so
+      per-stage attribution (``SimReport.stage_times_s``,
+      ``PriceReport.stage_times_s``) pairs with ``plan.factors`` — stage i
+      of the plan occupies the time-reversed i-th block of the schedule.
+    * ``ar`` — the RS mirror chain followed by the AG chain (2k stages);
+      the RS half's ``stage_steps`` are execution-ordered the same way.
+
+    Chunking (``plan.mode == "chunked"``) is an executor-side wavefront over
+    whole-stage collectives; the optical step structure is unchanged, so the
+    lowering ignores ``num_chunks``.
+    """
+    from .plan_ir import effective_stage_mode  # local import: avoid a cycle
+
+    sched = Schedule(
+        n=plan.n, w=w,
+        meta={"algorithm": f"ir-{plan.collective}",
+              "factors": plan.factors,
+              "modes": plan.stage_modes,
+              "mode": plan.mode,
+              "source": plan.meta.get("source")},
+    )
+    # factor-1 stages are lowered too (zero transfers, zero steps) so
+    # ``stage_steps`` always has one entry per plan stage and per-stage
+    # attribution pairs with ``plan.factors`` index for index
+    offset = 0
+    if plan.collective == "ar":
+        k = len(plan.stages) // 2
+        halves = ((plan.stages[:k], True), (plan.stages[k:], False))
+    else:
+        halves = ((plan.stages, plan.collective == "rs"),)
+    for half, flip in halves:
+        # scatter halves lower as their time-reversed mirror all-gather
+        stages = tuple(reversed(half)) if flip else half
+        if not stages:
+            continue
+        mark = len(sched.stage_steps)
+        offset = _lower_gather_chain(
+            sched,
+            [s.factor for s in stages],
+            [effective_stage_mode(plan, s) for s in stages],
+            w, offset,
+        )
+        if flip:  # attribution back to execution order
+            sched.stage_steps[mark:] = sched.stage_steps[mark:][::-1]
     return sched
 
 

@@ -210,3 +210,37 @@ class OpTreePlan:
         if k is None:
             k = optimal_depth_argmin(n, w)
         return OpTreePlan(n=n, factors=balanced_factors(n, k))
+
+    def to_ir(
+        self,
+        *,
+        shard_bytes: float = 1.0,
+        link=None,
+        stage_modes: Optional[Sequence[str]] = None,
+    ):
+        """Lift this paper plan into the unified :class:`CollectivePlan` IR.
+
+        Stages default to ``oneshot`` (the paper's all-to-all broadcast
+        rounds); ``stage_modes`` overrides per stage (``"perhop"`` turns a
+        stage into m-1 ring hops).  ``link`` optionally attaches one
+        LinkSpec to every stage so the electrical backend of
+        ``cost_model.price`` can price it too.
+        """
+        from .plan_ir import CollectivePlan, PlanStage  # local: avoid a cycle
+
+        modes = tuple(stage_modes) if stage_modes is not None else ("oneshot",) * self.k
+        if len(modes) != self.k:
+            raise ValueError(f"stage_modes must have {self.k} entries, got {modes}")
+        stages = []
+        payload = float(shard_bytes)
+        for m, mode in zip(self.factors, modes):
+            stages.append(PlanStage(factor=m, mode=mode, payload_bytes=payload,
+                                    link=link))
+            payload *= m
+        return CollectivePlan(
+            collective="ag",
+            n=self.n,
+            shard_bytes=float(shard_bytes),
+            stages=tuple(stages),
+            meta={"source": "optree", "factors": self.factors},
+        )

@@ -17,10 +17,27 @@ Both are value-equivalent to the unfused ``collective ∘ matmul`` composition
 (each output block is produced by the same block matmul, so AG-side results
 are bit-comparable; the RS ring reduces in ring order, hence allclose).  The
 fuse-or-not decision lives in ``core.planner.plan_collective_matmul``.
+
+**Backward pass** (custom_vjp): the two shapes are each other's duals, so
+the backward collectives reuse the fused rings instead of falling back to
+XLA's transpose:
+
+  * ``allgather_matmul``:  dx = matmul_reduce_scatter(Σ-cat(dout), catᵀ(w))
+    — the dgrad's ``@ wᵀ`` feeds the RS ring just-in-time, plus the
+    gathered-activation cotangent reduce-scattered; dw = gatheredᵀ @ dout
+    is local (residuals carry the gathered activations, so no re-gather).
+  * ``matmul_reduce_scatter``: (AG(dy), dh) come from ONE fused
+    ``allgather_matmul(dy, wᵀ)`` ring — the gather that dgrad needs also
+    delivers the gathered cotangent dw = hᵀ @ AG(dy) contracts against.
+
+Stage orders transpose with the collective (the vjp of a stage order is its
+reverse — payload duality), and per-stage ``stage_modes`` follow along
+reversed.
 """
 from __future__ import annotations
 
 import math
+from functools import partial
 from typing import List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -104,6 +121,84 @@ def _oneshot_ag_stage_with_matmul(
     return buf, [_mm(buf, w) for w in ws]
 
 
+def _allgather_matmul_impl(
+    x: jax.Array,
+    ws: Sequence[jax.Array],
+    axis_names: Tuple[str, ...],
+    stage_order: Optional[Tuple[str, ...]],
+    axis: int,
+    stage_modes: Optional[Tuple[str, ...]],
+) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    axis_names = tuple(axis_names)
+    order = (
+        _check_order(stage_order, axis_names)
+        if stage_order is not None
+        else axis_names
+    )
+    modes = _resolve_modes(stage_modes, len(order))
+    ws = list(ws)
+    if axis < 0:
+        axis += x.ndim
+
+    cur = x
+    outs = [_mm(x, wi) for wi in ws]  # local block (overlaps the first send)
+    for name, mode in zip(order, modes):
+        if mode == "ring":
+            cur, outs = _fused_ring_ag_stage(cur, outs, name, ws)
+        else:
+            cur, outs = _oneshot_ag_stage_with_matmul(cur, name, ws)
+
+    gathered = _merge_device_axis(_ag_finalize(cur, axis_names, order), axis)
+    outs = tuple(
+        _merge_device_axis(_ag_finalize(o, axis_names, order), axis)
+        for o in outs
+    )
+    return gathered, outs
+
+
+def _rev(seq: Optional[Tuple[str, ...]]) -> Optional[Tuple[str, ...]]:
+    return tuple(reversed(seq)) if seq is not None else None
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _ag_matmul_vjp(axis_names, stage_order, axis, stage_modes, x, ws):
+    return _allgather_matmul_impl(x, ws, axis_names, stage_order, axis,
+                                  stage_modes)
+
+
+def _ag_matmul_fwd(axis_names, stage_order, axis, stage_modes, x, ws):
+    gathered, outs = _allgather_matmul_impl(
+        x, ws, axis_names, stage_order, axis, stage_modes)
+    # residuals: the gathered activations double as the dw contraction input
+    # (no re-gather in the backward pass) + the weights for dgrad
+    return (gathered, outs), (gathered, tuple(ws))
+
+
+def _ag_matmul_bwd(axis_names, stage_order, axis, stage_modes, res, ct):
+    gathered, ws = res
+    d_gathered, d_outs = ct
+    order = stage_order  # resolved (never None) by the public wrapper
+    # dgrad reuses the fused ring as its DUAL: the reversed stage order runs
+    # matmul→reduce-scatter with the ``@ wᵀ`` block matmuls feeding the ring
+    # just-in-time; multiple weights share one ring via feature concat
+    douts_cat = (jnp.concatenate(d_outs, axis=-1) if len(d_outs) > 1
+                 else d_outs[0])
+    w_cat = (jnp.concatenate(list(ws), axis=-1) if len(ws) > 1 else ws[0])
+    dx = _matmul_reduce_scatter_impl(
+        douts_cat, jnp.swapaxes(w_cat, 0, 1), axis_names,
+        _rev(order), axis, _rev(stage_modes))
+    # the gathered-activation output's own cotangent: AG's transpose
+    dx = dx + lax.psum_scatter(
+        d_gathered, axis_names, scatter_dimension=axis, tiled=True)
+    dws = tuple(
+        jnp.einsum("...d,...f->df", gathered, do) for do in d_outs
+    )
+    return dx, dws
+
+
+_ag_matmul_vjp.defvjp(_ag_matmul_fwd, _ag_matmul_bwd)
+
+
 def allgather_matmul(
     x: jax.Array,
     w: Union[jax.Array, Sequence[jax.Array]],
@@ -124,55 +219,38 @@ def allgather_matmul(
 
     ``stage_modes`` (per stage, ``"ring"``/``"oneshot"``) follows the
     planner's hop schedule; one-shot stages still produce identical values.
+
+    Differentiable via custom_vjp: dgrad runs as the fused
+    ``matmul_reduce_scatter`` dual (reversed stage order), dw contracts the
+    saved gathered activations locally — the backward collectives ride the
+    same overlapped rings as the forward.
     """
-    axis_names = tuple(axis_names)
-    order = (
-        _check_order(stage_order, axis_names)
-        if stage_order is not None
-        else axis_names
-    )
-    modes = _resolve_modes(stage_modes, len(order))
-    single = not isinstance(w, (list, tuple))
-    ws = [w] if single else list(w)
     if axis < 0:
         axis += x.ndim
-
-    cur = x
-    outs = [_mm(x, wi) for wi in ws]  # local block (overlaps the first send)
-    for name, mode in zip(order, modes):
-        if mode == "ring":
-            cur, outs = _fused_ring_ag_stage(cur, outs, name, ws)
-        else:
-            cur, outs = _oneshot_ag_stage_with_matmul(cur, name, ws)
-
-    gathered = _merge_device_axis(_ag_finalize(cur, axis_names, order), axis)
-    outs = [
-        _merge_device_axis(_ag_finalize(o, axis_names, order), axis)
-        for o in outs
-    ]
+    single = not isinstance(w, (list, tuple))
+    ws = (w,) if single else tuple(w)
+    # resolve the default stage order HERE so the forward impl and the
+    # backward's dual derive from one concrete order
+    axis_names = tuple(axis_names)
+    order = tuple(stage_order) if stage_order is not None else axis_names
+    gathered, outs = _ag_matmul_vjp(
+        axis_names,
+        order,
+        axis,
+        tuple(stage_modes) if stage_modes is not None else None,
+        x, ws,
+    )
     return gathered, (outs[0] if single else tuple(outs))
 
 
-def matmul_reduce_scatter(
+def _matmul_reduce_scatter_impl(
     h: jax.Array,
     w: jax.Array,
-    axis_names: Sequence[str],
-    *,
-    stage_order: Optional[Sequence[str]] = None,
-    axis: int = 0,
-    stage_modes: Optional[Sequence[str]] = None,
+    axis_names: Tuple[str, ...],
+    stage_order: Optional[Tuple[str, ...]],
+    axis: int,
+    stage_modes: Optional[Tuple[str, ...]],
 ) -> jax.Array:
-    """``psum_scatter(h @ w, axis_names, scatter_dimension=axis, tiled=True)``
-    with the matmul decomposed per scattered block (inside shard_map).
-
-    The first reduce-scatter stage runs as a ring whose local partial for
-    each departing block is computed *just-in-time*: the slice of ``h``
-    feeding hop t is multiplied while hop t-1's accumulator is in flight, so
-    the combine's communication hides behind the block matmuls.  Remaining
-    stages (smaller payloads, no compute left to hide behind) follow the
-    planner's ``stage_modes``.  Values are allclose to the unfused
-    composition (ring reduction order).
-    """
     axis_names = tuple(axis_names)
     order = (
         _check_order(stage_order, axis_names)
@@ -216,3 +294,71 @@ def matmul_reduce_scatter(
         else:
             y = lax.psum_scatter(y, name, scatter_dimension=0, tiled=True)
     return jnp.moveaxis(y, 0, axis) if axis != 0 else y
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _mm_rs_vjp(axis_names, stage_order, axis, stage_modes, h, w):
+    return _matmul_reduce_scatter_impl(h, w, axis_names, stage_order, axis,
+                                       stage_modes)
+
+
+def _mm_rs_fwd(axis_names, stage_order, axis, stage_modes, h, w):
+    y = _matmul_reduce_scatter_impl(h, w, axis_names, stage_order, axis,
+                                    stage_modes)
+    return y, (h, w)
+
+
+def _mm_rs_bwd(axis_names, stage_order, axis, stage_modes, res, dy):
+    h, w = res
+    order = stage_order  # resolved (never None) by the public wrapper
+    # ONE fused allgather_matmul ring (the RS dual, reversed stage order)
+    # yields both the gathered cotangent AND dgrad: g_dy = AG(dy) feeds dw,
+    # dh = AG(dy) @ wᵀ is multiplied per block the hop it lands
+    g_dy, (dh,) = _allgather_matmul_impl(
+        dy, (jnp.swapaxes(w, 0, 1),), axis_names,
+        _rev(order), axis, _rev(stage_modes))
+    dw = jnp.einsum("...k,...f->kf", h, g_dy)
+    return dh, dw
+
+
+_mm_rs_vjp.defvjp(_mm_rs_fwd, _mm_rs_bwd)
+
+
+def matmul_reduce_scatter(
+    h: jax.Array,
+    w: jax.Array,
+    axis_names: Sequence[str],
+    *,
+    stage_order: Optional[Sequence[str]] = None,
+    axis: int = 0,
+    stage_modes: Optional[Sequence[str]] = None,
+) -> jax.Array:
+    """``psum_scatter(h @ w, axis_names, scatter_dimension=axis, tiled=True)``
+    with the matmul decomposed per scattered block (inside shard_map).
+
+    The first reduce-scatter stage runs as a ring whose local partial for
+    each departing block is computed *just-in-time*: the slice of ``h``
+    feeding hop t is multiplied while hop t-1's accumulator is in flight, so
+    the combine's communication hides behind the block matmuls.  Remaining
+    stages (smaller payloads, no compute left to hide behind) follow the
+    planner's ``stage_modes``.  Values are allclose to the unfused
+    composition (ring reduction order).
+
+    Differentiable via custom_vjp: the backward pass is one fused
+    ``allgather_matmul`` ring (the RS dual) producing dgrad and the
+    gathered cotangent for wgrad together.
+    """
+    if axis < 0:
+        axis += h.ndim
+    # resolve the default stage order HERE so the forward impl and the
+    # backward's dual derive from one concrete order
+    axis_names = tuple(axis_names)
+    order = (tuple(stage_order) if stage_order is not None
+             else tuple(reversed(axis_names)))
+    return _mm_rs_vjp(
+        axis_names,
+        order,
+        axis,
+        tuple(stage_modes) if stage_modes is not None else None,
+        h, w,
+    )

@@ -16,12 +16,21 @@ loss_chunk / kv_shard / dtype / moe capacity).
 
   python -m repro.launch.perf --collectives 2,4 --sizes-kb 64,1024
 
-runs the staged-collective microbenchmarks instead: modeled AND measured
-time for each execution mode (one-shot stage barriers / chunked wavefront /
-per-hop ppermute rings) per AG/RS/AR per size, plus the XLA flat one-shot
-baseline, on a fake-device mesh of the given factorization.  Add
---calibrate to instead fit per-axis LinkSpec alpha/bandwidth from the
-measured sweep (least squares; printed as JSON).
+runs the staged-collective microbenchmarks instead: modeled-electrical
+(LinkSpec alpha/bandwidth), modeled-optical (paper Eq. 3 on the RWA-lowered
+schedule) and measured time — all three priced/measured off the SAME
+CollectivePlan IR object the engine executes — for each execution mode
+(one-shot stage barriers / chunked wavefront / per-hop ppermute rings) per
+AG/RS/AR per size, plus the XLA flat one-shot baseline, on a fake-device
+mesh of the given factorization.
+
+  --calibrate          fit per-axis LinkSpec alpha/bandwidth from the
+                       measured sweep (least squares; printed as JSON and,
+                       with --links PATH, written there)
+  --links fitted.json  feed a previous --calibrate output back into the
+                       engine: the benchmarks plan with the FITTED specs
+                       instead of the hard-coded v5e constants — the
+                       ROADMAP calibration feedback loop
 """
 
 import argparse
@@ -101,11 +110,11 @@ def run_variant(arch, shape, name, overrides, out_dir):
     return row
 
 
-def _bench_setup(factors_csv: str):
+def _bench_setup(factors_csv: str, links_path=None):
     import numpy as np
 
     from repro.comms import StagedCollectiveEngine, make_factorized_mesh
-    from repro.core.planner import DCN_LINK, ICI_LINK
+    from repro.core.planner import DCN_LINK, ICI_LINK, load_links
 
     try:
         factors = [int(x) for x in factors_csv.split(",")]
@@ -116,9 +125,20 @@ def _bench_setup(factors_csv: str):
     n = int(np.prod(factors))
     mesh = make_factorized_mesh(factors, names)
     # one link model for the modeled plans AND the engine being measured:
-    # the major axis is DCN-class (the pod analogue), the rest ICI
+    # the major axis is DCN-class (the pod analogue), the rest ICI — unless
+    # a --links file (a --calibrate output) overrides with fitted specs
     link_map = {names[i]: (DCN_LINK if i == 0 and len(factors) > 1 else ICI_LINK)
                 for i in range(len(factors))}
+    if links_path:
+        fitted = load_links(links_path, fallbacks=link_map)
+        unknown = set(fitted) - set(link_map)
+        if unknown:
+            raise SystemExit(f"--links {links_path}: axes {sorted(unknown)} "
+                             f"not in this mesh ({names})")
+        link_map.update(fitted)
+        print(f"[perf/collectives] using fitted links from {links_path}: "
+              + " ".join(f"{k}=(B={v.bandwidth_bytes:.3g},a={v.alpha_s:.3g})"
+                         for k, v in sorted(fitted.items())))
     eng = StagedCollectiveEngine(mesh, names, links=link_map)
     return factors, names, n, mesh, link_map, eng
 
@@ -134,24 +154,25 @@ def _timed(fn, x, reps=10):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def collectives_bench(factors_csv: str, sizes_kb_csv: str, reps: int = 10) -> None:
-    """Staged-collective microbenchmarks: modeled AND measured time for all
-    three execution modes (one-shot stage barriers / chunked wavefront /
-    per-hop ppermute rings) per collective per size, vs the XLA flat
-    single-shot baseline."""
+def collectives_bench(factors_csv: str, sizes_kb_csv: str, reps: int = 10,
+                      links_path=None) -> None:
+    """Staged-collective microbenchmarks off the CollectivePlan IR: for each
+    collective and size, the modeled-electrical (LinkSpec), modeled-optical
+    (Eq. 3 on the RWA-lowered schedule) and measured time of all three
+    execution modes — every number derived from the SAME plan object the
+    engine interprets — vs the XLA flat single-shot baseline."""
     import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.compat import shard_map
-    from repro.comms.staged_collectives import plan_stage_orders
+    from repro.core.cost_model import TERARACK, plan_exposure, price
 
-    factors, names, n, mesh, link_map, eng = _bench_setup(factors_csv)
+    factors, names, n, mesh, link_map, eng = _bench_setup(
+        factors_csv, links_path)
 
     for kb in (int(s) for s in sizes_kb_csv.split(",")):
         rows = kb * 256 // n * n  # f32 rows, divisible by the device count
-        shard_bytes = rows * 4 / n
-        orders = plan_stage_orders(mesh, names, shard_bytes, links=link_map)
         x = jnp.arange(rows, dtype=jnp.float32)
         xs = jax.device_put(x, NamedSharding(mesh, P(tuple(names))))
 
@@ -169,15 +190,14 @@ def collectives_bench(factors_csv: str, sizes_kb_csv: str, reps: int = 10) -> No
         }
         entry = {"ag": (eng.all_gather, xs), "rs": (eng.reduce_scatter, x),
                  "ar": (eng.all_reduce, x)}
-        scheds = {"ag": orders.ag_sched, "rs": orders.rs_sched,
-                  "ar": orders.ar_sched}
 
         for coll in ("ag", "rs", "ar"):
             fn, arg = entry[coll]
-            sched = scheds[coll]
-            modeled = {"oneshot": sched.oneshot_time_s,
-                       "chunked": sched.chunked_time_s,
-                       "perhop": sched.perhop_time_s}
+            plan = eng.plan(x, coll)
+            modeled = {m: price(plan.with_mode(m)).total_s
+                       for m in ("oneshot", "chunked", "perhop")}
+            optical = price(plan, TERARACK)
+            exposed, hidden = plan_exposure(plan)
             # jit per mode so reps measure execution, not tracing
             measured = {
                 m: _timed(jax.jit(lambda y, m=m, fn=fn: fn(y, mode=m)), arg,
@@ -191,22 +211,28 @@ def collectives_bench(factors_csv: str, sizes_kb_csv: str, reps: int = 10) -> No
             print(f"[perf/collectives] {coll} {kb}KB mesh={factors} "
                   f"modeled/measured: {parts} "
                   f"xla_oneshot={flat_us:.0f}us "
-                  f"chosen={sched.mode} chunks={sched.num_chunks} "
-                  f"stage_modes={list(sched.stage_modes)} "
-                  f"exposed={sched.exposed_bytes/2**10:.0f}KB "
-                  f"hidden={sched.hidden_bytes/2**10:.0f}KB "
+                  f"optical={optical.total_s*1e6:.1f}us"
+                  f"@{optical.steps}steps "
+                  f"chosen={plan.mode} chunks={plan.num_chunks} "
+                  f"stage_modes={list(plan.stage_modes)} "
+                  f"exposed={sum(exposed)/2**10:.0f}KB "
+                  f"hidden={sum(hidden)/2**10:.0f}KB "
                   f"(wall-clock on fake host devices; modeled times are the "
                   f"decision signal)")
 
 
-def calibrate_links(factors_csv: str, sizes_kb_csv: str, reps: int = 10) -> None:
+def calibrate_links(factors_csv: str, sizes_kb_csv: str, reps: int = 10,
+                    links_path=None) -> None:
     """Fit per-axis LinkSpec alpha/bandwidth from measured wall-clock.
 
     For each mesh axis, times the flat XLA all-gather over that axis alone
     across the ``--sizes-kb`` sweep, then least-squares the staged model
     ``t = steps·α + steps·shard/B`` over (steps, steps·shard) — replacing the
     hard-coded v5e constants with what this host actually does.  Prints the
-    fitted specs as JSON, ready to paste into a ``links=`` map.
+    fitted specs as JSON; with ``--links PATH`` also writes them there, so a
+    later ``--collectives`` run (or ``core.planner.load_links`` →
+    ``StagedCollectiveEngine(links=...)``) plans with the fitted specs —
+    the calibration feedback loop.
     """
     import jax
     import jax.numpy as jnp
@@ -264,7 +290,12 @@ def calibrate_links(factors_csv: str, sizes_kb_csv: str, reps: int = 10) -> None
                 "no measurable size dependence over this sweep "
                 "(alpha-dominated); widen --sizes-kb to identify bandwidth"
             )
-    print(json.dumps({"mesh": factors, "fitted_links": fitted}, indent=2))
+    doc = json.dumps({"mesh": factors, "fitted_links": fitted}, indent=2)
+    print(doc)
+    if links_path:
+        Path(links_path).write_text(doc + "\n")
+        print(f"[perf/calibrate] wrote {links_path} "
+              f"(feed back via --collectives --links {links_path})")
 
 
 def main():
@@ -279,6 +310,11 @@ def main():
                          "as JSON) instead of benchmarking")
     ap.add_argument("--reps", type=int, default=10,
                     help="timing repetitions for --collectives/--calibrate")
+    ap.add_argument("--links", default=None, metavar="PATH",
+                    help="with --calibrate: write the fitted LinkSpecs to "
+                         "this JSON file; with --collectives: load fitted "
+                         "specs from it and plan with them instead of the "
+                         "hard-coded v5e constants")
     ap.add_argument("--sizes-kb", default="64,1024")
     ap.add_argument("--shape")
     ap.add_argument("--variants", default="baseline")
@@ -291,9 +327,11 @@ def main():
 
     if args.collectives:
         if args.calibrate:
-            calibrate_links(args.collectives, args.sizes_kb, args.reps)
+            calibrate_links(args.collectives, args.sizes_kb, args.reps,
+                            links_path=args.links)
         else:
-            collectives_bench(args.collectives, args.sizes_kb, args.reps)
+            collectives_bench(args.collectives, args.sizes_kb, args.reps,
+                              links_path=args.links)
         return
     if not args.arch:
         ap.error("--arch is required unless --collectives is given")

@@ -30,6 +30,7 @@ class SimReport:
     time_s: float
     max_link_load: int  # peak per-(direction,link) wavelength usage in a step
     stage_steps: Tuple[int, ...]
+    stage_times_s: Tuple[float, ...] = ()  # wall time attributed per stage
 
     def speedup_vs(self, other: "SimReport") -> float:
         return other.time_s / self.time_s
@@ -75,14 +76,15 @@ def simulate(
     if check:
         for p, h in enumerate(holdings):
             assert len(h) == sched.n, f"simulator: node {p} incomplete ({len(h)}/{sched.n})"
-    t = step_time(sys, message_bytes, detailed=detailed) * len(steps)
+    per_step = step_time(sys, message_bytes, detailed=detailed)
     return SimReport(
         algorithm=str(sched.meta.get("algorithm", "?")),
         n=sched.n,
         w=sched.w,
         steps=len(steps),
         transmissions=len(sched.txs),
-        time_s=t,
+        time_s=per_step * len(steps),
         max_link_load=max_load,
         stage_steps=tuple(sched.stage_steps),
+        stage_times_s=tuple(per_step * s for s in sched.stage_steps),
     )

@@ -31,6 +31,7 @@ def _run(script: str, devices: int = 8, timeout: int = 600) -> str:
 
 
 @pytest.mark.slow
+@pytest.mark.subproc
 def test_comms_collectives_multi_device():
     out = _run("check_comms.py")
     assert "COMMS-OK" in out

@@ -5,6 +5,7 @@ from tests.test_comms import _run
 
 
 @pytest.mark.slow
+@pytest.mark.subproc
 def test_dryrun_machinery_small_mesh():
     out = _run("check_dryrun_small.py", devices=8, timeout=900)
     assert "DRYRUN-SMALL-OK" in out

@@ -1,0 +1,276 @@
+"""Unified CollectivePlan IR: builders, pricing, and the paper-simulator
+round trip (ISSUE 3 acceptance: one plan object from the OpTree scheduler
+to the JAX executor and the optical simulator)."""
+import dataclasses
+import math
+
+import pytest
+
+from repro.core import (
+    DCN_LINK,
+    ICI_LINK,
+    OpTreePlan,
+    TERARACK,
+    build_optree_schedule,
+    choose_hop_schedule,
+    expand_hops,
+    price,
+    schedule_from_ir,
+    validate_schedule,
+)
+from repro.core.cost_model import plan_exposure
+from repro.core.planner import LinkSpec, load_links
+from repro.optics import simulate
+
+
+def _sys(w):
+    return dataclasses.replace(TERARACK, wavelengths=w)
+
+
+class TestOpTreeRoundTrip:
+    """OpTreePlan.to_ir() -> schedule_from_ir reproduces the paper's
+    schedule builder transmission for transmission."""
+
+    @pytest.mark.parametrize(
+        "n,factors,w",
+        [(16, (4, 4), 2), (16, (2, 2, 2, 2), 2), (27, (3, 3, 3), 4),
+         (64, (4, 4, 4), 8), (24, (2, 3, 4), 4), (36, (6, 6), 16)],
+    )
+    def test_matches_build_optree_schedule(self, n, factors, w):
+        plan = OpTreePlan(n, factors)
+        ir = plan.to_ir(shard_bytes=4 * 2**20)
+        s_ir = schedule_from_ir(ir, w)
+        s_ref = build_optree_schedule(plan, w)
+        validate_schedule(s_ir)
+        assert s_ir.num_steps == s_ref.num_steps
+        assert s_ir.stage_steps == s_ref.stage_steps
+        assert len(s_ir.txs) == len(s_ref.txs)
+
+    def test_expand_hops_counts_match_lowering(self):
+        ir = OpTreePlan(24, (2, 3, 4)).to_ir(shard_bytes=1.0)
+        exp = expand_hops(ir)
+        n_tx = sum(len(h.transfers) for st in exp.stages for h in st.hops)
+        assert n_tx == len(schedule_from_ir(ir, 4).txs)
+        # oneshot stages hold exactly one hop; total volume telescopes
+        assert all(len(st.hops) == 1 for st in exp.stages)
+
+    def test_perhop_stage_expands_to_ring_hops(self):
+        ir = OpTreePlan(8, (8,)).to_ir(stage_modes=["perhop"])
+        ir = ir.with_mode("perhop")
+        exp = expand_hops(ir)
+        assert len(exp.stages[0].hops) == 7  # m-1 ring hops
+        # each hop: every node forwards exactly one item
+        assert all(len(h.transfers) == 8 for h in exp.stages[0].hops)
+        sched = schedule_from_ir(ir, 64)
+        validate_schedule(sched)
+        assert sched.num_steps == 7  # one step per ring hop
+
+
+class TestPriceOpticalMatchesSimulator:
+    """price(plan, OpticalSystem) must equal the wall time the step-accurate
+    simulator reports for the same plan — one plan, one price."""
+
+    @pytest.mark.parametrize("w", [2, 8, 64])
+    @pytest.mark.parametrize("mode", ["oneshot", "perhop"])
+    def test_price_equals_simulate(self, w, mode):
+        ir = OpTreePlan(16, (4, 4)).to_ir(
+            shard_bytes=4 * 2**20,
+            stage_modes=["perhop", "perhop"] if mode == "perhop" else None,
+        ).with_mode(mode)
+        sys = _sys(w)
+        rep = simulate(schedule_from_ir(ir, w), sys, ir.shard_bytes, check=True)
+        pr = price(ir, sys)
+        assert pr.total_s == pytest.approx(rep.time_s, abs=0, rel=1e-12)
+        assert pr.steps == rep.steps
+        assert pr.stage_times_s == pytest.approx(rep.stage_times_s)
+
+
+class TestEnginePlanRoundTrip:
+    """Acceptance: an engine-chosen plan (choose_hop_schedule) round-trips
+    to a Schedule that passes simulate(check=True); single-axis oneshot
+    matches build_optree_schedule's step count."""
+
+    @pytest.mark.parametrize("coll", ["ag", "rs", "ar"])
+    @pytest.mark.parametrize("shard", [64, 1 * 2**20])
+    def test_simulates_conflict_free(self, coll, shard):
+        hs = choose_hop_schedule(
+            [2, 8], [DCN_LINK, ICI_LINK], shard, collective=coll)
+        ir = hs.to_ir()
+        for mode in ("oneshot", "chunked", "perhop"):
+            sched = schedule_from_ir(ir.with_mode(mode), 64)
+            rep = simulate(sched, TERARACK, ir.shard_bytes, check=True)
+            assert rep.steps == sched.num_steps > 0
+
+    @pytest.mark.parametrize("n", [8, 16])
+    def test_single_axis_oneshot_matches_optree(self, n):
+        hs = choose_hop_schedule([n], [ICI_LINK], 1 * 2**20, collective="ag")
+        s_ir = schedule_from_ir(hs.to_ir(("x",), mode="oneshot"), 64)
+        s_ref = build_optree_schedule(OpTreePlan(n, (n,)), 64)
+        assert s_ir.num_steps == s_ref.num_steps
+        assert len(s_ir.txs) == len(s_ref.txs)
+
+    def test_rs_stage_attribution_in_execution_order(self):
+        """Regression: the RS schedule is the mirrored AG, but stage_steps
+        must pair with the PLAN's execution order — the big-factor stage
+        carries the big step count."""
+        hs = choose_hop_schedule(
+            [16, 2], [ICI_LINK, DCN_LINK], 1 * 2**20, collective="rs")
+        ir = hs.to_ir()
+        assert ir.factors == (16, 2)
+        sched = schedule_from_ir(ir.with_mode("perhop"), 64)
+        assert len(sched.stage_steps) == 2
+        assert sched.stage_steps[0] > sched.stage_steps[1]  # 15 hops vs 1
+        # ar: the RS half mirrors back too -> palindromic attribution
+        hs_ar = choose_hop_schedule(
+            [16, 2], [ICI_LINK, DCN_LINK], 1 * 2**20, collective="ar")
+        s_ar = schedule_from_ir(hs_ar.to_ir().with_mode("perhop"), 64)
+        assert s_ar.stage_steps == list(reversed(s_ar.stage_steps))
+
+    def test_factor1_stage_keeps_attribution_aligned(self):
+        """Regression: a size-1 mesh axis must yield a zero stage_steps
+        entry (not be dropped), so attribution pairs with plan.factors even
+        through the rs mirror reversal — and the optical/electrical
+        PriceReports agree on stage count."""
+        for coll in ("ag", "rs"):
+            hs = choose_hop_schedule(
+                [4, 1, 2], [ICI_LINK, ICI_LINK, DCN_LINK], 1 * 2**20,
+                collective=coll)
+            ir = hs.to_ir()
+            sched = schedule_from_ir(ir, 64)
+            assert len(sched.stage_steps) == len(ir.stages) == 3
+            one_idx = ir.factors.index(1)
+            assert sched.stage_steps[one_idx] == 0
+            po = price(ir, TERARACK)
+            pe = price(ir)
+            assert len(po.stage_times_s) == len(pe.stage_times_s) == 3
+            simulate(sched, TERARACK, ir.shard_bytes, check=True)
+
+    @pytest.mark.parametrize("n", [8, 16])
+    def test_single_axis_perhop_is_ring(self, n):
+        hs = choose_hop_schedule([n], [ICI_LINK], 8 * 2**20, collective="ag")
+        assert hs.mode == "perhop"
+        rep = simulate(
+            schedule_from_ir(hs.to_ir(("x",)), 64), TERARACK,
+            hs.shard_bytes, check=True)
+        assert rep.steps == n - 1  # classic ring: one step per hop
+
+
+class TestPriceElectricalNoDrift:
+    """price(plan) must reproduce choose_hop_schedule's modeled times for
+    every mode — the planner and the pricer share one cost model."""
+
+    @pytest.mark.parametrize("coll", ["ag", "rs", "ar"])
+    @pytest.mark.parametrize("shard", [1024, 64 * 2**10, 8 * 2**20])
+    def test_all_modes_match(self, coll, shard):
+        hs = choose_hop_schedule(
+            [2, 16], [DCN_LINK, ICI_LINK], shard, collective=coll)
+        ir = hs.to_ir()
+        want = {"oneshot": hs.oneshot_time_s, "chunked": hs.chunked_time_s,
+                "perhop": hs.perhop_time_s}
+        for mode, t in want.items():
+            got = price(ir.with_mode(mode))
+            assert got.total_s == pytest.approx(t, rel=1e-12), mode
+        # the plan's own mode is the planner's pick
+        assert price(ir).total_s == pytest.approx(hs.time_s, rel=1e-12)
+        # exposure accounting carried over unchanged
+        exposed, hidden = plan_exposure(ir)
+        assert sum(exposed) == pytest.approx(hs.exposed_bytes)
+        assert sum(hidden) == pytest.approx(hs.hidden_bytes)
+
+    def test_electrical_needs_links(self):
+        ir = OpTreePlan(16, (4, 4)).to_ir()
+        with pytest.raises(ValueError, match="LinkSpec"):
+            price(ir)
+
+
+class TestLinkSpecJson:
+    def test_round_trip(self):
+        spec = LinkSpec("ici", 50e9, 1e-6)
+        assert LinkSpec.from_json(spec.to_json()) == spec
+
+    def test_calibrate_output_null_bandwidth_falls_back(self):
+        d = {"name": "s0", "bandwidth_bytes": None, "alpha_s": 2e-4,
+             "hardcoded": {"bandwidth_bytes": 6.25e9, "alpha_s": 1e-5}}
+        spec = LinkSpec.from_json(d)
+        assert spec.bandwidth_bytes == 6.25e9 and spec.alpha_s == 2e-4
+        fb = LinkSpec("x", 1e9, 1e-7)
+        assert LinkSpec.from_json(d, fallback=fb).bandwidth_bytes == 1e9
+
+    def test_load_links_calibrate_format(self, tmp_path):
+        import json
+
+        doc = {"mesh": [2, 4], "fitted_links": {
+            "s0": {"name": "s0", "bandwidth_bytes": 1e9, "alpha_s": 1e-5},
+            "s1": {"name": "s1", "bandwidth_bytes": None, "alpha_s": 2e-6,
+                   "hardcoded": {"bandwidth_bytes": 50e9, "alpha_s": 1e-6}},
+        }}
+        p = tmp_path / "fitted.json"
+        p.write_text(json.dumps(doc))
+        links = load_links(p)
+        assert links["s0"] == LinkSpec("s0", 1e9, 1e-5)
+        assert links["s1"].bandwidth_bytes == 50e9
+
+
+class TestIRValidation:
+    def test_bad_mode_rejected(self):
+        ir = OpTreePlan(4, (4,)).to_ir()
+        with pytest.raises(ValueError):
+            ir.with_mode("warp")
+
+    def test_factors_must_cover_n(self):
+        from repro.core.plan_ir import CollectivePlan, PlanStage
+
+        with pytest.raises(ValueError, match="cover"):
+            CollectivePlan("ag", 8, 1.0,
+                           (PlanStage(4, "oneshot", 1.0),))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: the IR round trip holds for arbitrary factorizations
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        factors=st.lists(st.integers(min_value=2, max_value=5),
+                         min_size=1, max_size=3),
+        w=st.integers(min_value=1, max_value=64),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_ir_roundtrip_property(factors, w):
+        """For any single-ring factorization: schedule_from_ir(to_ir())
+        matches build_optree_schedule in steps and transmissions, and
+        price(plan, optical) matches the simulator wall time."""
+        n = math.prod(factors)
+        plan = OpTreePlan(n, tuple(factors))
+        ir = plan.to_ir(shard_bytes=2**20)
+        s_ir = schedule_from_ir(ir, w)
+        s_ref = build_optree_schedule(plan, w)
+        validate_schedule(s_ir)
+        assert s_ir.num_steps == s_ref.num_steps
+        assert len(s_ir.txs) == len(s_ref.txs)
+        sys = _sys(w)
+        rep = simulate(s_ir, sys, ir.shard_bytes, check=True)
+        assert price(ir, sys).total_s == pytest.approx(rep.time_s, rel=1e-12)
+
+    @given(
+        factors=st.lists(st.integers(min_value=2, max_value=5),
+                         min_size=1, max_size=3),
+        shard=st.floats(min_value=256.0, max_value=1e8),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_engine_plan_simulates_property(factors, shard):
+        """Any engine-chosen hop schedule lowers to a conflict-free,
+        causally valid, complete schedule."""
+        links = [DCN_LINK] + [ICI_LINK] * (len(factors) - 1)
+        hs = choose_hop_schedule(factors, links, shard, collective="ag")
+        sched = schedule_from_ir(hs.to_ir(), 64)
+        validate_schedule(sched)
+        simulate(sched, TERARACK, shard, check=True)
