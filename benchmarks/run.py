@@ -1,5 +1,8 @@
 """Benchmark harness — one function per paper table/figure.
 
+(The tp_block section spins up 8 fake host devices; the flag must be set
+before jax initializes, hence the setdefault at import.)
+
 Prints ``name,us_per_call,derived`` CSV rows: ``us_per_call`` measures the
 scheduling computation itself (OpTree is a scheduling algorithm — its own
 cost matters); ``derived`` carries the paper-comparable numbers.
@@ -14,13 +17,21 @@ cost matters); ``derived`` carries the paper-comparable numbers.
   perhop  — hop-schedule mode decisions + collective-matmul fusion model
   ir      — unified CollectivePlan IR: one engine plan priced electrical +
             optical and validated in the conflict-checked simulator
+  tp_block — explicit-TP transformer block on context collectives
+            (repro.comms.api) vs the GSPMD path: modeled electrical +
+            optical + measured, off the same CollectivePlan objects
   duality — optics-model step counts for RS/AR vs the all-gather numbers
             (+ per-stage wall-time attribution)
   roofline — §Roofline table from runs/dryrun (skips if absent)
 """
+import os
 import sys
 import time
 from pathlib import Path
+
+# only affects the CPU host platform (tp_block's fake-device mesh); real
+# accelerator platforms ignore it and sections keep measuring there
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
@@ -312,6 +323,30 @@ def ir():
                  f"stage_ms=" + "/".join(f"{t*1e3:.3f}" for t in rep.stage_times_s))
 
 
+def tp_block():
+    """Explicit-TP transformer block driven entirely by the context-scoped
+    collectives API vs the GSPMD path — the ROADMAP "full shard_map
+    transformer block" benchmark.  Modeled-electrical, modeled-optical and
+    measured wall-clock all come off the SAME CollectivePlan objects the
+    context cached while the block ran."""
+    from repro.launch.perf import tp_block_bench
+
+    try:
+        rows = tp_block_bench("2,4", reps=3)
+    except (RuntimeError, ValueError) as e:  # e.g. too few host devices
+        _row("tp_block/status", 0.0, f"SKIP({e})")
+        return
+    for r in rows:
+        _row(f"tp_block/{r['variant']}", 0.0,
+             f"plans={r['plans']};issued={r['issued']};"
+             f"modes={'/'.join(r['modes'])};"
+             f"modeled_elec_us={r['modeled_elec_us']:.1f};"
+             f"modeled_opt_us={r['modeled_opt_us']:.1f};"
+             f"measured_explicit_us={r['measured_tp_us']:.0f};"
+             f"measured_gspmd_us={r['measured_gspmd_us']:.0f};"
+             f"allclose={r['allclose']}")
+
+
 def roofline():
     from repro.launch.roofline import analyze_dir
 
@@ -338,6 +373,7 @@ def main() -> None:
     collectives()
     perhop()
     ir()
+    tp_block()
     duality()
     roofline()
 

@@ -3,8 +3,12 @@
 1. Plan the optimal k-stage m-ary tree for an optical ring (paper Thm 2).
 2. Build the transmission-level schedule, validate it, simulate its time.
 3. Compare against Ring / Neighbor-Exchange / one-stage baselines.
-4. Run the TPU-adapted staged all-gather on 8 (fake) devices and check it
-   is bit-identical to XLA's one-shot collective.
+4. Install a ``comm_context`` over 8 (fake) devices and run the whole
+   gather-shaped family through the one context-scoped API
+   (``repro.comms.api``) — bit-identical to XLA's one-shot collectives,
+   with the planner's CollectivePlans cached on the context.
+5. Swap in a fitted LinkSpec table (``ctx.update_links``) and watch the
+   cache invalidate + re-plan — the auto-calibration loop.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -52,19 +56,38 @@ def optical_demo():
 
 def tpu_demo():
     import jax
+    import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    from repro.comms import make_factorized_mesh, optree_all_gather
+    from repro.comms import api, comm_context, make_factorized_mesh
+    from repro.core.planner import LinkSpec
 
-    print("\n== TPU adaptation: staged all-gather on a pod x data mesh ==")
+    print("\n== TPU adaptation: context-scoped collectives on a pod x data mesh ==")
     mesh = make_factorized_mesh([2, 4], ["pod", "data"])
+    names = ("pod", "data")
     x = np.arange(32, dtype=np.float32).reshape(16, 2)
-    xs = jax.device_put(x, NamedSharding(mesh, P(("pod", "data"))))
-    got = optree_all_gather(xs, mesh, ("pod", "data"))
-    assert np.array_equal(np.asarray(got), x)
-    print(f"devices={len(jax.devices())}, mesh={dict(mesh.shape)}")
-    print("optree_all_gather == global array:", np.array_equal(np.asarray(got), x))
-    print("stage order planned slow-axis (pod) first; payload grows after.")
+    xs = jax.device_put(x, NamedSharding(mesh, P(names)))
+
+    with comm_context(mesh, names) as ctx:
+        # one API for the whole gather-shaped family; the context plans,
+        # caches and executes CollectivePlans behind each call
+        g = api.all_gather(xs)                        # == all_gather(tiled)
+        s = api.reduce_scatter(jnp.asarray(x))        # == psum_scatter
+        r = api.all_reduce(jnp.asarray(x), axis=0)    # == psum
+        print(f"devices={len(jax.devices())}, mesh={dict(mesh.shape)}")
+        print("all_gather == global array:", np.array_equal(np.asarray(g), x))
+        print("reduce_scatter == 8*x:     ", np.array_equal(np.asarray(s), 8 * x))
+        print("all_reduce == 8*x:         ", np.array_equal(np.asarray(r), 8 * x))
+        # same key the all_gather above cached under -> a cache HIT
+        plan = ctx.plan("ag", x.nbytes / 8, shape=xs.shape, dtype=xs.dtype)
+        print(f"cached AG plan: order={plan.axes} mode={plan.mode} "
+              f"(slow pod axis first; payload grows after)")
+        print(f"cache: {ctx.cache_stats}")
+
+        # auto-calibration: a fitted links table invalidates + re-plans
+        ctx.update_links({"pod": LinkSpec("dcn-fitted", 1e9, 5e-5)})
+        api.all_gather(xs)
+        print(f"after update_links: {ctx.cache_stats} (re-planned, same context)")
 
 
 if __name__ == "__main__":

@@ -7,6 +7,14 @@ Profiles:
                   hundred steps on real accelerators)
 
 Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
+
+``--tp-demo`` first runs one explicit tensor-parallel transformer block
+over all visible devices through the context-scoped collectives API
+(``repro.comms.api.comm_context`` + ``models.model.transformer_block_tp``)
+and checks it against the single-device reference block — the same
+machinery `launch/train.py --zero1 explicit` and `launch/perf.py
+--tp-block` use at scale.  Spin up fake devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 """
 import argparse
 import dataclasses
@@ -37,12 +45,59 @@ def build_config(size: str) -> ModelConfig:
     )
 
 
+def tp_demo():
+    """One explicit-TP transformer block on the context-scoped API vs the
+    reference block, over every visible device."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.compat import shard_map
+    from repro.comms import comm_context, make_factorized_mesh
+    from repro.models.model import (
+        _layer_init, transformer_block_ref, transformer_block_tp,
+        tp_block_specs,
+    )
+
+    n = len(jax.devices())
+    cfg = dataclasses.replace(
+        build_config("small"), num_heads=n, num_kv_heads=n, head_dim=16,
+        d_model=16 * n, d_ff=32 * n, qk_norm=False)
+    layer = _layer_init(jax.random.key(0), cfg, dtype=jnp.float32)
+    B, S = 2, 4 * n
+    x = jax.random.normal(jax.random.key(1), (B, S, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S)).astype(jnp.int32)
+    ref = transformer_block_ref(layer, cfg, x, positions=pos)
+
+    mesh = make_factorized_mesh([n], ["tp"])
+    with comm_context(mesh, ("tp",)) as ctx:
+        for sp in (False, True):
+            x_spec, l_spec = tp_block_specs(layer, ("tp",),
+                                            sequence_parallel=sp)
+            fn = shard_map(
+                lambda lx, ll, sp=sp: transformer_block_tp(
+                    ll, cfg, lx, positions=pos, sequence_parallel=sp),
+                mesh=mesh, in_specs=(x_spec, l_spec), out_specs=x_spec)
+            got = jax.jit(fn)(x, layer)
+            ok = np.allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+            print(f"[tp-demo] {'SP' if sp else 'TP'} block over {n} device(s) "
+                  f"== reference: {ok}")
+            assert ok
+        print(f"[tp-demo] context cached {len(ctx.plans())} CollectivePlans "
+              f"({ctx.cache_stats})")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--size", choices=list(PROFILES), default="small")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--tp-demo", action="store_true",
+                    help="run the explicit-TP block demo (context-scoped "
+                         "collectives API) before training")
     args = ap.parse_args()
+
+    if args.tp_demo:
+        tp_demo()
 
     prof = PROFILES[args.size]
     cfg = build_config(args.size)

@@ -13,6 +13,10 @@
 #                                  # plan -> schedule_from_ir -> conflict-
 #                                  # checked simulate, plus the 8-device
 #                                  # IR-interpreting-executor subprocess check
+#   scripts/ci.sh --api-smoke      # context-scoped collectives API: the
+#                                  # tests/test_comms_api.py suite + the
+#                                  # explicit-TP block vs GSPMD benchmark
+#                                  # on 8 host devices
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -20,9 +24,29 @@ export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# grep gate: model/optimizer code must go through the context-scoped API
+# (repro.comms.api), never construct engines directly again.  Runs before
+# lane dispatch so EVERY lane enforces it.
+api_grep_gate() {
+    if grep -rn "StagedCollectiveEngine(" src/repro/models src/repro/optim; then
+        echo "CI FAIL: src/repro/models|optim construct StagedCollectiveEngine" \
+             "directly; route through repro.comms.api / comm_context" >&2
+        exit 1
+    fi
+}
+api_grep_gate
+
 if [[ "${1:-}" == "--fast" ]]; then
     shift
     exec python -m pytest -x -q -m "not subproc" "$@"
+fi
+
+if [[ "${1:-}" == "--api-smoke" ]]; then
+    shift
+    python -m pytest -x -q tests/test_comms_api.py
+    python -m repro.launch.perf --tp-block 2,4 --reps 2 "$@"
+    echo "CI api-smoke OK"
+    exit 0
 fi
 
 if [[ "${1:-}" == "--ir-smoke" ]]; then

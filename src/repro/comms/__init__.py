@@ -1,4 +1,9 @@
-"""JAX-native staged collectives — the OpTree technique on a TPU mesh."""
+"""JAX-native staged collectives — the OpTree technique on a TPU mesh.
+
+User-facing surface: ``comm_context`` + the ``api`` module ops (one
+context-scoped entry point over the CollectivePlan IR); everything else
+here is internals or deprecation shims.
+"""
 from .mesh_utils import make_factorized_mesh  # noqa: F401
 from .staged_allgather import (  # noqa: F401
     staged_all_gather,
@@ -21,6 +26,13 @@ from .ring_executor import (  # noqa: F401
     ring_reduce_scatter_stage,
 )
 from .plan_executor import execute_plan  # noqa: F401
+from . import api  # noqa: F401
+from .api import (  # noqa: F401
+    CommContext,
+    PlanPolicy,
+    comm_context,
+    current_context,
+)
 from .collectives import (  # noqa: F401
     ring_all_gather,
     neighbor_exchange_all_gather,

@@ -1,0 +1,754 @@
+"""Context-scoped collectives API — ONE entry surface for every
+gather-shaped collective (ISSUE 4).
+
+After three generations of entry points (``staged_*`` primitives, the
+``StagedCollectiveEngine`` methods, ``perhop_*``, direct
+``allgather_matmul``), callers still threaded mesh, axis names, LinkSpecs,
+execution mode and fusion flags by hand at every site.  This module
+collapses that surface to the PCCL-style framework shape: install a
+:class:`CommContext` once, call the module-level ops anywhere —
+
+    with comm_context(mesh, ("pod", "tp")) as ctx:
+        y = api.all_reduce(x)                 # outside shard_map: wraps it
+        fn = shard_map(lambda v: api.all_reduce(v), ...)   # or inside one
+
+Every op dispatches through ``plan_collectives`` → the unified
+:class:`~repro.core.plan_ir.CollectivePlan` IR → ``execute_plan``; the
+POLICY (mode / chunking / fusion / stage-order overrides) lives on the
+context (:class:`PlanPolicy`), not at call sites — SWOT's argument that
+reconfiguration/overlap decisions belong to the runtime.
+
+Plans are cached per context, keyed
+``(collective, shape, dtype, axes, policy, links_fingerprint)``.  The
+links fingerprint makes the cache **auto-invalidating**: feeding a fitted
+calibration file back (``ctx.update_links("fitted.json")``) drops every
+stale entry and the next call re-plans with the fitted specs — closing the
+ROADMAP auto-calibration loop without constructing a new engine.
+``ctx.cache_stats`` (hits / misses / invalidated) makes the re-plan
+observable.
+
+Inside vs outside shard_map is detected at trace time: if the context's
+axis names are bound in the ambient axis env, ops run the plan directly on
+the local shard; otherwise they wrap themselves in shard_map over the
+context's mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import hashlib
+import math
+import threading
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..compat import axis_size, shard_map
+from ..core.plan_ir import CollectivePlan
+from ..core.planner import (
+    LinkSpec,
+    load_links,
+    matmul_block_time,
+    plan_collective_matmul,
+)
+
+__all__ = [
+    "PlanPolicy",
+    "CacheStats",
+    "CommContext",
+    "comm_context",
+    "current_context",
+    "legacy_chunks",
+    "legacy_context",
+    "links_fingerprint",
+    "all_gather",
+    "reduce_scatter",
+    "all_reduce",
+    "allgather_matmul",
+    "matmul_reduce_scatter",
+]
+
+
+# --------------------------------------------------------------------------
+# policy + context
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PlanPolicy:
+    """Per-context planning/execution overrides.
+
+    ``mode``       — force the plan-level execution mode (``oneshot`` /
+                     ``chunked`` / ``perhop``); None follows the planner.
+    ``num_chunks`` — force the wavefront chunk count (implies ``chunked``
+                     when > 1); None follows the planner.
+    ``max_chunks`` — planner search bound for the chunk decision.
+    ``fuse``       — collective-matmul fusion: True / False / ``"auto"``
+                     (the ``plan_collective_matmul`` overlap model decides
+                     per (shape, mesh) point).
+    ``order``      — force the all-gather stage order (axis names); the
+                     reduce-scatter order is its reverse (duality), the
+                     all-reduce chain is RS-order + reversed.  None lets
+                     the cost model brute-force the permutation.
+    """
+
+    mode: Optional[str] = None
+    num_chunks: Optional[int] = None
+    max_chunks: int = 8
+    fuse: object = "auto"
+    order: Optional[Tuple[str, ...]] = None
+
+    def __post_init__(self):
+        if self.mode is not None and self.mode not in ("oneshot", "chunked", "perhop"):
+            raise ValueError(f"policy mode must be oneshot|chunked|perhop, "
+                             f"got {self.mode!r}")
+        if self.order is not None:
+            object.__setattr__(self, "order", tuple(self.order))
+
+    def merged(self, **overrides) -> "PlanPolicy":
+        """A copy with the given fields replaced (nesting semantics)."""
+        return dataclasses.replace(self, **overrides)
+
+
+@dataclass
+class CacheStats:
+    """Plan-cache counters; ``invalidated`` counts entries dropped by a
+    links-table change (``CommContext.update_links``)."""
+
+    hits: int = 0
+    misses: int = 0
+    invalidated: int = 0
+
+
+def links_fingerprint(links: Optional[Dict[str, LinkSpec]]) -> str:
+    """Stable fingerprint of an axis→LinkSpec table — part of every plan
+    cache key, so swapping the table re-keys (invalidates) every plan."""
+    if not links:
+        return "default"
+    items = sorted(
+        (a, l.name, float(l.bandwidth_bytes), float(l.alpha_s))
+        for a, l in links.items()
+    )
+    return hashlib.sha1(repr(items).encode()).hexdigest()[:16]
+
+
+class CommContext:
+    """One mesh + axis set + LinkSpec table + policy = one collectives
+    scope.  All module-level ops resolve to the innermost installed context
+    (or an explicit ``ctx=`` handle) and share its plan cache.
+
+    ``mesh`` may be None for trace-time-only contexts (ops then work only
+    inside an existing shard_map, where axis sizes come from the ambient
+    axis env).  ``axis_sizes`` overrides size lookup for meshless planning
+    (tests / offline planning).
+    """
+
+    def __init__(
+        self,
+        mesh=None,
+        axis_names: Optional[Sequence[str]] = None,
+        *,
+        links: Optional[Dict[str, LinkSpec]] = None,
+        policy: Optional[PlanPolicy] = None,
+        axis_sizes: Optional[Dict[str, int]] = None,
+    ):
+        self.mesh = mesh
+        self.axis_names = tuple(axis_names) if axis_names is not None else None
+        self.links = dict(links) if links else None
+        self.policy = policy or PlanPolicy()
+        self.axis_sizes = dict(axis_sizes) if axis_sizes else None
+        self._links_fp = links_fingerprint(self.links)
+        self._cache: Dict[tuple, CollectivePlan] = {}
+        self._counts: Dict[tuple, int] = {}
+        self.cache_stats = CacheStats()
+
+    # -- links / auto-calibration -----------------------------------------
+    def update_links(self, links: Union[str, Dict[str, LinkSpec]],
+                     *, merge: bool = True) -> Dict[str, LinkSpec]:
+        """Swap (or merge into) the LinkSpec table and invalidate every
+        cached plan — the auto-calibration path: point this at a
+        ``launch/perf.py --calibrate`` output and the very next op call
+        re-plans with the fitted specs, same context, same cache.
+        """
+        if isinstance(links, (str,)) or hasattr(links, "read_text"):
+            expect = self.axis_names
+            links = load_links(links, fallbacks=self.links,
+                               expect_axes=expect, allow_missing=True)
+        table = dict(self.links) if (merge and self.links) else {}
+        table.update(links)
+        self.links = table
+        new_fp = links_fingerprint(self.links)
+        if new_fp != self._links_fp:
+            self.cache_stats.invalidated += len(self._cache)
+            self._cache.clear()
+            self._counts.clear()
+            self._links_fp = new_fp
+        return self.links
+
+    @property
+    def links_fp(self) -> str:
+        return self._links_fp
+
+    def plans(self) -> List[CollectivePlan]:
+        """Snapshot of every cached CollectivePlan — the same objects the
+        ops execute, priceable (``core.cost_model.price``) and lowerable to
+        the optical simulator (``core.schedule.schedule_from_ir``)."""
+        return list(self._cache.values())
+
+    def plan_usage(self) -> List[Tuple[CollectivePlan, int]]:
+        """(plan, times-requested) pairs — distinguishes the deduplicated
+        cache entries from how often each was actually issued (e.g. a TP
+        block's two all-reduces share one entry but count twice)."""
+        return [(p, self._counts.get(k, 0)) for k, p in self._cache.items()]
+
+    # -- sizes -------------------------------------------------------------
+    def _names(self, axes: Optional[Sequence[str]]) -> Tuple[str, ...]:
+        names = tuple(axes) if axes is not None else self.axis_names
+        if not names:
+            raise ValueError(
+                "no collective axes: pass axes=... or install a context "
+                "with axis_names (comm_context(mesh, names))")
+        return names
+
+    def _sizes(self, names: Tuple[str, ...]) -> Dict[str, int]:
+        if self.axis_sizes is not None:
+            known = {n: self.axis_sizes[n] for n in names if n in self.axis_sizes}
+            if len(known) == len(names):
+                return known
+        if self.mesh is not None:
+            return {n: self.mesh.shape[n] for n in names}
+        # trace-time: inside shard_map the ambient axis env knows the sizes
+        return {n: axis_size(n) for n in names}
+
+    # -- planning (cached) ---------------------------------------------------
+    def plan(
+        self,
+        collective: str,
+        shard_bytes: float,
+        *,
+        axes: Optional[Sequence[str]] = None,
+        shape: Optional[Tuple[int, ...]] = None,
+        dtype=None,
+    ) -> CollectivePlan:
+        """The policy-resolved CollectivePlan for one (collective, payload)
+        point.  ``shard_bytes`` is the scattered-end payload, as everywhere
+        in the planner.  Cached on ``(collective, shape, dtype, axes,
+        policy, links_fingerprint)``; a links change re-keys everything.
+        """
+        if collective not in ("ag", "rs", "ar"):
+            raise ValueError(f"collective must be ag|rs|ar, got {collective!r}")
+        names = self._names(axes)
+        sizes = self._sizes(names)
+        # shard_bytes AND the resolved axis sizes are always part of the
+        # key: the same (shape, dtype) can mean a local shard inside
+        # shard_map or a global array outside it, and the same axis NAME
+        # can have a different size on another mesh (the shared default
+        # context sees many) — either collision would serve a stale plan
+        key = (
+            collective,
+            float(shard_bytes),
+            tuple(sizes[n] for n in names),
+            tuple(shape) if shape is not None else None,
+            str(dtype) if dtype is not None else None,
+            names,
+            self.policy,
+            self._links_fp,
+        )
+        self._counts[key] = self._counts.get(key, 0) + 1
+        cached = self._cache.get(key)
+        if cached is not None:
+            self.cache_stats.hits += 1
+            return cached
+        self.cache_stats.misses += 1
+        plan = self._plan_uncached(collective, float(shard_bytes), names, sizes)
+        self._cache[key] = plan
+        return plan
+
+    def _plan_uncached(
+        self, collective: str, shard_bytes: float, names: Tuple[str, ...],
+        sizes: Dict[str, int],
+    ) -> CollectivePlan:
+        from .staged_collectives import plan_collectives  # lazy: cycle
+
+        pol = self.policy
+        if pol.order is not None:
+            plan = self._plan_forced_order(collective, shard_bytes, names, sizes)
+        else:
+            plan = plan_collectives(
+                sizes, names, shard_bytes, links=self.links,
+                max_chunks=pol.max_chunks,
+            )[collective]
+        if pol.mode is not None:
+            plan = plan.with_mode(pol.mode)
+        if pol.num_chunks is not None:
+            plan = plan.with_chunks(pol.num_chunks)
+            if pol.num_chunks > 1 and plan.mode != "chunked":
+                plan = plan.with_mode("chunked")
+        return plan
+
+    def _plan_forced_order(self, collective, shard_bytes, names, sizes):
+        """Policy-forced stage order: build the schedule for exactly this
+        AG order (RS runs the reverse; AR is RS-order + its reverse)."""
+        from ..core.planner import choose_hop_schedule
+        from .staged_allgather import link_for_axis
+
+        ag_order = tuple(self.policy.order)
+        if sorted(ag_order) != sorted(names):
+            raise ValueError(
+                f"policy order {ag_order} must permute the axes {names}")
+        rs_order = tuple(reversed(ag_order))
+        order = {"ag": ag_order, "rs": rs_order,
+                 "ar": rs_order + tuple(reversed(rs_order))}[collective]
+        exec_order = order if collective != "ar" else rs_order
+        factors = [sizes[n] for n in exec_order]
+        links = [link_for_axis(n, self.links) for n in exec_order]
+        sched = choose_hop_schedule(
+            factors, links, shard_bytes,
+            max_chunks=self.policy.max_chunks, collective=collective,
+        )
+        plan = sched.to_ir(order)
+        return dataclasses.replace(
+            plan, meta={**plan.meta, "axis_names": tuple(names)})
+
+    # -- matmul fusion decision ---------------------------------------------
+    def decide_fuse(
+        self,
+        names: Tuple[str, ...],
+        rows: int,
+        d_in: int,
+        d_out: int,
+        itemsize: int,
+        *,
+        n_matmuls: int = 1,
+        fuse: object = None,
+    ) -> bool:
+        """Collective-matmul fuse decision under this context's policy:
+        explicit True/False wins, ``"auto"`` asks the overlap model.
+        ``rows`` is the per-block row count (one scattered shard's worth).
+        """
+        from .staged_allgather import link_for_axis
+
+        fuse = self.policy.fuse if fuse is None else fuse
+        if fuse != "auto":
+            return bool(fuse)
+        sizes = self._sizes(names)
+        factors = [sizes[n] for n in names]
+        lks = [link_for_axis(n, self.links) for n in names]
+        t_blk = n_matmuls * matmul_block_time(rows, d_in, d_out)
+        return plan_collective_matmul(
+            factors, lks, rows * d_in * itemsize, t_blk).fuse
+
+
+# --------------------------------------------------------------------------
+# context stack
+# --------------------------------------------------------------------------
+
+_STATE = threading.local()
+
+# fallback scope for legacy axis_names-only call sites (no installed
+# context): meshless, default links — usable inside shard_map only, but its
+# cache persists so repeated traces reuse plans
+_DEFAULT = CommContext()
+
+
+def _stack() -> List[CommContext]:
+    if not hasattr(_STATE, "stack"):
+        _STATE.stack = []
+    return _STATE.stack
+
+
+def current_context(default: object = _DEFAULT) -> Optional[CommContext]:
+    """The innermost installed context (the meshless default scope when
+    none is installed; pass ``default=None`` to get None instead)."""
+    s = _stack()
+    return s[-1] if s else default
+
+
+@contextlib.contextmanager
+def comm_context(
+    mesh=None,
+    axis_names: Optional[Sequence[str]] = None,
+    *,
+    links: Optional[Dict[str, LinkSpec]] = None,
+    policy: Optional[PlanPolicy] = None,
+    axis_sizes: Optional[Dict[str, int]] = None,
+    **policy_overrides,
+):
+    """Install a :class:`CommContext` for the dynamic extent of the block.
+
+    Nesting inherits: omitted mesh / axis_names / links come from the
+    enclosing context, and ``policy_overrides`` (mode=, num_chunks=,
+    max_chunks=, fuse=, order=) merge into the enclosing policy — so
+
+        with comm_context(mesh, ("pod", "tp")):
+            with comm_context(mode="perhop"):       # same scope, forced mode
+                ...
+
+    Yields the context handle (usable as an explicit ``ctx=`` argument
+    after the block exits, e.g. to keep its plan cache warm).
+    """
+    parent = current_context(None)
+    if parent is not None:
+        mesh = mesh if mesh is not None else parent.mesh
+        axis_names = axis_names if axis_names is not None else parent.axis_names
+        links = links if links is not None else parent.links
+        axis_sizes = axis_sizes if axis_sizes is not None else parent.axis_sizes
+        base_policy = policy or parent.policy
+    else:
+        base_policy = policy or PlanPolicy()
+    if policy_overrides:
+        base_policy = base_policy.merged(**policy_overrides)
+    ctx = CommContext(mesh, axis_names, links=links, policy=base_policy,
+                      axis_sizes=axis_sizes)
+    _stack().append(ctx)
+    try:
+        yield ctx
+    finally:
+        _stack().pop()
+
+
+def _resolve(ctx: Optional[CommContext], axes) -> Tuple[CommContext, Tuple[str, ...]]:
+    c = ctx if ctx is not None else current_context()
+    return c, c._names(axes)
+
+
+def legacy_chunks(num_chunks: Optional[int]) -> Optional[int]:
+    """Normalize the legacy entry points' ``num_chunks`` (default 1 meaning
+    "no chunking") to the api's override convention (None = follow the
+    plan) — one spelling for every shim."""
+    return num_chunks if num_chunks is not None and num_chunks > 1 else None
+
+
+_LEGACY: Dict[tuple, CommContext] = {}
+
+
+def legacy_context(axes, links) -> Optional[CommContext]:
+    """Memoized meshless context for legacy ``links=`` call sites (model
+    shims) — one context per (axes, links table), so repeated traces reuse
+    its plan cache instead of re-planning from scratch.  Returns None when
+    a context is already installed (the installed one wins)."""
+    if links is None or current_context(None) is not None:
+        return None
+    key = (tuple(axes) if axes is not None else None, links_fingerprint(links))
+    ctx = _LEGACY.get(key)
+    if ctx is None:
+        ctx = _LEGACY[key] = CommContext(axis_names=axes, links=links)
+    return ctx
+
+
+def _in_axis_env(names: Sequence[str]) -> bool:
+    """True when every name is bound in the ambient axis env — i.e. we are
+    tracing inside a shard_map body over these axes."""
+    try:
+        for n in names:
+            axis_size(n)
+        return True
+    except Exception:
+        return False
+
+
+# --------------------------------------------------------------------------
+# plan resolution helpers
+# --------------------------------------------------------------------------
+
+def _fit_plan(plan: CollectivePlan, length: int, granularity: int) -> CollectivePlan:
+    """Clamp the chunk count to what divides the payload; a fit that
+    collapses to one chunk normalizes the mode back to ``oneshot``
+    (``CollectivePlan.with_chunks``) so a plan never executes one-shot
+    while labeled ``chunked``."""
+    from .staged_collectives import fit_chunks  # lazy: cycle
+
+    if plan.num_chunks > 1:
+        plan = plan.with_chunks(fit_chunks(length, granularity, plan.num_chunks))
+    return plan
+
+
+def _apply_overrides(
+    plan: CollectivePlan, mode: Optional[str], num_chunks: Optional[int]
+) -> CollectivePlan:
+    """Per-call mode/chunk overrides on top of the cached (policy-resolved)
+    plan."""
+    if mode is not None:
+        plan = plan.with_mode(mode)
+    if num_chunks is not None:
+        plan = plan.with_chunks(num_chunks)
+        if num_chunks > 1 and plan.mode != "chunked":
+            plan = plan.with_mode("chunked")
+    return plan
+
+
+def _local_plan(ctx, collective, names, x, axis, *, mode, num_chunks, scattered):
+    """Plan + runtime fit for an inside-shard_map call.  ``scattered`` —
+    whether ``x`` is already the scattered shard (AG input) or the
+    full-length local array (RS/AR input)."""
+    sizes = {n: axis_size(n) for n in names}
+    n_total = math.prod(sizes.values())
+    nbytes = x.size * x.dtype.itemsize
+    shard_bytes = nbytes if scattered else nbytes / n_total
+    plan = ctx.plan(collective, shard_bytes, axes=names,
+                    shape=tuple(x.shape), dtype=x.dtype)
+    plan = _apply_overrides(plan, mode, num_chunks)
+    granularity = 1 if scattered else n_total
+    return _fit_plan(plan, x.shape[axis], granularity), n_total
+
+
+def _require_mesh(ctx: CommContext, op: str):
+    if ctx.mesh is None:
+        raise ValueError(
+            f"{op} was called outside shard_map and the active CommContext "
+            f"has no mesh; install one via comm_context(mesh, axis_names)")
+    return ctx.mesh
+
+
+def _wrap(ctx, fn, x, in_spec, out_spec):
+    mesh = _require_mesh(ctx, "this op")
+    return shard_map(fn, mesh=mesh, in_specs=in_spec, out_specs=out_spec)(x)
+
+
+def _axis_spec(ndim: int, axis: int, names) -> P:
+    spec = [None] * ndim
+    spec[axis] = names
+    return P(*spec)
+
+
+# --------------------------------------------------------------------------
+# module-level ops
+# --------------------------------------------------------------------------
+
+def all_gather(
+    x: jax.Array,
+    *,
+    axis: int = 0,
+    axes: Optional[Sequence[str]] = None,
+    ctx: Optional[CommContext] = None,
+    mode: Optional[str] = None,
+    num_chunks: Optional[int] = None,
+) -> jax.Array:
+    """Context-planned staged all-gather over the context axes.
+
+    Inside shard_map ``x`` is the local shard (returns the full gather,
+    bit-identical to ``lax.all_gather(tiled=True)``); outside, ``x`` is the
+    globally-sharded array and the op wraps itself in shard_map over the
+    context's mesh.  ``mode``/``num_chunks`` override the context policy
+    for this call."""
+    from .plan_executor import execute_plan  # lazy: cycle
+
+    ctx, names = _resolve(ctx, axes)
+    if axis < 0:
+        axis += x.ndim
+    if _in_axis_env(names):
+        plan, _ = _local_plan(ctx, "ag", names, x, axis,
+                              mode=mode, num_chunks=num_chunks, scattered=True)
+        return execute_plan(x, plan, axis=axis)
+
+    n = math.prod(ctx._sizes(names).values())
+    shard_bytes = x.size * x.dtype.itemsize / n
+    plan = ctx.plan("ag", shard_bytes, axes=names,
+                    shape=tuple(x.shape), dtype=x.dtype)
+    plan = _apply_overrides(plan, mode, num_chunks)
+    plan = _fit_plan(plan, x.shape[axis] // n, 1)
+    return _wrap(ctx, lambda y: execute_plan(y, plan, axis=axis), x,
+                 _axis_spec(x.ndim, axis, names), P())
+
+
+def reduce_scatter(
+    x: jax.Array,
+    *,
+    axis: int = 0,
+    axes: Optional[Sequence[str]] = None,
+    ctx: Optional[CommContext] = None,
+    mode: Optional[str] = None,
+    num_chunks: Optional[int] = None,
+) -> jax.Array:
+    """Context-planned staged reduce-scatter (equals ``lax.psum_scatter``
+    tiled, canonical blocks).  Inside shard_map ``x`` is the full-length
+    local addend; outside, replicated input → scattered output."""
+    from .plan_executor import execute_plan  # lazy: cycle
+
+    ctx, names = _resolve(ctx, axes)
+    if axis < 0:
+        axis += x.ndim
+    if _in_axis_env(names):
+        plan, _ = _local_plan(ctx, "rs", names, x, axis,
+                              mode=mode, num_chunks=num_chunks, scattered=False)
+        return execute_plan(x, plan, axis=axis)
+
+    n = math.prod(ctx._sizes(names).values())
+    shard_bytes = x.size * x.dtype.itemsize / n
+    plan = ctx.plan("rs", shard_bytes, axes=names,
+                    shape=tuple(x.shape), dtype=x.dtype)
+    plan = _apply_overrides(plan, mode, num_chunks)
+    plan = _fit_plan(plan, x.shape[axis], n)
+    return _wrap(ctx, lambda y: execute_plan(y, plan, axis=axis), x,
+                 P(), _axis_spec(x.ndim, axis, names))
+
+
+def all_reduce(
+    x: jax.Array,
+    *,
+    axis: int = -1,
+    axes: Optional[Sequence[str]] = None,
+    ctx: Optional[CommContext] = None,
+    mode: Optional[str] = None,
+    num_chunks: Optional[int] = None,
+) -> jax.Array:
+    """Context-planned staged all-reduce (equals ``lax.psum``).
+
+    ``axis`` only selects which dim the staged RS+AG pipeline scatters
+    along.  Inside shard_map, a length not divisible by the device product
+    falls back to a flat ``lax.psum`` — model code never has to care about
+    divisibility (the old ``tp_all_reduce`` contract)."""
+    from .plan_executor import execute_plan  # lazy: cycle
+
+    ctx, names = _resolve(ctx, axes)
+    if axis < 0:
+        axis += x.ndim
+    if _in_axis_env(names):
+        n_total = math.prod(axis_size(n) for n in names)
+        if x.shape[axis] % n_total:
+            return lax.psum(x, names)
+        plan, _ = _local_plan(ctx, "ar", names, x, axis,
+                              mode=mode, num_chunks=num_chunks, scattered=False)
+        return execute_plan(x, plan, axis=axis)
+
+    n = math.prod(ctx._sizes(names).values())
+    if x.shape[axis] % n:  # before planning: don't cache a plan never run
+        return _wrap(ctx, lambda y: lax.psum(y, names), x, P(), P())
+    shard_bytes = x.size * x.dtype.itemsize / n
+    plan = ctx.plan("ar", shard_bytes, axes=names,
+                    shape=tuple(x.shape), dtype=x.dtype)
+    plan = _apply_overrides(plan, mode, num_chunks)
+    plan = _fit_plan(plan, x.shape[axis], n)
+    return _wrap(ctx, lambda y: execute_plan(y, plan, axis=axis), x, P(), P())
+
+
+# --------------------------------------------------------------------------
+# fused collective-matmul ops
+# --------------------------------------------------------------------------
+
+def _mm(piece, w):
+    return jnp.einsum("...d,df->...f", piece, w)
+
+
+def allgather_matmul(
+    x: jax.Array,
+    w,
+    *,
+    axis: int = 0,
+    axes: Optional[Sequence[str]] = None,
+    ctx: Optional[CommContext] = None,
+    fuse: object = None,
+):
+    """``all_gather(x) @ w`` with the gather planned by the context and —
+    when the policy/overlap model says so — overlapped against per-block
+    matmuls (``kernels.collective_matmul.allgather_matmul``).
+
+    ``w`` may be one weight or a sequence sharing the gather (SwiGLU
+    gate+up).  Returns ``(gathered_x, out)`` with ``out`` matching ``w``'s
+    structure.  Inside shard_map ``x`` is the local (scattered) block and
+    ``w`` the local column slice; outside, ``x`` is sharded along ``axis``
+    and each ``w`` along its last dim over the context axes."""
+    from ..kernels.collective_matmul import allgather_matmul as _fused
+    from .plan_executor import execute_plan  # lazy: cycle
+
+    ctx, names = _resolve(ctx, axes)
+    single = not isinstance(w, (list, tuple))
+    ws = (w,) if single else tuple(w)
+    if axis < 0:
+        axis += x.ndim
+
+    def run_local(xl, wl):
+        # always carries a tuple of outputs; callers unwrap per `single`
+        plan, _ = _local_plan(ctx, "ag", names, xl, axis,
+                              mode=None, num_chunks=None, scattered=True)
+        rows = xl.size // xl.shape[-1]
+        d_in, d_out = wl[0].shape[-2], wl[0].shape[-1]
+        do_fuse = ctx.decide_fuse(
+            names, rows, d_in, d_out, xl.dtype.itemsize,
+            n_matmuls=len(wl), fuse=fuse,
+        )
+        if do_fuse:
+            # fused rings everywhere: the fusion decision already says the
+            # per-hop decomposition wins, so the plain collective's stage
+            # modes (a tradeoff with no compute to hide) don't apply
+            g, outs = _fused(xl, tuple(wl), names, stage_order=plan.axes,
+                             axis=axis)
+            return g, tuple(outs)
+        g = execute_plan(xl, plan, axis=axis)
+        return g, tuple(_mm(g, wi) for wi in wl)
+
+    if _in_axis_env(names):
+        g, outs = run_local(x, ws)
+        return g, (outs[0] if single else outs)
+
+    mesh = _require_mesh(ctx, "allgather_matmul")
+    w_spec = P(*([None] * (ws[0].ndim - 1)), names)  # column-parallel weights
+    # each output has x's rank with the projected feature dim LAST — shard
+    # that dim, not the weight's layout (x may be rank > 2)
+    o_spec = P(*([None] * (x.ndim - 1)), names)
+    out_g, outs = shard_map(
+        lambda xl, *wl: run_local(xl, wl),
+        mesh=mesh,
+        in_specs=(_axis_spec(x.ndim, axis, names),) + (w_spec,) * len(ws),
+        out_specs=(P(), (o_spec,) * len(ws)),
+    )(x, *ws)
+    return out_g, (outs[0] if single else outs)
+
+
+def matmul_reduce_scatter(
+    h: jax.Array,
+    w: jax.Array,
+    *,
+    axis: int = 0,
+    axes: Optional[Sequence[str]] = None,
+    ctx: Optional[CommContext] = None,
+    fuse: object = None,
+) -> jax.Array:
+    """``psum_scatter(h @ w)`` with the combine planned by the context and —
+    when fusion wins — the block matmuls feeding the ring just-in-time
+    (``kernels.collective_matmul.matmul_reduce_scatter``).
+
+    Inside shard_map ``h`` is the full-length local activation and ``w``
+    the local row slice; outside, ``h`` is sharded along its last dim and
+    ``w`` along its first dim over the context axes, the output scattered
+    along ``axis``."""
+    from ..kernels.collective_matmul import matmul_reduce_scatter as _fused
+    from .plan_executor import execute_plan  # lazy: cycle
+
+    ctx, names = _resolve(ctx, axes)
+    if axis < 0:
+        axis += h.ndim
+
+    def run_local(hl, wl):
+        sizes = {n: axis_size(n) for n in names}
+        n_total = math.prod(sizes.values())
+        out_bytes = (hl.size // hl.shape[-1]) * wl.shape[-1] * hl.dtype.itemsize
+        plan = ctx.plan("rs", out_bytes / n_total, axes=names,
+                        shape=tuple(hl.shape) + tuple(wl.shape), dtype=hl.dtype)
+        # the RS runs on the matmul OUTPUT: when the scatter axis is the
+        # feature axis, its length is w's d_out, not h's contracted d_in
+        out_len = wl.shape[-1] if axis == hl.ndim - 1 else hl.shape[axis]
+        plan = _fit_plan(plan, out_len, n_total)
+        rows = hl.size // hl.shape[-1]
+        do_fuse = ctx.decide_fuse(
+            names, max(1, rows // n_total), wl.shape[0], wl.shape[1],
+            hl.dtype.itemsize, fuse=fuse,
+        )
+        if do_fuse:
+            return _fused(hl, wl, names, stage_order=plan.axes, axis=axis)
+        return execute_plan(_mm(hl, wl), plan, axis=axis)
+
+    if _in_axis_env(names):
+        return run_local(h, w)
+
+    mesh = _require_mesh(ctx, "matmul_reduce_scatter")
+    h_spec = P(*([None] * (h.ndim - 1)), names)  # column-parallel activations
+    w_spec = P(names, *([None] * (w.ndim - 1)))  # matching row-parallel weight
+    return shard_map(
+        run_local, mesh=mesh,
+        in_specs=(h_spec, w_spec),
+        out_specs=_axis_spec(h.ndim, axis, names),
+    )(h, w)

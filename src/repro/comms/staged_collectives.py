@@ -21,8 +21,9 @@ adds the rest of the gather-shaped family:
     planner (``core.planner.choose_num_chunks``) decides C from the
     alpha/bandwidth trade-off.
 
-``StagedCollectiveEngine`` is the user-facing wrapper: it plans stage
-orders + chunking from the cost model and wraps shard_map.
+The user-facing surface is the context-scoped API (``repro.comms.api``:
+``comm_context`` + module ops); ``StagedCollectiveEngine`` and
+``tp_all_reduce`` remain as deprecation shims routing through it.
 """
 from __future__ import annotations
 
@@ -33,9 +34,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
-from ..compat import axis_size, shard_map
+from ..compat import axis_size
 from ..core.plan_ir import CollectivePlan
 from ..core.planner import (
     LinkSpec,
@@ -273,20 +274,21 @@ def tp_all_reduce(
     axis: int = -1,
     num_chunks: int = 1,
 ) -> jax.Array:
-    """Tensor-parallel partial-sum combine for model code inside shard_map.
+    """DEPRECATED shim: tensor-parallel partial-sum combine.
 
-    Uses the staged all-reduce when the reduced dim is divisible by the
-    device product (times chunks); falls back to a flat ``lax.psum``
-    otherwise, so models never have to care about divisibility.
-    """
-    axis_names = tuple(axis_names)
-    if axis < 0:
-        axis += x.ndim
-    n_total = math.prod(axis_size(n) for n in axis_names)
-    if x.shape[axis] % n_total == 0:
-        chunks = fit_chunks(x.shape[axis], n_total, num_chunks)
-        return staged_all_reduce(x, axis_names, axis=axis, num_chunks=chunks)
-    return lax.psum(x, axis_names)
+    Use :func:`repro.comms.api.all_reduce` (context-scoped, plan-cached)
+    instead; this shim routes through it with the same contract (staged AR
+    when divisible, flat ``lax.psum`` fallback otherwise)."""
+    import warnings
+
+    from . import api
+
+    warnings.warn(
+        "tp_all_reduce is deprecated; use repro.comms.api.all_reduce "
+        "under a comm_context", DeprecationWarning, stacklevel=2)
+    return api.all_reduce(
+        x, axis=axis, axes=tuple(axis_names),
+        num_chunks=api.legacy_chunks(num_chunks))
 
 
 # --------------------------------------------------------------------------
@@ -294,7 +296,7 @@ def tp_all_reduce(
 # --------------------------------------------------------------------------
 
 def plan_collectives(
-    mesh: Mesh,
+    mesh,
     axis_names: Sequence[str],
     shard_bytes: float,
     *,
@@ -304,6 +306,8 @@ def plan_collectives(
     """One :class:`~repro.core.plan_ir.CollectivePlan` per collective
     ("ag" / "rs" / "ar") for this (mesh axes, payload) point.
 
+    ``mesh`` is a :class:`jax.sharding.Mesh` or a plain ``{axis: size}``
+    dict (the comms context plans from trace-time axis sizes, meshless).
     Stage orders come from the cost-model planners (slow axis first for AG,
     last for RS; the AR chain is the RS order followed by its reverse), the
     execution mode + per-stage hop structure + chunk count from
@@ -314,7 +318,10 @@ def plan_collectives(
     same object.  ``shard_bytes`` is the per-device payload at the
     scattered end (AG input / RS output)."""
     axis_names = tuple(axis_names)
-    sizes = {n: mesh.shape[n] for n in axis_names}
+    if isinstance(mesh, dict):
+        sizes = {n: int(mesh[n]) for n in axis_names}
+    else:
+        sizes = {n: mesh.shape[n] for n in axis_names}
     axes = [(sizes[n], link_for_axis(n, links)) for n in axis_names]
     ag_plan = plan_axis_order(axes, shard_bytes, max_chunks=max_chunks)
     rs_plan = plan_reduce_scatter_order(axes, shard_bytes, max_chunks=max_chunks)
@@ -351,20 +358,18 @@ def fit_chunks(length: int, granularity: int, chunks: int) -> int:
 
 
 class StagedCollectiveEngine:
-    """User-facing staged collectives over the factorized axes of a mesh.
+    """DEPRECATED shim over the context-scoped API (``repro.comms.api``).
 
-    Plans one :class:`~repro.core.plan_ir.CollectivePlan` per collective
-    per scattered-payload point (memoized) and executes it by interpreting
-    the IR (``comms.plan_executor.execute_plan``) under shard_map:
+    The engine predates :class:`~repro.comms.api.CommContext`; it now IS
+    one — each method delegates to the module-level ops with an explicit
+    ``ctx=`` handle, so legacy call sites share the same plan cache,
+    policy machinery and links auto-invalidation as the new surface:
 
         eng = StagedCollectiveEngine(mesh, ("pod", "data"))
-        y = eng.all_reduce(x)          # == jax.lax.psum over both axes
-        s = eng.reduce_scatter(x)      # == psum_scatter, canonical blocks
-        g = eng.all_gather(s)          # == all_gather tiled
+        y = eng.all_reduce(x)          # == api.all_reduce(x, ctx=eng.ctx)
 
-    The same plan objects are priceable (``core.cost_model.price``) and
-    lower to the optical simulator (``core.schedule.schedule_from_ir``) —
-    ``eng.plan(x, "ag")`` hands them out.
+    New code should use ``comm_context(mesh, axis_names)`` + the
+    ``repro.comms.api`` ops directly.
     """
 
     def __init__(
@@ -375,86 +380,56 @@ class StagedCollectiveEngine:
         links: Optional[Dict[str, LinkSpec]] = None,
         max_chunks: int = 8,
     ):
+        import warnings
+
+        from .api import CommContext, PlanPolicy
+
+        warnings.warn(
+            "StagedCollectiveEngine is deprecated; use "
+            "repro.comms.api.comm_context(mesh, axis_names) and the "
+            "module-level ops", DeprecationWarning, stacklevel=2)
         self.mesh = mesh
         self.axis_names = tuple(axis_names)
-        self.links = links
         self.max_chunks = max_chunks
         self.n_devices = math.prod(mesh.shape[n] for n in self.axis_names)
-        self._plan_cache: Dict[float, Dict[str, CollectivePlan]] = {}
+        self.ctx = CommContext(
+            mesh, self.axis_names, links=links,
+            policy=PlanPolicy(max_chunks=max_chunks),
+        )
+
+    @property
+    def links(self):
+        return self.ctx.links
 
     def plan(self, x: jax.Array, collective: str = "ag") -> CollectivePlan:
-        """The CollectivePlan this engine would execute for ``x``.
+        """The CollectivePlan the context would execute for ``x``.
 
         ``x`` is the full-length array in every case (sharded for AG,
-        replicated for RS/AR); the scattered-end payload is nbytes/N.
-        Plans are memoized on that payload — the only planner input that
-        varies per call."""
-        if collective not in ("ag", "rs", "ar"):
-            raise ValueError(f"collective must be ag|rs|ar, got {collective!r}")
+        replicated for RS/AR); the scattered-end payload is nbytes/N."""
         shard_bytes = x.size * x.dtype.itemsize / self.n_devices
-        cached = self._plan_cache.get(shard_bytes)
-        if cached is None:
-            cached = plan_collectives(
-                self.mesh, self.axis_names, shard_bytes,
-                links=self.links, max_chunks=self.max_chunks,
-            )
-            self._plan_cache[shard_bytes] = cached
-        return cached[collective]
-
-    def _run(self, fn, x, in_spec: P, out_spec: P):
-        return shard_map(
-            fn, mesh=self.mesh, in_specs=in_spec, out_specs=out_spec
-        )(x)
-
-    def _resolved(
-        self, x: jax.Array, collective: str, axis: int,
-        mode: Optional[str], chunk_granularity: int,
-    ) -> CollectivePlan:
-        """The plan as it will execute: mode override applied, chunk count
-        clamped to what divides the payload."""
-        plan = self.plan(x, collective)
-        if mode is not None:
-            plan = plan.with_mode(mode)  # validates the mode string
-        if plan.num_chunks > 1:
-            length = (x.shape[axis] // self.n_devices
-                      if collective == "ag" else x.shape[axis])
-            plan = plan.with_chunks(
-                fit_chunks(length, chunk_granularity, plan.num_chunks))
-        return plan
+        return self.ctx.plan(collective, shard_bytes,
+                             shape=tuple(x.shape), dtype=x.dtype)
 
     def all_gather(
         self, x: jax.Array, *, axis: int = 0, mode: Optional[str] = None
     ) -> jax.Array:
-        """x sharded over ``axis_names`` along ``axis`` -> replicated.
+        """x sharded over ``axis_names`` along ``axis`` -> replicated."""
+        from . import api
 
-        ``mode`` overrides the planned execution mode (``oneshot`` /
-        ``chunked`` / ``perhop``); default follows the plan."""
-        from .plan_executor import execute_plan
-
-        plan = self._resolved(x, "ag", axis, mode, 1)
-        spec = [None] * (x.ndim)
-        spec[axis] = self.axis_names
-        return self._run(
-            lambda y: execute_plan(y, plan, axis=axis), x, P(*spec), P())
+        return api.all_gather(x, axis=axis, ctx=self.ctx, mode=mode)
 
     def reduce_scatter(
         self, x: jax.Array, *, axis: int = 0, mode: Optional[str] = None
     ) -> jax.Array:
         """x replicated -> summed and scattered over ``axis_names``."""
-        from .plan_executor import execute_plan
+        from . import api
 
-        plan = self._resolved(x, "rs", axis, mode, self.n_devices)
-        spec = [None] * x.ndim
-        spec[axis] = self.axis_names
-        return self._run(
-            lambda y: execute_plan(y, plan, axis=axis), x, P(), P(*spec))
+        return api.reduce_scatter(x, axis=axis, ctx=self.ctx, mode=mode)
 
     def all_reduce(
         self, x: jax.Array, *, axis: int = 0, mode: Optional[str] = None
     ) -> jax.Array:
         """x replicated -> psum over ``axis_names`` (device count factor)."""
-        from .plan_executor import execute_plan
+        from . import api
 
-        plan = self._resolved(x, "ar", axis, mode, self.n_devices)
-        return self._run(
-            lambda y: execute_plan(y, plan, axis=axis), x, P(), P())
+        return api.all_reduce(x, axis=axis, ctx=self.ctx, mode=mode)

@@ -167,7 +167,15 @@ class CollectivePlan:
         return dataclasses.replace(self, mode=mode)
 
     def with_chunks(self, num_chunks: int) -> "CollectivePlan":
-        return dataclasses.replace(self, num_chunks=num_chunks)
+        """Same plan, different chunk count.  A count that collapses to 1
+        (e.g. ``fit_chunks`` on a small shard) normalizes a ``chunked``
+        plan back to ``oneshot`` — the label and the execution never
+        disagree, and ``price(plan)`` is drift-free either way (a one-chunk
+        wavefront prices exactly as the one-shot barrier chain)."""
+        if num_chunks < 1:
+            raise ValueError(f"num_chunks must be >= 1, got {num_chunks}")
+        mode = "oneshot" if (num_chunks == 1 and self.mode == "chunked") else self.mode
+        return dataclasses.replace(self, num_chunks=num_chunks, mode=mode)
 
     # -- transfer-structure algebra -----------------------------------------
     def gather_tree(self) -> OpTreePlan:

@@ -74,23 +74,47 @@ class LinkSpec:
         if bw is None or alpha is None:
             raise ValueError(f"cannot build LinkSpec from {d!r}: missing "
                              f"bandwidth/alpha and no fallback")
+        bw, alpha = float(bw), float(alpha)
+        if bw <= 0.0 or alpha < 0.0:
+            raise ValueError(
+                f"invalid LinkSpec values in {d!r}: bandwidth_bytes must be "
+                f"> 0 (got {bw}) and alpha_s >= 0 (got {alpha})")
         return LinkSpec(name=str(d.get("name", "link")),
-                        bandwidth_bytes=float(bw), alpha_s=float(alpha))
+                        bandwidth_bytes=bw, alpha_s=alpha)
 
 
-def load_links(path, fallbacks: Optional[dict] = None) -> dict:
+def load_links(
+    path,
+    fallbacks: Optional[dict] = None,
+    *,
+    expect_axes: Optional[Sequence[str]] = None,
+    allow_missing: bool = False,
+) -> dict:
     """Load an axis-name -> LinkSpec map from a JSON file.
 
     Accepts either a plain ``{axis: LinkSpec.to_json()}`` map or the full
     ``launch/perf.py --calibrate`` output (``{"fitted_links": {...}}``) —
-    the calibration loop's feedback path into
-    ``StagedCollectiveEngine(links=...)``.
+    the calibration loop's feedback path into the comms context
+    (``comms.api.CommContext.update_links``) / engine ``links=``.
+
+    ``expect_axes`` validates the file against a mesh's axis set instead of
+    silently ignoring typos: entries for axes NOT in ``expect_axes`` raise
+    ``ValueError`` naming them, and (unless ``allow_missing``, for callers
+    that merge onto a default table) so do expected axes the file lacks.
     """
     import json
     from pathlib import Path
 
     doc = json.loads(Path(path).read_text())
     entries = doc.get("fitted_links", doc)
+    if expect_axes is not None:
+        expect = set(expect_axes)
+        unknown = sorted(set(entries) - expect)
+        missing = sorted(expect - set(entries))
+        if unknown or (missing and not allow_missing):
+            raise ValueError(
+                f"links file {path} does not match axes {sorted(expect)}: "
+                f"unknown axes {unknown}, missing axes {missing}")
     out = {}
     for axis, d in entries.items():
         fb = (fallbacks or {}).get(axis)

@@ -199,6 +199,21 @@ def _ag_matmul_bwd(axis_names, stage_order, axis, stage_modes, res, ct):
 _ag_matmul_vjp.defvjp(_ag_matmul_fwd, _ag_matmul_bwd)
 
 
+def _order_from_plan(plan, axis_names, stage_order):
+    """Stage order off a :class:`~repro.core.plan_ir.CollectivePlan` —
+    the plan's execution-order axes, validated against ``axis_names``."""
+    if plan is None:
+        return stage_order
+    if stage_order is not None:
+        raise ValueError("pass either plan= or stage_order=, not both")
+    order = tuple(plan.axes)
+    if sorted(order) != sorted(axis_names):
+        raise ValueError(
+            f"plan axes {order} do not permute the collective axes "
+            f"{tuple(axis_names)}")
+    return order
+
+
 def allgather_matmul(
     x: jax.Array,
     w: Union[jax.Array, Sequence[jax.Array]],
@@ -207,6 +222,7 @@ def allgather_matmul(
     stage_order: Optional[Sequence[str]] = None,
     axis: int = 0,
     stage_modes: Optional[Sequence[str]] = None,
+    plan=None,
 ):
     """``all_gather(x, axis_names, axis=axis, tiled=True) @ w`` with the
     gather overlapped against the per-block matmuls (inside shard_map).
@@ -219,6 +235,8 @@ def allgather_matmul(
 
     ``stage_modes`` (per stage, ``"ring"``/``"oneshot"``) follows the
     planner's hop schedule; one-shot stages still produce identical values.
+    ``plan`` (a :class:`~repro.core.plan_ir.CollectivePlan`, e.g. from
+    ``CommContext.plan("ag", ...)``) supplies the stage order instead.
 
     Differentiable via custom_vjp: dgrad runs as the fused
     ``matmul_reduce_scatter`` dual (reversed stage order), dw contracts the
@@ -232,6 +250,7 @@ def allgather_matmul(
     # resolve the default stage order HERE so the forward impl and the
     # backward's dual derive from one concrete order
     axis_names = tuple(axis_names)
+    stage_order = _order_from_plan(plan, axis_names, stage_order)
     order = tuple(stage_order) if stage_order is not None else axis_names
     gathered, outs = _ag_matmul_vjp(
         axis_names,
@@ -332,6 +351,7 @@ def matmul_reduce_scatter(
     stage_order: Optional[Sequence[str]] = None,
     axis: int = 0,
     stage_modes: Optional[Sequence[str]] = None,
+    plan=None,
 ) -> jax.Array:
     """``psum_scatter(h @ w, axis_names, scatter_dimension=axis, tiled=True)``
     with the matmul decomposed per scattered block (inside shard_map).
@@ -353,6 +373,7 @@ def matmul_reduce_scatter(
     # resolve the default stage order HERE so the forward impl and the
     # backward's dual derive from one concrete order
     axis_names = tuple(axis_names)
+    stage_order = _order_from_plan(plan, axis_names, stage_order)
     order = (tuple(stage_order) if stage_order is not None
              else tuple(reversed(axis_names)))
     return _mm_rs_vjp(

@@ -28,9 +28,17 @@ mesh of the given factorization.
                        measured sweep (least squares; printed as JSON and,
                        with --links PATH, written there)
   --links fitted.json  feed a previous --calibrate output back into the
-                       engine: the benchmarks plan with the FITTED specs
-                       instead of the hard-coded v5e constants — the
-                       ROADMAP calibration feedback loop
+                       comms context: plans are re-planned with the FITTED
+                       specs instead of the hard-coded v5e constants (the
+                       context's links-fingerprinted plan cache invalidates
+                       itself) — the ROADMAP auto-calibration loop
+
+  python -m repro.launch.perf --tp-block 2,4
+
+benchmarks the explicit-TP transformer block (context-scoped collectives,
+TP and SP variants — models.model.transformer_block_tp) against the GSPMD
+path: modeled-electrical, modeled-optical and measured time off the same
+CollectivePlan objects the context cached while the block ran.
 """
 
 import argparse
@@ -113,43 +121,45 @@ def run_variant(arch, shape, name, overrides, out_dir):
 def _bench_setup(factors_csv: str, links_path=None):
     import numpy as np
 
-    from repro.comms import StagedCollectiveEngine, make_factorized_mesh
+    from repro.comms import make_factorized_mesh
+    from repro.comms.api import CommContext
     from repro.core.planner import DCN_LINK, ICI_LINK, load_links
 
     try:
         factors = [int(x) for x in factors_csv.split(",")]
     except ValueError:
-        raise SystemExit(f"--collectives wants comma-separated ints, "
+        raise SystemExit(f"wanted comma-separated mesh factors, "
                          f"got {factors_csv!r}")
     names = [f"s{i}" for i in range(len(factors))]
     n = int(np.prod(factors))
     mesh = make_factorized_mesh(factors, names)
-    # one link model for the modeled plans AND the engine being measured:
+    # one link model for the modeled plans AND the context being measured:
     # the major axis is DCN-class (the pod analogue), the rest ICI — unless
     # a --links file (a --calibrate output) overrides with fitted specs
     link_map = {names[i]: (DCN_LINK if i == 0 and len(factors) > 1 else ICI_LINK)
                 for i in range(len(factors))}
+    ctx = CommContext(mesh, tuple(names), links=link_map)
     if links_path:
-        fitted = load_links(links_path, fallbacks=link_map)
-        unknown = set(fitted) - set(link_map)
-        if unknown:
-            raise SystemExit(f"--links {links_path}: axes {sorted(unknown)} "
-                             f"not in this mesh ({names})")
-        link_map.update(fitted)
+        # load_links validates the axis set against this mesh (unknown axes
+        # raise); update_links invalidates any cached plans and re-plans —
+        # the auto-calibration loop, no new engine/context required
+        fitted = load_links(links_path, fallbacks=link_map,
+                            expect_axes=names, allow_missing=True)
+        ctx.update_links(fitted)
+        link_map = ctx.links
         print(f"[perf/collectives] using fitted links from {links_path}: "
               + " ".join(f"{k}=(B={v.bandwidth_bytes:.3g},a={v.alpha_s:.3g})"
                          for k, v in sorted(fitted.items())))
-    eng = StagedCollectiveEngine(mesh, names, links=link_map)
-    return factors, names, n, mesh, link_map, eng
+    return factors, names, n, mesh, link_map, ctx
 
 
-def _timed(fn, x, reps=10):
+def _timed(fn, *args, reps=10):
     import time
 
-    fn(x).block_until_ready()  # compile
+    fn(*args).block_until_ready()  # compile
     t0 = time.perf_counter()
     for _ in range(reps):
-        out = fn(x)
+        out = fn(*args)
     out.block_until_ready()
     return (time.perf_counter() - t0) / reps * 1e6
 
@@ -165,10 +175,11 @@ def collectives_bench(factors_csv: str, sizes_kb_csv: str, reps: int = 10,
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.comms import api
     from repro.compat import shard_map
     from repro.core.cost_model import TERARACK, plan_exposure, price
 
-    factors, names, n, mesh, link_map, eng = _bench_setup(
+    factors, names, n, mesh, link_map, ctx = _bench_setup(
         factors_csv, links_path)
 
     for kb in (int(s) for s in sizes_kb_csv.split(",")):
@@ -188,12 +199,19 @@ def collectives_bench(factors_csv: str, sizes_kb_csv: str, reps: int = 10,
                 lambda y: jax.lax.all_gather(y, tuple(names), axis=0, tiled=True),
                 mesh=mesh, in_specs=P(tuple(names)), out_specs=P()),
         }
-        entry = {"ag": (eng.all_gather, xs), "rs": (eng.reduce_scatter, x),
-                 "ar": (eng.all_reduce, x)}
+        entry = {
+            "ag": (lambda y, mode=None: api.all_gather(y, ctx=ctx, mode=mode),
+                   xs),
+            "rs": (lambda y, mode=None: api.reduce_scatter(
+                y, ctx=ctx, mode=mode), x),
+            "ar": (lambda y, mode=None: api.all_reduce(
+                y, axis=0, ctx=ctx, mode=mode), x),
+        }
 
         for coll in ("ag", "rs", "ar"):
             fn, arg = entry[coll]
-            plan = eng.plan(x, coll)
+            plan = ctx.plan(coll, x.size * x.dtype.itemsize / n,
+                            shape=tuple(x.shape), dtype=x.dtype)
             modeled = {m: price(plan.with_mode(m)).total_s
                        for m in ("oneshot", "chunked", "perhop")}
             optical = price(plan, TERARACK)
@@ -201,10 +219,10 @@ def collectives_bench(factors_csv: str, sizes_kb_csv: str, reps: int = 10,
             # jit per mode so reps measure execution, not tracing
             measured = {
                 m: _timed(jax.jit(lambda y, m=m, fn=fn: fn(y, mode=m)), arg,
-                          reps)
+                          reps=reps)
                 for m in ("oneshot", "chunked", "perhop")
             }
-            flat_us = _timed(jax.jit(flat[coll]), arg, reps)
+            flat_us = _timed(jax.jit(flat[coll]), arg, reps=reps)
             parts = " ".join(
                 f"{m}={modeled[m]*1e6:.1f}/{measured[m]:.0f}us"
                 for m in ("oneshot", "chunked", "perhop"))
@@ -219,6 +237,111 @@ def collectives_bench(factors_csv: str, sizes_kb_csv: str, reps: int = 10,
                   f"hidden={sum(hidden)/2**10:.0f}KB "
                   f"(wall-clock on fake host devices; modeled times are the "
                   f"decision signal)")
+
+
+def tp_block_bench(factors_csv: str, reps: int = 5, links_path=None,
+                   seq: int = 32, batch: int = 2) -> list:
+    """Explicit-TP transformer block (context collectives) vs the GSPMD
+    path: modeled-electrical, modeled-optical and measured time, all off
+    the SAME CollectivePlan objects the context caches while the block
+    runs (ROADMAP: "full shard_map transformer block vs GSPMD").
+
+    Runs both variants (TP: replicated activations, staged all-reduce
+    combines; SP: sequence-sharded activations, fused AG→matmul /
+    matmul→RS) on a fake-device mesh of the given factorization and checks
+    the explicit block matches the GSPMD block numerically.
+    """
+    import dataclasses as dc
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.comms import comm_context
+    from repro.configs import ModelConfig
+    from repro.core.cost_model import TERARACK, price
+    from repro.models.model import (
+        _layer_init,
+        transformer_block_ref,
+        transformer_block_tp,
+        tp_block_specs,
+    )
+
+    factors, names, n, mesh, link_map, _ = _bench_setup(factors_csv, links_path)
+
+    cfg = ModelConfig(
+        name="tp-block-bench", family="dense", dtype="float32", remat=False,
+        qkv_bias=False, qk_norm=False, num_layers=2, d_model=8 * n,
+        num_heads=n, num_kv_heads=n, head_dim=8, d_ff=16 * n, vocab_size=128,
+    )
+    layer = _layer_init(jax.random.key(0), cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (batch, seq, cfg.d_model),
+                          jnp.float32)
+    positions = jnp.broadcast_to(
+        jnp.arange(seq)[None, :], (batch, seq)).astype(jnp.int32)
+
+    ref = transformer_block_ref(layer, cfg, x, positions=positions)
+    rows = []
+    for sp in (False, True):
+        tag = "sp" if sp else "tp"
+        x_spec, l_spec = tp_block_specs(layer, names, sequence_parallel=sp)
+        with comm_context(mesh, tuple(names), links=link_map) as ctx:
+            explicit = jax.jit(shard_map(
+                lambda lx, ll, sp=sp: transformer_block_tp(
+                    ll, cfg, lx, positions=positions, sequence_parallel=sp),
+                mesh=mesh, in_specs=(x_spec, l_spec), out_specs=x_spec,
+            ))
+            got = explicit(x, layer)
+            ok = bool(np.allclose(np.asarray(got), np.asarray(ref), atol=2e-5))
+            t_explicit = _timed(explicit, x, layer, reps=reps)
+
+            # the GSPMD path: same math on full params, the partitioner
+            # emits the collectives from the TP in_shardings
+            gspmd = jax.jit(
+                lambda lx, ll: transformer_block_ref(
+                    ll, cfg, lx, positions=positions),
+                in_shardings=(
+                    NamedSharding(mesh, x_spec),
+                    jax.tree.map(lambda s: NamedSharding(mesh, s), l_spec),
+                ),
+                out_shardings=NamedSharding(mesh, x_spec),
+            )
+            t_gspmd = _timed(gspmd, x, layer, reps=reps)
+
+            # every collective the block issued, off the context's cache —
+            # priced electrical AND optical from the very objects executed,
+            # weighted by how often each deduplicated plan was issued (the
+            # TP block's two all-reduces share one cache entry)
+            usage = ctx.plan_usage()
+            issued = sum(c for _, c in usage)
+            elec = sum(price(p).total_s * c for p, c in usage)
+            opt = sum(
+                price(p, dc.replace(TERARACK, n_nodes=p.n)).total_s * c
+                for p, c in usage
+            )
+            row = dict(
+                variant=tag, plans=len(usage), issued=issued,
+                modeled_elec_us=elec * 1e6, modeled_opt_us=opt * 1e6,
+                measured_tp_us=t_explicit, measured_gspmd_us=t_gspmd,
+                allclose=ok, cache=dc.asdict(ctx.cache_stats),
+                modes=sorted({p.mode for p, _ in usage}),
+            )
+            rows.append(row)
+            print(f"[perf/tp-block] {tag} mesh={factors} B={batch} S={seq} "
+                  f"d={cfg.d_model}: plans={row['plans']} "
+                  f"issued={issued} "
+                  f"modeled elec={row['modeled_elec_us']:.1f}us "
+                  f"optical={row['modeled_opt_us']:.1f}us | measured "
+                  f"explicit={t_explicit:.0f}us gspmd={t_gspmd:.0f}us "
+                  f"allclose={ok} modes={row['modes']} "
+                  f"(fake host devices: modeled times are the decision "
+                  f"signal)")
+            if not ok:
+                raise SystemExit(f"tp-block {tag}: explicit block diverged "
+                                 f"from the GSPMD block")
+    return rows
 
 
 def calibrate_links(factors_csv: str, sizes_kb_csv: str, reps: int = 10,
@@ -265,7 +388,7 @@ def calibrate_links(factors_csv: str, sizes_kb_csv: str, reps: int = 10,
                 jnp.arange(rows, dtype=jnp.float32),
                 NamedSharding(mesh, P(name)),
             )
-            t = _timed(jax.jit(ag), x, reps) * 1e-6
+            t = _timed(jax.jit(ag), x, reps=reps) * 1e-6
             rows_a.append([steps, steps * shard])
             rhs.append(t)
         sol, *_ = np.linalg.lstsq(np.asarray(rows_a), np.asarray(rhs),
@@ -304,6 +427,12 @@ def main():
     ap.add_argument("--collectives", default=None, metavar="F1,F2",
                     help="run staged-collective microbenchmarks on this "
                          "mesh factorization instead of the hillclimb")
+    ap.add_argument("--tp-block", default=None, metavar="F1,F2",
+                    help="benchmark the explicit-TP transformer block "
+                         "(context collectives, TP and SP variants) vs the "
+                         "GSPMD path on this mesh factorization — modeled "
+                         "electrical/optical and measured, off the same "
+                         "CollectivePlan objects")
     ap.add_argument("--calibrate", action="store_true",
                     help="with --collectives: fit LinkSpec alpha/bandwidth "
                          "per mesh axis from measured wall-clock (printed "
@@ -325,6 +454,9 @@ def main():
     ap.add_argument("--out", default="runs/perf")
     args = ap.parse_args()
 
+    if args.tp_block:
+        tp_block_bench(args.tp_block, reps=args.reps, links_path=args.links)
+        return
     if args.collectives:
         if args.calibrate:
             calibrate_links(args.collectives, args.sizes_kb, args.reps,

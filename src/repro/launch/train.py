@@ -11,6 +11,7 @@ Production invocation (per the assignment's mesh):
   python -m repro.launch.train --arch qwen3-32b --mesh 16,16 --steps 500
 """
 import argparse
+import contextlib
 import dataclasses
 import time
 
@@ -20,6 +21,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.comms import comm_context
 from repro.configs import SHAPES, get_config, reduced as reduce_cfg
 from repro.data import DataConfig, SyntheticLMPipeline
 from repro.models import init_params, loss_fn
@@ -113,6 +115,8 @@ def main():
     bspec = NamedSharding(mesh, P(dp, None)) if dp_divides \
         else NamedSharding(mesh, P())
 
+    comm_scope = contextlib.ExitStack()
+    ctx = None
     if explicit:
         if not dp_divides:
             raise SystemExit(f"--zero1 explicit needs batch {batch} divisible "
@@ -120,6 +124,10 @@ def main():
         fast = ("data",)
         slow = ("pod",) if "pod" in mesh.shape else ()
         ndp = int(np.prod([mesh.shape[a] for a in fast + slow]))
+        # one context scopes every explicit collective (zero1_shard_grads /
+        # zero1_unshard_params resolve it at trace time): plans are cached
+        # here, and a fitted --links file would re-plan them in place
+        ctx = comm_scope.enter_context(comm_context(mesh, fast))
 
         def explicit_step(params, opt_state, batch):
             # local grads on the local batch shard; the global mean-loss
@@ -159,7 +167,7 @@ def main():
 
     t0 = time.time()
     loss0 = None
-    with mesh:
+    with comm_scope, mesh:
         for step in range(args.steps):
             raw = next(pipe)
             batch_dev = {k: jax.device_put(jnp.asarray(v), bspec)
@@ -176,6 +184,9 @@ def main():
                           blocking=False)
     ckpt.wait()
     pipe.stop()
+    if ctx is not None:
+        print(f"[train/zero1-explicit] comm plan cache: "
+              f"{len(ctx.plans())} plans, {ctx.cache_stats}")
     print(f"done: {args.steps} steps in {time.time()-t0:.1f}s; "
           f"loss {loss0:.4f} -> {float(loss):.4f}")
 

@@ -12,13 +12,13 @@ from typing import Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..comms.staged_collectives import staged_reduce_scatter, tp_all_reduce
+from ..comms import api
 from ..configs.base import ModelConfig
 from ..kernels import ops
-from ..kernels.collective_matmul import matmul_reduce_scatter
 from .layers import apply_rope, dense, dense_init, rmsnorm, rmsnorm_init
 
-__all__ = ["attn_init", "attention", "attention_tp_out", "attention_tp_out_sp"]
+__all__ = ["attn_init", "attention", "attention_heads", "attention_tp_out",
+           "attention_tp_out_sp"]
 
 
 def attn_init(key, cfg: ModelConfig, *, dtype) -> Dict:
@@ -36,7 +36,7 @@ def attn_init(key, cfg: ModelConfig, *, dtype) -> Dict:
     return p
 
 
-def attention(
+def attention_heads(
     p: Dict,
     cfg: ModelConfig,
     x: jax.Array,  # (B, S, d)
@@ -44,13 +44,27 @@ def attention(
     positions: jax.Array,  # (B, S) absolute positions
     kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (B,Hkv,T,hd) x2
     cache_pos: Optional[jax.Array] = None,  # () position being written
+    qkv: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None,
 ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Everything up to (but not including) the output projection: QKV,
+    RoPE, flash/decode attention.  Returns the (B, S, H*hd) head outputs —
+    the explicit-TP block projects + combines them through the context
+    (``attention_tp_out``/``_sp``), the GSPMD path via ``p["wo"]``.
+
+    ``qkv`` optionally supplies precomputed (pre-reshape) projections —
+    the SP path computes them fused with the sequence all-gather
+    (``api.allgather_matmul``) and hands them in here.
+    """
     B, S, _ = x.shape
     H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
 
-    q = dense(p["wq"], x).reshape(B, S, H, hd)
-    k = dense(p["wk"], x).reshape(B, S, Hkv, hd)
-    v = dense(p["wv"], x).reshape(B, S, Hkv, hd)
+    if qkv is None:
+        q, k, v = dense(p["wq"], x), dense(p["wk"], x), dense(p["wv"], x)
+    else:
+        q, k, v = qkv
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
     if cfg.qk_norm:
         q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
         k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
@@ -81,68 +95,70 @@ def attention(
             out = ops.flash_attention(qh, ck, cv, causal=False, kv_mask=valid)
 
     out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    return out, new_cache
+
+
+def attention(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, d)
+    *,
+    positions: jax.Array,  # (B, S) absolute positions
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (B,Hkv,T,hd) x2
+    cache_pos: Optional[jax.Array] = None,  # () position being written
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    out, new_cache = attention_heads(
+        p, cfg, x, positions=positions, kv_cache=kv_cache, cache_pos=cache_pos
+    )
     return dense(p["wo"], out), new_cache
 
 
 def attention_tp_out(
     p: Dict,
     out_local: jax.Array,  # (B, S, local_q_dim) — this shard's heads
-    axis_names: Sequence[str],
+    axis_names: Optional[Sequence[str]] = None,
     *,
-    num_chunks: int = 1,
+    num_chunks: Optional[int] = None,
+    ctx=None,
 ) -> jax.Array:
     """Explicit tensor-parallel output projection (inside shard_map).
 
-    Heads are sharded over ``axis_names``; ``p["wo"]`` holds the matching
+    Heads are sharded over the context axes; ``p["wo"]`` holds the matching
     rows, so the local matmul is a partial sum over head shards.  The
-    staged all-reduce combines the partials — the TP-reduction analogue of
-    the OpTree all-gather, with the slow axes carrying only the scattered
-    payload and ``num_chunks`` pipelining the RS/AG stages.
+    context-planned all-reduce combines the partials — the TP-reduction
+    analogue of the OpTree all-gather, with the slow axes carrying only the
+    scattered payload.  ``axis_names``/``num_chunks`` are legacy overrides.
     """
     partial = dense(p["wo"], out_local)
-    return tp_all_reduce(partial, axis_names, num_chunks=num_chunks)
+    return api.all_reduce(partial, axis=-1, ctx=ctx, axes=axis_names,
+                          num_chunks=api.legacy_chunks(num_chunks))
 
 
 def attention_tp_out_sp(
     p: Dict,
     out_local: jax.Array,  # (B, S, local_q_dim) — this shard's heads
-    axis_names: Sequence[str],
+    axis_names: Optional[Sequence[str]] = None,
     *,
     seq_axis: int = 1,
-    fuse: object = "auto",
+    fuse: object = None,
     links: Optional[Dict] = None,
+    ctx=None,
 ) -> jax.Array:
     """Sequence-parallel TP output projection (inside shard_map).
 
     Like ``attention_tp_out`` but combining back to *sequence shards* (the
-    SP residual-stream layout): ``psum_scatter(out_local @ wo)`` over
-    ``axis_names`` along ``seq_axis``.  When ``fuse`` (default: the planner's
-    overlap model), the wo matmul is decomposed per sequence block so each
-    block feeds its reduce-scatter hop just-in-time — the combine's transfer
-    time hides behind the MXU.  A wo bias, if present, is added once to the
-    scattered output (never into the partial sums).
+    SP residual-stream layout): ``psum_scatter(out_local @ wo)`` along
+    ``seq_axis``, planned and (when the overlap model wins) fused per block
+    by the context (``api.matmul_reduce_scatter`` — the wo block matmuls
+    feed the ring just-in-time).  A wo bias, if present, is added once to
+    the scattered output (never into the partial sums).
     """
-    import math
-
-    from ..compat import axis_size
-    from .mlp import plan_tp_fusion
-
-    axis_names = tuple(axis_names)
-    w = p["wo"]["w"]
-    rows = out_local.size // out_local.shape[-1]
-    n_total = math.prod(axis_size(n) for n in axis_names)
-
-    if fuse == "auto":
-        fuse = plan_tp_fusion(
-            axis_names, max(1, rows // n_total), w.shape[0], w.shape[1],
-            out_local.dtype.itemsize, links=links,
-        )
-
-    if fuse:
-        out = matmul_reduce_scatter(out_local, w, axis_names, axis=seq_axis)
-    else:
-        partial = jnp.einsum("...d,df->...f", out_local, w)
-        out = staged_reduce_scatter(partial, axis_names, axis=seq_axis)
+    if ctx is None:
+        ctx = api.legacy_context(axis_names, links)
+    out = api.matmul_reduce_scatter(
+        out_local, p["wo"]["w"], axis=seq_axis, axes=axis_names,
+        ctx=ctx, fuse=fuse,
+    )
     if "b" in p["wo"]:
         out = out + p["wo"]["b"]
     return out

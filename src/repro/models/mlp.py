@@ -1,9 +1,11 @@
 """Feed-forward blocks: SwiGLU (default) and GELU (hubert/w2v2).
 
 ``ffn_apply`` is the pjit/GSPMD form (sharding via PartitionSpecs);
-``ffn_apply_tp`` is the explicit tensor-parallel form for shard_map
-execution, combining the row-parallel partial sums with the staged
-(OpTree-ordered) all-reduce.
+``ffn_apply_tp`` / ``ffn_apply_tp_sp`` are the explicit tensor-parallel
+forms for shard_map execution.  All collective decisions (stage order,
+mode, chunking, collective-matmul fusion) come from the active
+:class:`repro.comms.api.CommContext` — model code no longer threads
+engines, links or fuse flags per call.
 """
 from __future__ import annotations
 
@@ -12,13 +14,9 @@ from typing import Dict, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from ..compat import axis_size
-from ..comms.staged_allgather import link_for_axis, staged_all_gather
-from ..comms.staged_collectives import staged_reduce_scatter, tp_all_reduce
+from ..comms import api
 from ..configs.base import ModelConfig
-from ..core.planner import matmul_block_time, plan_collective_matmul
 from ..kernels import ops
-from ..kernels.collective_matmul import allgather_matmul, matmul_reduce_scatter
 from .layers import dense, dense_init
 
 __all__ = ["mlp_init", "mlp", "ffn_init", "ffn_apply", "ffn_apply_tp",
@@ -54,22 +52,24 @@ def ffn_apply(p: Dict, x: jax.Array) -> jax.Array:
 def ffn_apply_tp(
     p: Dict,
     x: jax.Array,
-    axis_names: Sequence[str],
+    axis_names: Optional[Sequence[str]] = None,
     *,
-    num_chunks: int = 1,
+    num_chunks: Optional[int] = None,
+    ctx=None,
 ) -> jax.Array:
     """Explicit tensor-parallel FFN body (inside shard_map).
 
     ``p`` holds this shard's slice of the hidden dim: gate/up are
     column-parallel (local d_ff columns), down is row-parallel (matching
     d_ff rows).  The down-projection therefore yields a *partial* sum over
-    hidden shards; the staged all-reduce combines it — on factorized meshes
-    the slow axes only ever carry the scattered payload, and ``num_chunks``
-    pipelines the reduction against nothing-yet (it overlaps RS/AG stages
-    across chunks).
+    hidden shards; the context-planned all-reduce combines it — on
+    factorized meshes the slow axes only ever carry the scattered payload.
+    ``axis_names``/``num_chunks`` are legacy overrides; by default the
+    active :func:`repro.comms.api.comm_context` supplies axes and policy.
     """
     partial = ffn_apply(p, x)
-    return tp_all_reduce(partial, axis_names, num_chunks=num_chunks)
+    return api.all_reduce(partial, axis=-1, ctx=ctx, axes=axis_names,
+                          num_chunks=api.legacy_chunks(num_chunks))
 
 
 def plan_tp_fusion(
@@ -88,64 +88,61 @@ def plan_tp_fusion(
     ``d_in @ d_out`` the projection, ``n_matmuls`` how many projections share
     one gather (SwiGLU gate+up = 2).  Static per trace — shapes and mesh axis
     sizes are known at trace time, so the planner runs inside shard_map.
+    One implementation with the context ops: delegates to
+    :meth:`repro.comms.api.CommContext.decide_fuse`.
     """
     axis_names = tuple(axis_names)
-    factors = [axis_size(n) for n in axis_names]
-    lks = [link_for_axis(n, links) for n in axis_names]
-    shard_bytes = rows * d_in * itemsize
-    t_blk = n_matmuls * matmul_block_time(rows, d_in, d_out)
-    return plan_collective_matmul(factors, lks, shard_bytes, t_blk).fuse
+    # decide_fuse is a pure computation, so a throwaway context carrying
+    # the caller's links is fine; without links the active scope decides
+    ctx = (api.current_context() if links is None
+           else api.CommContext(axis_names=axis_names, links=links))
+    return ctx.decide_fuse(
+        axis_names, rows, d_in, d_out, itemsize,
+        n_matmuls=n_matmuls, fuse="auto",
+    )
 
 
 def ffn_apply_tp_sp(
     p: Dict,
     x: jax.Array,
-    axis_names: Sequence[str],
+    axis_names: Optional[Sequence[str]] = None,
     *,
     seq_axis: int = 1,
-    fuse: object = "auto",
+    fuse: object = None,
     links: Optional[Dict] = None,
+    ctx=None,
 ) -> jax.Array:
     """Sequence-parallel explicit-TP FFN body (inside shard_map).
 
-    ``x`` arrives *sequence-sharded* over ``axis_names`` (the usual SP
+    ``x`` arrives *sequence-sharded* over the context axes (the usual SP
     residual-stream layout); ``p`` holds this shard's d_ff slice as in
-    ``ffn_apply_tp``.  The TP all-gather of ``x`` and the gate/up matmuls are
-    fused — each gathered sequence block is projected the hop it lands — and
-    the down-projection is decomposed per output block so it feeds the
+    ``ffn_apply_tp``.  The TP all-gather of ``x`` and the gate/up matmuls
+    share one context-planned gather (fused per hop when the overlap model
+    wins — ``api.allgather_matmul``) and the down-projection feeds the
     reduce-scatter back to sequence shards just-in-time
-    (``kernels.collective_matmul``).  Returns this shard's sequence slice of
-    the combined FFN output.
+    (``api.matmul_reduce_scatter``).  Returns this shard's sequence slice
+    of the combined FFN output.
 
-    ``fuse``: True / False / ``"auto"`` — auto asks
-    ``core.planner.plan_collective_matmul`` whether the overlap model
-    predicts a win for this (shape, mesh) point.
+    ``fuse``: None (context policy, default ``"auto"``) / True / False /
+    ``"auto"``.  ``links`` is a legacy override consulted only when no
+    context is installed.
     """
-    axis_names = tuple(axis_names)
+    if ctx is None:
+        ctx = api.legacy_context(axis_names, links)
     up_w = p["up"]["w"]
-    d_model, d_ff_local = up_w.shape
-    rows = x.size // x.shape[-1]  # per-block rows = local batch*seq product
-
-    if fuse == "auto":
-        fuse = plan_tp_fusion(
-            axis_names, rows, d_model, d_ff_local, x.dtype.itemsize,
-            links=links, n_matmuls=2 if "gate" in p else 1,
-        )
-
-    if not fuse:
-        xg = staged_all_gather(x, axis_names, axis=seq_axis)
-        partial = ffn_apply(p, xg)
-        return staged_reduce_scatter(partial, axis_names, axis=seq_axis)
 
     if "gate" in p:
-        _, (g, u) = allgather_matmul(
-            x, (p["gate"]["w"], up_w), axis_names, axis=seq_axis
+        _, (g, u) = api.allgather_matmul(
+            x, (p["gate"]["w"], up_w), axis=seq_axis, axes=axis_names,
+            ctx=ctx, fuse=fuse,
         )
         h = ops.swiglu(g, u)
     else:
-        _, u = allgather_matmul(x, up_w, axis_names, axis=seq_axis)
+        _, u = api.allgather_matmul(
+            x, up_w, axis=seq_axis, axes=axis_names, ctx=ctx, fuse=fuse)
         h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
-    return matmul_reduce_scatter(h, p["down"]["w"], axis_names, axis=seq_axis)
+    return api.matmul_reduce_scatter(
+        h, p["down"]["w"], axis=seq_axis, axes=axis_names, ctx=ctx, fuse=fuse)
 
 
 def mlp_init(key, cfg: ModelConfig, *, dtype) -> Dict:

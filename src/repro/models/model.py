@@ -15,16 +15,23 @@ remat.  MoE aux losses are accumulated through the scan carry.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from .attention import attention, attn_init
+from .attention import (
+    attention,
+    attention_heads,
+    attention_tp_out,
+    attention_tp_out_sp,
+    attn_init,
+)
 from .layers import dense, rmsnorm, rmsnorm_init
 from .mamba2 import mamba2_block, mamba2_init, mamba2_state_init
-from .mlp import mlp, mlp_init
+from .mlp import ffn_apply, ffn_apply_tp, ffn_apply_tp_sp, mlp, mlp_init
 from .moe import moe_block, moe_init
 from .rwkv6 import (
     rwkv6_channel_mix,
@@ -34,7 +41,9 @@ from .rwkv6 import (
 )
 from .sharding import constrain
 
-__all__ = ["init_params", "forward", "loss_fn", "init_decode_state", "decode_step"]
+__all__ = ["init_params", "forward", "loss_fn", "init_decode_state",
+           "decode_step", "transformer_block_tp", "transformer_block_ref",
+           "tp_block_specs"]
 
 ZERO_AUX = lambda: {"load_balance": jnp.zeros((), jnp.float32),
                     "router_z": jnp.zeros((), jnp.float32)}
@@ -417,3 +426,125 @@ def decode_step(
         cfg, params, {"tokens": tokens}, cache=state, cache_pos=cache_pos
     )
     return logits[:, -1], new_cache
+
+
+# --------------------------------------------------------------------------
+# explicit-TP transformer block (context collectives)
+# --------------------------------------------------------------------------
+
+_TP_COL = frozenset({"wq", "wk", "wv", "gate", "up"})   # column-parallel
+_TP_ROW = frozenset({"wo", "down"})                     # row-parallel
+
+
+def _tp_local_cfg(cfg: ModelConfig, n: int) -> ModelConfig:
+    if cfg.num_heads % n or cfg.num_kv_heads % n:
+        raise ValueError(
+            f"TP over {n} devices needs num_heads ({cfg.num_heads}) and "
+            f"num_kv_heads ({cfg.num_kv_heads}) divisible by it")
+    import dataclasses
+
+    return dataclasses.replace(
+        cfg, num_heads=cfg.num_heads // n, num_kv_heads=cfg.num_kv_heads // n)
+
+
+def transformer_block_tp(
+    layer: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, d) replicated; SP: (B, S_local, d) seq shards
+    *,
+    positions: jax.Array,  # (B, S) — full sequence in both variants
+    ctx=None,
+    sequence_parallel: bool = False,
+    seq_axis: int = 1,
+) -> jax.Array:
+    """The full explicit-TP transformer block (inside shard_map), running
+    entirely on context collectives (``repro.comms.api``) — the shard_map
+    counterpart of the GSPMD block (``transformer_block_ref``).
+
+    ``layer`` holds this shard's TP slices (``tp_block_specs`` gives the
+    matching shard_map in_specs): QKV and gate/up column-parallel, wo/down
+    row-parallel, norms replicated.
+
+    * **TP** (default): activations replicated; attention runs on the
+      local heads, and both combine points are context-planned staged
+      all-reduces.
+    * **SP** (``sequence_parallel=True``): activations arrive
+      sequence-sharded; the QKV projections share ONE context-planned
+      all-gather (``api.allgather_matmul`` — each gathered block projected
+      the hop it lands), and both combines return to sequence shards via
+      just-in-time ``api.matmul_reduce_scatter``.
+
+    All mode/chunking/fusion/stage-order decisions come from the active
+    :func:`repro.comms.api.comm_context` (or the explicit ``ctx``) — no
+    per-call comms plumbing.
+    """
+    from ..comms import api
+    from ..compat import axis_size
+
+    c = ctx if ctx is not None else api.current_context()
+    names = c._names(None)
+    n = math.prod(axis_size(a) for a in names)
+    lcfg = _tp_local_cfg(cfg, n)
+    ap = layer["attn"]
+
+    h = rmsnorm(layer["ln1"], x, cfg.norm_eps)
+    if sequence_parallel:
+        hg, (q, k, v) = api.allgather_matmul(
+            h, (ap["wq"]["w"], ap["wk"]["w"], ap["wv"]["w"]),
+            axis=seq_axis, ctx=c,
+        )
+        # biases stay out of the fused ring: added once to the projections
+        if "b" in ap["wq"]:
+            q, k, v = q + ap["wq"]["b"], k + ap["wk"]["b"], v + ap["wv"]["b"]
+        heads, _ = attention_heads(
+            ap, lcfg, hg, positions=positions, qkv=(q, k, v))
+        x = x + attention_tp_out_sp(ap, heads, seq_axis=seq_axis, ctx=c)
+        h2 = rmsnorm(layer["ln2"], x, cfg.norm_eps)
+        return x + ffn_apply_tp_sp(layer["ffn"], h2, seq_axis=seq_axis, ctx=c)
+
+    heads, _ = attention_heads(ap, lcfg, h, positions=positions)
+    x = x + attention_tp_out(ap, heads, ctx=c)
+    h2 = rmsnorm(layer["ln2"], x, cfg.norm_eps)
+    return x + ffn_apply_tp(layer["ffn"], h2, ctx=c)
+
+
+def transformer_block_ref(
+    layer: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, d)
+    *,
+    positions: jax.Array,
+) -> jax.Array:
+    """The same block on full (unsharded) parameters — the GSPMD path:
+    under jit with TP shardings the partitioner emits the collectives this
+    module's explicit form issues by hand."""
+    h, _ = attention(
+        layer["attn"], cfg, rmsnorm(layer["ln1"], x, cfg.norm_eps),
+        positions=positions,
+    )
+    x = x + h
+    return x + ffn_apply(layer["ffn"], rmsnorm(layer["ln2"], x, cfg.norm_eps))
+
+
+def tp_block_specs(layer: Dict, axis_names, *, sequence_parallel: bool = False):
+    """(x_spec, layer_specs) PartitionSpecs for running
+    ``transformer_block_tp`` under shard_map (or as GSPMD in_shardings for
+    the reference block): QKV/gate/up column-parallel over ``axis_names``,
+    wo/down row-parallel, everything else replicated; ``x`` replicated (TP)
+    or sequence-sharded (SP)."""
+    from jax.sharding import PartitionSpec as P
+
+    names = tuple(axis_names)
+
+    def leaf_spec(path, leaf):
+        keys = [k.key for k in path if hasattr(k, "key")]
+        proj = next((k for k in keys if k in _TP_COL | _TP_ROW), None)
+        if proj in _TP_COL:
+            return P(None, names) if keys[-1] == "w" else P(names)
+        if proj in _TP_ROW:
+            return P(names, None) if keys[-1] == "w" else P()
+        return P()
+
+    specs = jax.tree_util.tree_map_with_path(leaf_spec, layer)
+    x_spec = P(None, names, None) if sequence_parallel else P()
+    return x_spec, specs

@@ -1,11 +1,12 @@
-"""Explicit ZeRO-1 gradient sharding via the staged reduce-scatter.
+"""Explicit ZeRO-1 gradient sharding via the context-planned reduce-scatter.
 
 The pjit path (``opt_state_specs``) expresses ZeRO-1 as sharding specs and
 lets GSPMD emit the collectives.  This module is the shard_map form used by
 explicit-DP training loops: gradients are reduce-scattered over the data
-axes with the OpTree stage order (slow axes last, carrying only the final
-1/N shard), each rank updates its optimizer shard, and parameters are
-re-gathered with ``staged_all_gather`` / ``optree_all_gather``.
+axes through the active :class:`repro.comms.api.CommContext` (OpTree stage
+order — slow axes last, carrying only the final 1/N shard), each rank
+updates its optimizer shard, and parameters are re-gathered with the
+context all-gather.
 """
 from __future__ import annotations
 
@@ -15,9 +16,8 @@ from typing import Sequence
 import jax
 from jax import lax
 
+from ..comms import api
 from ..compat import axis_size
-from ..comms.staged_allgather import staged_all_gather
-from ..comms.staged_collectives import fit_chunks, staged_reduce_scatter
 
 __all__ = ["zero1_shard_grads", "zero1_unshard_params"]
 
@@ -47,8 +47,8 @@ def zero1_shard_grads(
 
     def shard(g):
         if g.ndim and g.shape[0] % n == 0:
-            chunks = fit_chunks(g.shape[0], n, num_chunks)
-            y = staged_reduce_scatter(g, fast_axes, num_chunks=chunks)
+            y = api.reduce_scatter(
+                g, axes=fast_axes, num_chunks=api.legacy_chunks(num_chunks))
             return lax.psum(y, slow_axes) if slow_axes else y
         return lax.psum(g, fast_axes + slow_axes)
 
@@ -71,11 +71,12 @@ def zero1_unshard_params(
     fast_axes = tuple(fast_axes)
 
     if reference is None:
-        return jax.tree.map(lambda p: staged_all_gather(p, fast_axes), params)
+        return jax.tree.map(
+            lambda p: api.all_gather(p, axes=fast_axes), params)
 
     def gather(p, full):
         if p.ndim and p.shape[0] != full.shape[0]:
-            return staged_all_gather(p, fast_axes)
+            return api.all_gather(p, axes=fast_axes)
         return p
 
     return jax.tree.map(gather, params, reference)

@@ -1,0 +1,309 @@
+"""Context-scoped collectives API (ISSUE 4): context nesting/override
+semantics, the auto-invalidating plan cache (links fingerprint), the
+chunk-collapse mode normalization, load_links validation, and the
+deprecation shims on the legacy entry points.
+
+Everything here is single-process: planning is meshless (``axis_sizes=``)
+so no fake devices are needed; executor semantics are covered by
+``tests/subproc/check_plan_executor.py``.
+"""
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from repro.comms import api
+from repro.comms.api import (
+    CacheStats,
+    CommContext,
+    PlanPolicy,
+    comm_context,
+    current_context,
+    links_fingerprint,
+)
+from repro.core.cost_model import price
+from repro.core.planner import DCN_LINK, ICI_LINK, LinkSpec, load_links
+
+SIZES = {"pod": 2, "tp": 4}
+NAMES = ("pod", "tp")
+
+
+def ctx_for_tests(**kw):
+    return CommContext(axis_names=NAMES, axis_sizes=SIZES, **kw)
+
+
+# --------------------------------------------------------------------------
+# context install / nesting / overrides
+# --------------------------------------------------------------------------
+
+class TestContextNesting:
+    def test_install_and_restore(self):
+        assert current_context(None) is None
+        with comm_context(axis_names=NAMES, axis_sizes=SIZES) as ctx:
+            assert current_context() is ctx
+        assert current_context(None) is None
+
+    def test_nested_inherits_axes_and_links(self):
+        links = {"pod": DCN_LINK, "tp": ICI_LINK}
+        with comm_context(axis_names=NAMES, axis_sizes=SIZES, links=links):
+            with comm_context() as inner:
+                assert inner.axis_names == NAMES
+                assert inner.links == links
+                assert inner.axis_sizes == SIZES
+
+    def test_nested_policy_override_merges(self):
+        with comm_context(axis_names=NAMES, axis_sizes=SIZES,
+                          policy=PlanPolicy(max_chunks=4)):
+            with comm_context(mode="perhop") as inner:
+                assert inner.policy.mode == "perhop"
+                assert inner.policy.max_chunks == 4  # inherited
+            outer = current_context()
+            assert outer.policy.mode is None  # untouched
+
+    def test_policy_mode_applies_to_plans(self):
+        with comm_context(axis_names=NAMES, axis_sizes=SIZES,
+                          mode="perhop") as ctx:
+            assert ctx.plan("ag", 2**20).mode == "perhop"
+        with comm_context(axis_names=NAMES, axis_sizes=SIZES,
+                          num_chunks=4) as ctx:
+            plan = ctx.plan("ag", 2**20)
+            assert plan.mode == "chunked" and plan.num_chunks == 4
+
+    def test_policy_forced_order(self):
+        for order in (("pod", "tp"), ("tp", "pod")):
+            ctx = ctx_for_tests(policy=PlanPolicy(order=order))
+            assert ctx.plan("ag", 2**20).axes == order
+            # RS runs the reverse (duality), AR is RS-order + reversed
+            assert ctx.plan("rs", 2**20).axes == tuple(reversed(order))
+            ar = ctx.plan("ar", 2**20)
+            assert ar.axes == (tuple(reversed(order)) + order)
+
+    def test_bad_policy_rejected(self):
+        with pytest.raises(ValueError, match="oneshot|chunked|perhop"):
+            PlanPolicy(mode="warp")
+        ctx = ctx_for_tests(policy=PlanPolicy(order=("pod", "nope")))
+        with pytest.raises(ValueError, match="permute"):
+            ctx.plan("ag", 2**20)
+
+    def test_no_axes_anywhere_raises(self):
+        with pytest.raises(ValueError, match="axes"):
+            CommContext()._names(None)
+
+
+# --------------------------------------------------------------------------
+# plan cache: hit / miss / invalidation
+# --------------------------------------------------------------------------
+
+class TestPlanCache:
+    def test_hit_and_miss_counters(self):
+        ctx = ctx_for_tests()
+        p1 = ctx.plan("ag", 2**20)
+        p2 = ctx.plan("ag", 2**20)
+        assert p1 is p2
+        assert ctx.cache_stats == CacheStats(hits=1, misses=1, invalidated=0)
+        ctx.plan("ag", 2**10)  # different payload -> new entry
+        ctx.plan("rs", 2**20)  # different collective -> new entry
+        assert ctx.cache_stats.misses == 3
+
+    def test_shape_dtype_in_key(self):
+        ctx = ctx_for_tests()
+        ctx.plan("ag", 2**20, shape=(8, 32), dtype=jnp.float32)
+        ctx.plan("ag", 2**20, shape=(8, 32), dtype=jnp.float32)
+        ctx.plan("ag", 2**20, shape=(4, 64), dtype=jnp.float32)
+        assert ctx.cache_stats.hits == 1 and ctx.cache_stats.misses == 2
+
+    def test_shard_bytes_always_in_key(self):
+        # the same (shape, dtype) means a LOCAL shard inside shard_map but a
+        # GLOBAL array outside it — the payload keeps those entries apart
+        ctx = ctx_for_tests()
+        p_local = ctx.plan("ag", 8 * 32 * 4, shape=(8, 32), dtype=jnp.float32)
+        p_global = ctx.plan("ag", 8 * 32 * 4 / 8, shape=(8, 32),
+                            dtype=jnp.float32)
+        assert p_local is not p_global
+        assert ctx.cache_stats.misses == 2 and ctx.cache_stats.hits == 0
+
+    def test_axis_sizes_in_key(self):
+        # the same axis NAME with a different size (another mesh seen by a
+        # shared/default context) must not collide
+        ctx = CommContext(axis_names=("tp",), axis_sizes={"tp": 4})
+        p4 = ctx.plan("ag", 2**10)
+        ctx.axis_sizes["tp"] = 8
+        p8 = ctx.plan("ag", 2**10)
+        assert p4.n == 4 and p8.n == 8
+        assert ctx.cache_stats.misses == 2 and ctx.cache_stats.hits == 0
+
+    def test_plan_usage_counts_issuance(self):
+        ctx = ctx_for_tests()
+        ctx.plan("ar", 2**20)
+        ctx.plan("ar", 2**20)  # same entry, issued twice
+        ctx.plan("rs", 2**20)
+        usage = dict()
+        for p, c in ctx.plan_usage():
+            usage[p.collective] = c
+        assert usage == {"ar": 2, "rs": 1}
+
+    def test_links_fingerprint_stability(self):
+        t1 = {"pod": DCN_LINK, "tp": ICI_LINK}
+        t2 = {"tp": ICI_LINK, "pod": DCN_LINK}  # order-insensitive
+        assert links_fingerprint(t1) == links_fingerprint(t2)
+        t3 = {"pod": DCN_LINK,
+              "tp": LinkSpec("ici", ICI_LINK.bandwidth_bytes, 2e-6)}
+        assert links_fingerprint(t1) != links_fingerprint(t3)
+        assert links_fingerprint(None) == "default"
+
+    def test_update_links_invalidates_and_replans(self):
+        ctx = ctx_for_tests(links={"pod": DCN_LINK, "tp": ICI_LINK})
+        before = ctx.plan("ag", 2**20)
+        ctx.plan("rs", 2**20)
+        assert ctx.cache_stats.invalidated == 0
+        # a fitted pod link 100x slower flips the planner's cost picture
+        ctx.update_links({"pod": LinkSpec("dcn-fitted", 62.5e6, 1e-4)})
+        assert ctx.cache_stats.invalidated == 2
+        after = ctx.plan("ag", 2**20)
+        assert after is not before
+        assert ctx.cache_stats.misses == 3  # re-planned, not served stale
+        pod_stage = [s for s in after.stages if s.axis == "pod"][0]
+        assert pod_stage.link.name == "dcn-fitted"
+
+    def test_update_links_noop_keeps_cache(self):
+        links = {"pod": DCN_LINK, "tp": ICI_LINK}
+        ctx = ctx_for_tests(links=links)
+        ctx.plan("ag", 2**20)
+        ctx.update_links(dict(links))  # identical table -> same fingerprint
+        assert ctx.cache_stats.invalidated == 0
+        ctx.plan("ag", 2**20)
+        assert ctx.cache_stats.hits == 1
+
+    def test_update_links_from_calibrate_file(self, tmp_path):
+        p = tmp_path / "fitted.json"
+        p.write_text(json.dumps({"fitted_links": {
+            "pod": {"name": "dcn", "bandwidth_bytes": 1e9, "alpha_s": 5e-5},
+        }}))
+        ctx = ctx_for_tests(links={"pod": DCN_LINK, "tp": ICI_LINK})
+        ctx.plan("ar", 2**20)
+        ctx.update_links(str(p))
+        assert ctx.cache_stats.invalidated == 1
+        assert ctx.links["pod"].bandwidth_bytes == 1e9
+        assert ctx.links["tp"] == ICI_LINK  # merged, not replaced
+
+    def test_plans_snapshot(self):
+        ctx = ctx_for_tests()
+        ctx.plan("ag", 2**20)
+        ctx.plan("rs", 2**20)
+        assert len(ctx.plans()) == 2
+
+
+# --------------------------------------------------------------------------
+# chunk-collapse normalization (satellite: labeled-chunked-executes-oneshot)
+# --------------------------------------------------------------------------
+
+class TestChunkNormalization:
+    def _chunked_plan(self):
+        ctx = ctx_for_tests(policy=PlanPolicy(mode="chunked", num_chunks=8))
+        plan = ctx.plan("ag", 8 * 2**20)
+        assert plan.mode == "chunked" and plan.num_chunks == 8
+        return plan
+
+    def test_collapse_to_one_normalizes_mode(self):
+        plan = self._chunked_plan()
+        fitted = plan.with_chunks(1)  # what fit_chunks does on a tiny shard
+        assert fitted.num_chunks == 1
+        assert fitted.mode == "oneshot"
+
+    def test_price_no_drift(self):
+        plan = self._chunked_plan()
+        t_norm = price(plan.with_chunks(1)).total_s
+        t_oneshot = price(plan.with_mode("oneshot")).total_s
+        assert t_norm == pytest.approx(t_oneshot, rel=1e-12)
+
+    def test_multi_chunk_keeps_mode(self):
+        plan = self._chunked_plan()
+        assert plan.with_chunks(4).mode == "chunked"
+        with pytest.raises(ValueError):
+            plan.with_chunks(0)
+
+
+# --------------------------------------------------------------------------
+# load_links / LinkSpec validation (satellite: silent-ignore bugfix)
+# --------------------------------------------------------------------------
+
+class TestLoadLinksValidation:
+    def _write(self, tmp_path, entries):
+        p = tmp_path / "links.json"
+        p.write_text(json.dumps(entries))
+        return p
+
+    def test_unknown_axis_raises_with_name(self, tmp_path):
+        p = self._write(tmp_path, {
+            "pod": DCN_LINK.to_json(), "typo": ICI_LINK.to_json()})
+        with pytest.raises(ValueError, match=r"unknown axes \['typo'\]"):
+            load_links(p, expect_axes=NAMES, allow_missing=True)
+
+    def test_missing_axis_raises_unless_allowed(self, tmp_path):
+        p = self._write(tmp_path, {"pod": DCN_LINK.to_json()})
+        with pytest.raises(ValueError, match=r"missing axes \['tp'\]"):
+            load_links(p, expect_axes=NAMES)
+        out = load_links(p, expect_axes=NAMES, allow_missing=True)
+        assert set(out) == {"pod"}
+
+    def test_no_expect_axes_keeps_old_behavior(self, tmp_path):
+        p = self._write(tmp_path, {"whatever": ICI_LINK.to_json()})
+        assert set(load_links(p)) == {"whatever"}
+
+    def test_from_json_rejects_negative_values(self):
+        with pytest.raises(ValueError, match="alpha_s"):
+            LinkSpec.from_json(
+                {"name": "x", "bandwidth_bytes": 1e9, "alpha_s": -1e-6})
+        with pytest.raises(ValueError, match="bandwidth"):
+            LinkSpec.from_json(
+                {"name": "x", "bandwidth_bytes": -1.0, "alpha_s": 1e-6})
+        with pytest.raises(ValueError, match="bandwidth"):
+            LinkSpec.from_json(
+                {"name": "x", "bandwidth_bytes": 0.0, "alpha_s": 1e-6})
+
+
+# --------------------------------------------------------------------------
+# deprecation shims
+# --------------------------------------------------------------------------
+
+class TestDeprecationShims:
+    def test_engine_warns_and_delegates(self):
+        from repro.comms import StagedCollectiveEngine, make_factorized_mesh
+
+        mesh = make_factorized_mesh([1], ["solo"])
+        with pytest.warns(DeprecationWarning, match="comm_context"):
+            eng = StagedCollectiveEngine(mesh, ("solo",))
+        assert isinstance(eng.ctx, CommContext)
+        x = jnp.arange(8, dtype=jnp.float32)
+        plan = eng.plan(x, "ag")
+        assert plan.meta["axis_names"] == ("solo",)
+        # the engine's cache IS the context cache
+        eng.plan(x, "ag")
+        assert eng.ctx.cache_stats.hits == 1
+
+    def test_tp_all_reduce_warns(self):
+        from repro.comms.staged_collectives import tp_all_reduce
+
+        with pytest.warns(DeprecationWarning, match="api.all_reduce"):
+            with pytest.raises(Exception):
+                # outside shard_map with a meshless default context the op
+                # cannot execute — the shim still warns first
+                tp_all_reduce(jnp.zeros((4, 4)), ("nope",))
+
+
+# --------------------------------------------------------------------------
+# module-op resolution errors
+# --------------------------------------------------------------------------
+
+class TestOpResolution:
+    def test_meshless_context_outside_shard_map_raises(self):
+        with comm_context(axis_names=NAMES, axis_sizes=SIZES):
+            with pytest.raises(ValueError, match="no mesh"):
+                api.all_gather(jnp.zeros((8,), jnp.float32))
+
+    def test_explicit_ctx_beats_installed(self):
+        inner = ctx_for_tests(policy=PlanPolicy(mode="perhop"))
+        with comm_context(axis_names=NAMES, axis_sizes=SIZES):
+            plan = inner.plan("ag", 2**20)
+            assert plan.mode == "perhop"
+            assert current_context().cache_stats.misses == 0
