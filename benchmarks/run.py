@@ -17,6 +17,10 @@ cost matters); ``derived`` carries the paper-comparable numbers.
   perhop  — hop-schedule mode decisions + collective-matmul fusion model
   ir      — unified CollectivePlan IR: one engine plan priced electrical +
             optical and validated in the conflict-checked simulator
+  order_search — cross-world stage-order search on an asymmetric links
+            table: the order the optical (Eq. 3 / RWA) pricer picks vs the
+            electrical winner, with the winner's price asserted equal to
+            the conflict-checked simulator's wall time
   tp_block — explicit-TP transformer block on context collectives
             (repro.comms.api) vs the GSPMD path: modeled electrical +
             optical + measured, off the same CollectivePlan objects
@@ -323,6 +327,50 @@ def ir():
                  f"stage_ms=" + "/".join(f"{t*1e3:.3f}" for t in rep.stage_times_s))
 
 
+def order_search():
+    """Cross-world stage-order search (ISSUE 5 tentpole): on an asymmetric
+    LinkSpec table the electrical planner (slow-axis-first AG) and the
+    optical Eq.-3/RWA pricer disagree about the stage order — the optical
+    winner routes the big factor's hops on the whole ring where the
+    wavelength reuse is better.  Asserts the acceptance criterion:
+    ``price(plan, optical) == simulate(schedule_from_ir(plan))`` for every
+    winner, and the AG order genuinely flips at low wavelength counts."""
+    import dataclasses
+
+    from repro.core import price, schedule_from_ir
+    from repro.core.planner import LinkSpec, search_stage_orders
+
+    # size-4 axis on the SLOW transport: electrically the AG wants it
+    # first (payload smallest there), optically its ring hops are cheaper
+    # as stage 1 — the two worlds flip (8-device mesh, w<=2)
+    axes = [("a", 2, LinkSpec("fast", 50e9, 1e-6)),
+            ("b", 4, LinkSpec("slow", 1e9, 1e-5))]
+    flipped_ag = None
+    for w in (1, 2, 64):
+        sys_w = dataclasses.replace(TERARACK, n_nodes=8, wavelengths=w)
+        for coll in ("ag", "rs", "ar"):
+            us, srch = _timeit(lambda c=coll, s=sys_w: search_stage_orders(
+                axes, 1 * 2**20, collective=c, backend="optical", system=s))
+            eb, ob = srch.best_by("electrical"), srch.best_by("optical")
+            # acceptance: the winner's optical price IS the simulated time
+            rep = simulate(
+                schedule_from_ir(ob.plan, sys_w.wavelengths), sys_w,
+                ob.plan.shard_bytes, check=True)
+            assert abs(rep.time_s - ob.optical_s) < 1e-12, (coll, w)
+            assert abs(rep.time_s - price(ob.plan, sys_w).total_s) < 1e-12
+            if coll == "ag" and w <= 2:
+                flipped_ag = srch.flipped
+                assert ob.optical_s < eb.optical_s  # strictly cheaper
+            _row(f"order_search/{coll}_w{w}", us,
+                 f"elec_order={'>'.join(eb.order)};"
+                 f"opt_order={'>'.join(ob.order)};"
+                 f"flipped={srch.flipped};"
+                 f"elec_pick_opt_us={eb.optical_s*1e6:.1f}@{eb.optical_steps};"
+                 f"opt_pick_opt_us={ob.optical_s*1e6:.1f}@{ob.optical_steps};"
+                 f"mode={ob.plan.mode}")
+    assert flipped_ag, "optical pricer should flip the AG order at low w"
+
+
 def tp_block():
     """Explicit-TP transformer block driven entirely by the context-scoped
     collectives API vs the GSPMD path — the ROADMAP "full shard_map
@@ -373,6 +421,7 @@ def main() -> None:
     collectives()
     perhop()
     ir()
+    order_search()
     tp_block()
     duality()
     roofline()

@@ -17,6 +17,11 @@
 #                                  # tests/test_comms_api.py suite + the
 #                                  # explicit-TP block vs GSPMD benchmark
 #                                  # on 8 host devices
+#   scripts/ci.sh --order-smoke    # cross-world stage-order search: the
+#                                  # plan-conformance fast subset + the
+#                                  # order-search microbench with
+#                                  # PlanPolicy(order="optical") driving
+#                                  # the engine on 8 host devices
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -35,6 +40,35 @@ api_grep_gate() {
     fi
 }
 api_grep_gate
+
+# order gate: the cross-world planning contract, in EVERY lane (pure
+# python, no devices, <1s) — on the canonical asymmetric links table the
+# optical backend must pick a strictly cheaper, strictly different stage
+# order than the electrical backend, and the winner's optical price must
+# be byte-identical to the conflict-checked simulator's wall time.
+order_gate() {
+    python - <<'PY'
+import dataclasses
+from repro.core import TERARACK, price, schedule_from_ir, search_stage_orders
+from repro.core.planner import LinkSpec
+from repro.optics import simulate
+
+axes = [("a", 2, LinkSpec("fast", 50e9, 1e-6)),
+        ("b", 4, LinkSpec("slow", 1e9, 1e-5))]
+sys2 = dataclasses.replace(TERARACK, n_nodes=8, wavelengths=2)
+for coll in ("ag", "rs", "ar"):
+    s = search_stage_orders(axes, 2**20, collective=coll,
+                            backend="optical", system=sys2)
+    eb, ob = s.best_by("electrical"), s.best_by("optical")
+    assert eb.order != ob.order, (coll, "order did not flip")
+    assert ob.optical_s < eb.optical_s, (coll, "optical pick not cheaper")
+    rep = simulate(schedule_from_ir(ob.plan, sys2.wavelengths), sys2,
+                   ob.plan.shard_bytes, check=True)
+    assert abs(rep.time_s - price(ob.plan, sys2).total_s) < 1e-12, coll
+print("order gate OK (optical flips + price==simulate, ag/rs/ar)")
+PY
+}
+order_gate
 
 if [[ "${1:-}" == "--fast" ]]; then
     shift
@@ -81,6 +115,19 @@ PY
     # outputs bit-identical to XLA, custom_vjp grads match unfused
     python tests/subproc/check_plan_executor.py
     echo "CI ir-smoke OK"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--order-smoke" ]]; then
+    shift
+    # (1) the plan-conformance suite (fast, in-process; the deterministic
+    # grid runs even without hypothesis — the suite never skips itself away)
+    python -m pytest -x -q tests/test_plan_conformance.py
+    # (2) the order-search bench: PlanPolicy(order="optical") drives the
+    # engine on 8 host devices; each row reports elec-best vs opt-best
+    python -m repro.launch.perf --collectives 2,4 --sizes-kb 16 --reps 2 \
+        --order optical --optical-w 2 "$@"
+    echo "CI order-smoke OK"
     exit 0
 fi
 

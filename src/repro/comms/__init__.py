@@ -19,6 +19,9 @@ from .staged_collectives import (  # noqa: F401
     tp_all_reduce,
 )
 from .ring_executor import (  # noqa: F401
+    hybrid_all_gather,
+    hybrid_all_reduce,
+    hybrid_reduce_scatter,
     perhop_all_gather,
     perhop_all_reduce,
     perhop_reduce_scatter,

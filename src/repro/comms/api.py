@@ -82,30 +82,54 @@ class PlanPolicy:
     """Per-context planning/execution overrides.
 
     ``mode``       — force the plan-level execution mode (``oneshot`` /
-                     ``chunked`` / ``perhop``); None follows the planner.
+                     ``chunked`` / ``perhop`` / ``hybrid``); None follows
+                     the planner.
     ``num_chunks`` — force the wavefront chunk count (implies ``chunked``
-                     when > 1); None follows the planner.
+                     when > 1, unless the plan already runs a chunked-
+                     family mode — a hybrid plan keeps its ring stages);
+                     None follows the planner.
     ``max_chunks`` — planner search bound for the chunk decision.
     ``fuse``       — collective-matmul fusion: True / False / ``"auto"``
                      (the ``plan_collective_matmul`` overlap model decides
                      per (shape, mesh) point).
-    ``order``      — force the all-gather stage order (axis names); the
-                     reduce-scatter order is its reverse (duality), the
-                     all-reduce chain is RS-order + reversed.  None lets
-                     the cost model brute-force the permutation.
+    ``order``      — the stage-order hook (cross-world planning):
+                       * ``None`` — the electrical cost-model planners pick
+                         the order directly (slow-axis-first AG, reversed
+                         RS), no search;
+                       * ``"electrical"`` / ``"optical"`` —
+                         ``core.planner.search_stage_orders`` enumerates
+                         candidate orders, prices every candidate plan
+                         under BOTH backends, and the named backend's
+                         winner is cached per context key — ``"optical"``
+                         makes the paper's Eq.-3 RWA pricing drive the
+                         engine's stage order;
+                       * an explicit axis-name tuple — force exactly this
+                         all-gather order (RS runs its reverse, AR the
+                         RS-order + reversed).
+    ``optical``    — the ``OpticalSystem`` the ``"optical"`` search prices
+                     with (None = TERARACK defaults); lower wavelength
+                     counts sharpen order differences (step counts tie at
+                     large w on small meshes).
     """
 
     mode: Optional[str] = None
     num_chunks: Optional[int] = None
     max_chunks: int = 8
     fuse: object = "auto"
-    order: Optional[Tuple[str, ...]] = None
+    order: object = None
+    optical: object = None
 
     def __post_init__(self):
-        if self.mode is not None and self.mode not in ("oneshot", "chunked", "perhop"):
-            raise ValueError(f"policy mode must be oneshot|chunked|perhop, "
-                             f"got {self.mode!r}")
-        if self.order is not None:
+        if self.mode is not None and self.mode not in (
+                "oneshot", "chunked", "perhop", "hybrid"):
+            raise ValueError(f"policy mode must be oneshot|chunked|perhop|"
+                             f"hybrid, got {self.mode!r}")
+        if isinstance(self.order, str):
+            if self.order not in ("electrical", "optical"):
+                raise ValueError(
+                    f"policy order must be 'electrical', 'optical' or an "
+                    f"axis-name tuple, got {self.order!r}")
+        elif self.order is not None:
             object.__setattr__(self, "order", tuple(self.order))
 
     def merged(self, **overrides) -> "PlanPolicy":
@@ -274,20 +298,57 @@ class CommContext:
         from .staged_collectives import plan_collectives  # lazy: cycle
 
         pol = self.policy
-        if pol.order is not None:
+        if pol.order in ("electrical", "optical"):
+            plan = self._plan_searched_order(collective, shard_bytes, names, sizes)
+        elif pol.order is not None:
             plan = self._plan_forced_order(collective, shard_bytes, names, sizes)
         else:
             plan = plan_collectives(
                 sizes, names, shard_bytes, links=self.links,
                 max_chunks=pol.max_chunks,
             )[collective]
-        if pol.mode is not None:
-            plan = plan.with_mode(pol.mode)
-        if pol.num_chunks is not None:
-            plan = plan.with_chunks(pol.num_chunks)
-            if pol.num_chunks > 1 and plan.mode != "chunked":
-                plan = plan.with_mode("chunked")
-        return plan
+        return _apply_overrides(plan, pol.mode, pol.num_chunks)
+
+    def _plan_searched_order(self, collective, shard_bytes, names, sizes):
+        """Cross-world order search (``PlanPolicy.order`` = ``"electrical"``
+        or ``"optical"``): enumerate candidate stage orders, price every
+        candidate CollectivePlan under BOTH cost backends
+        (``core.planner.search_stage_orders``), return the named backend's
+        winner.  ``plan`` caches the result per context key, so the search
+        runs once per (collective, payload, axes, policy, links) point —
+        the same plan object the executor interprets is the one the
+        optical pricer certified cheapest.  The search verdicts ride in
+        ``meta["order_search"]`` for telemetry."""
+        from ..core.planner import search_stage_orders
+        from .staged_allgather import link_for_axis
+
+        axes = [(n, sizes[n], link_for_axis(n, self.links)) for n in names]
+        kw = {} if self.policy.optical is None else {"system": self.policy.optical}
+        search = search_stage_orders(
+            axes, shard_bytes, collective=collective,
+            backend=self.policy.order, max_chunks=self.policy.max_chunks,
+            **kw,
+        )
+        best = search.best
+        eb = search.best_by("electrical")
+        ob = search.best_by("optical")
+        plan = best.plan
+        return dataclasses.replace(
+            plan,
+            meta={**plan.meta,
+                  "axis_names": tuple(names),
+                  "order_search": {
+                      "backend": search.backend,
+                      "order": best.order,
+                      "electrical_s": best.electrical_s,
+                      "optical_s": best.optical_s,
+                      "optical_steps": best.optical_steps,
+                      "electrical_best_order": eb.order,
+                      "optical_best_order": ob.order,
+                      # genuine cross-world disagreement only: a strictly
+                      # cheaper optical order, not an equal-cost tie-break
+                      "flipped": search.flipped,
+                  }})
 
     def _plan_forced_order(self, collective, shard_bytes, names, sizes):
         """Policy-forced stage order: build the schedule for exactly this
@@ -381,7 +442,8 @@ def comm_context(
 
     Nesting inherits: omitted mesh / axis_names / links come from the
     enclosing context, and ``policy_overrides`` (mode=, num_chunks=,
-    max_chunks=, fuse=, order=) merge into the enclosing policy — so
+    max_chunks=, fuse=, order=, optical=) merge into the enclosing
+    policy — so
 
         with comm_context(mesh, ("pod", "tp")):
             with comm_context(mode="perhop"):       # same scope, forced mode
@@ -469,14 +531,28 @@ def _fit_plan(plan: CollectivePlan, length: int, granularity: int) -> Collective
 def _apply_overrides(
     plan: CollectivePlan, mode: Optional[str], num_chunks: Optional[int]
 ) -> CollectivePlan:
-    """Per-call mode/chunk overrides on top of the cached (policy-resolved)
-    plan."""
+    """Mode/chunk overrides on top of a planner-resolved plan — ONE
+    implementation for the per-call and the policy path.
+
+    * mode alone — ``with_mode`` (restores that mode's own chunk decision;
+      a one-chunk wavefront normalizes to its pure mode);
+    * chunks > 1 alone — resize the wavefront; a plan not already in a
+      chunked-family mode is forced to ``chunked`` (``hybrid`` keeps its
+      ring stages, the count just resizes its wavefront);
+    * both explicit with a chunked-family mode — honored verbatim, so
+      ``mode="hybrid", num_chunks=4`` runs a 4-chunk hybrid even when the
+      planner's own hybrid scan collapsed to one chunk.
+    """
+    if mode in ("chunked", "hybrid") and num_chunks is not None \
+            and num_chunks > 1:
+        return dataclasses.replace(plan, mode=mode, num_chunks=num_chunks)
     if mode is not None:
         plan = plan.with_mode(mode)
     if num_chunks is not None:
         plan = plan.with_chunks(num_chunks)
-        if num_chunks > 1 and plan.mode != "chunked":
-            plan = plan.with_mode("chunked")
+        if num_chunks > 1 and plan.mode not in ("chunked", "hybrid"):
+            plan = dataclasses.replace(plan, mode="chunked",
+                                       num_chunks=num_chunks)
     return plan
 
 

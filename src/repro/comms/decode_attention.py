@@ -14,6 +14,14 @@ two passes:
 This is the shard_map primitive behind the pjit layout; its collectives are
 what XLA emits for that layout, written explicitly so serving stacks can
 call it directly.
+
+The two psum combines route through the context-scoped collectives API
+(``repro.comms.api.all_reduce``) — decode collectives plan through the
+innermost ``comm_context`` (``launch/serve.py`` installs one) and hit its
+plan cache like every other collective in the stack; head counts that
+don't divide the axis fall back to the flat ``lax.psum`` inside the api
+op, so the old contract is unchanged.  The pmax is a scalar-combine (not
+gather-shaped) and stays on ``lax``.
 """
 from __future__ import annotations
 
@@ -61,11 +69,14 @@ def sharded_decode_attention(
     l_local = jnp.sum(p, axis=-1)  # (B, H)
     o_local = jnp.einsum("bht,bhtd->bhd", p, vx)  # (B, H, hd)
 
-    # two-pass combine across the axis
+    # two-pass combine across the axis: the psums are context-planned
+    # (staged AR when the head dim divides the axis, flat psum otherwise)
+    from . import api  # local: comms.api imports this package lazily too
+
     m_global = lax.pmax(m_safe, axis_name)  # (B, H)
     alpha = jnp.exp(m_safe - m_global)
-    l_global = lax.psum(l_local * alpha, axis_name)
-    o_global = lax.psum(o_local * alpha[..., None], axis_name)
+    l_global = api.all_reduce(l_local * alpha, axes=(axis_name,))
+    o_global = api.all_reduce(o_local * alpha[..., None], axes=(axis_name,))
     l_global = jnp.where(l_global == 0.0, 1.0, l_global)
     out = o_global / l_global[..., None]
     return out[:, :, None, :].astype(q.dtype)  # (B, H, 1, hd)

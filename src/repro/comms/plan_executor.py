@@ -7,6 +7,11 @@ its stage chain onto the shard_map primitives:
 
   * plan mode ``chunked`` → the ``num_chunks``-chunk wavefront over
     blocking whole-stage collectives (``staged_collectives``);
+  * plan mode ``hybrid`` → the same chunk wavefront run OVER the per-hop
+    stage executors (``ring_executor.hybrid_*``): chunk i's stage j
+    overlaps chunk i-1's stage j+1 while every ring stage double-buffers
+    its own hops — the perhop-chunked combination the planner emits when
+    its modeled makespan beats both pure modes;
   * otherwise → the staged executors of ``ring_executor`` with one
     ``stage_modes`` entry per stage: a stage whose effective IR mode is
     ``perhop`` runs as a double-buffered ppermute ring, the rest as the
@@ -27,6 +32,9 @@ import jax
 
 from ..core.plan_ir import CollectivePlan, PlanStage, effective_stage_mode
 from .ring_executor import (
+    hybrid_all_gather,
+    hybrid_all_reduce,
+    hybrid_reduce_scatter,
     perhop_all_gather,
     perhop_reduce_scatter,
 )
@@ -76,6 +84,9 @@ def execute_plan(y: jax.Array, plan: CollectivePlan, *, axis: int = 0) -> jax.Ar
     names = plan_axis_names(plan)
     coll = plan.collective
     chunked = plan.mode == "chunked" and plan.num_chunks > 1
+    # a one-chunk hybrid degenerates to the per-hop path (same stages, no
+    # wavefront) — matching ``CollectivePlan.with_chunks`` normalization
+    hybrid = plan.mode == "hybrid" and plan.num_chunks > 1
 
     if coll == "ag":
         order = plan.axes
@@ -83,6 +94,11 @@ def execute_plan(y: jax.Array, plan: CollectivePlan, *, axis: int = 0) -> jax.Ar
             return staged_all_gather_chunked(
                 y, names, stage_order=order, axis=axis,
                 num_chunks=plan.num_chunks)
+        if hybrid:
+            return hybrid_all_gather(
+                y, names, stage_order=order, axis=axis,
+                num_chunks=plan.num_chunks,
+                stage_modes=_executor_modes(plan, plan.stages))
         return perhop_all_gather(
             y, names, stage_order=order, axis=axis,
             stage_modes=_executor_modes(plan, plan.stages))
@@ -93,6 +109,11 @@ def execute_plan(y: jax.Array, plan: CollectivePlan, *, axis: int = 0) -> jax.Ar
             return staged_reduce_scatter(
                 y, names, stage_order=order, axis=axis,
                 num_chunks=plan.num_chunks)
+        if hybrid:
+            return hybrid_reduce_scatter(
+                y, names, stage_order=order, axis=axis,
+                num_chunks=plan.num_chunks,
+                stage_modes=_executor_modes(plan, plan.stages))
         return perhop_reduce_scatter(
             y, names, stage_order=order, axis=axis,
             stage_modes=_executor_modes(plan, plan.stages))
@@ -105,6 +126,11 @@ def execute_plan(y: jax.Array, plan: CollectivePlan, *, axis: int = 0) -> jax.Ar
             return staged_all_reduce(
                 y, names, rs_order=rs_order, axis=axis,
                 num_chunks=plan.num_chunks)
+        if hybrid:
+            return hybrid_all_reduce(
+                y, names, rs_order=rs_order, axis=axis,
+                num_chunks=plan.num_chunks,
+                stage_modes=_executor_modes(plan, plan.stages))
         y = perhop_reduce_scatter(
             y, names, stage_order=rs_order, axis=axis,
             stage_modes=_executor_modes(plan, rs_stages))

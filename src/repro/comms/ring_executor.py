@@ -34,6 +34,8 @@ from .staged_collectives import (
     _axis_sizes,
     _check_order,
     _permute_blocks_to_order,
+    _split_rs_chunks,
+    _wavefront,
 )
 
 __all__ = [
@@ -42,6 +44,9 @@ __all__ = [
     "perhop_all_gather",
     "perhop_reduce_scatter",
     "perhop_all_reduce",
+    "hybrid_all_gather",
+    "hybrid_reduce_scatter",
+    "hybrid_all_reduce",
 ]
 
 
@@ -216,6 +221,150 @@ def perhop_reduce_scatter(
         else:
             y = lax.psum_scatter(y, name, scatter_dimension=0, tiled=True)
     return jnp.moveaxis(y, 0, axis) if axis != 0 else y
+
+
+# --------------------------------------------------------------------------
+# hybrid execution: the chunk wavefront OVER per-hop ring stages
+# --------------------------------------------------------------------------
+#
+# ``staged_collectives`` pipelines C chunks over BLOCKING whole-stage
+# collectives; the executors below run the same wavefront with each stage
+# dispatched per its planner stage mode — a "ring" stage is the
+# double-buffered ppermute ring, an "oneshot" stage the XLA collective — so
+# chunk i's stage j overlaps chunk i-1's stage j+1 AND every ring stage's
+# hops double-buffer internally.  This is the IR's ``hybrid`` plan mode
+# (``core.planner.choose_hop_schedule`` emits it when its modeled makespan
+# beats both pure modes); outputs stay bit-identical to the XLA one-shot
+# collectives exactly like the pure paths (ring AG == all_gather stacking
+# form; ring RS reduces in ring order — exact for exactly-representable
+# sums).
+
+def _hyb_ag_stage(ch: jax.Array, name: str, mode: str) -> jax.Array:
+    if mode == "ring":
+        return ring_all_gather_stage(ch, name)
+    return lax.all_gather(ch, name, axis=0, tiled=False)
+
+
+def _hyb_rs_stage(ch: jax.Array, name: str, mode: str) -> jax.Array:
+    if mode == "ring":
+        return ring_reduce_scatter_stage(ch, name)
+    return lax.psum_scatter(ch, name, scatter_dimension=0, tiled=True)
+
+
+def hybrid_all_gather(
+    x: jax.Array,
+    axis_names: Sequence[str],
+    *,
+    stage_order: Optional[Sequence[str]] = None,
+    axis: int = 0,
+    num_chunks: int = 2,
+    stage_modes: Optional[Sequence[str]] = None,
+) -> jax.Array:
+    """Chunk-wavefront per-hop staged all-gather: equals
+    ``lax.all_gather(x, tuple(axis_names), axis=axis, tiled=True)`` bit for
+    bit (same chunk interleave as ``staged_all_gather_chunked``, same ring
+    stages as ``perhop_all_gather``)."""
+    axis_names = tuple(axis_names)
+    order = (
+        _check_order(stage_order, axis_names)
+        if stage_order is not None
+        else axis_names
+    )
+    modes = _resolve_modes(stage_modes, len(order))
+
+    if axis < 0:
+        axis += x.ndim
+    y = jnp.moveaxis(x, axis, 0) if axis != 0 else x
+    shard = y.shape[0]
+    if shard % num_chunks:
+        raise ValueError(f"shard length {shard} not divisible by {num_chunks}")
+    per_chunk = shard // num_chunks
+    chunks = [y[c * per_chunk:(c + 1) * per_chunk] for c in range(num_chunks)]
+    chunks = _wavefront(
+        chunks, len(order),
+        lambda ch, j: _hyb_ag_stage(ch, order[j], modes[j]),
+    )
+    gathered = [_ag_finalize(ch, axis_names, order) for ch in chunks]
+    out = jnp.stack(gathered, axis=1)  # (N, C, per_chunk, ...)
+    n_total = out.shape[0]
+    out = out.reshape((n_total * shard,) + out.shape[3:])
+    return jnp.moveaxis(out, 0, axis) if axis != 0 else out
+
+
+def hybrid_reduce_scatter(
+    x: jax.Array,
+    axis_names: Sequence[str],
+    *,
+    stage_order: Optional[Sequence[str]] = None,
+    axis: int = 0,
+    num_chunks: int = 2,
+    stage_modes: Optional[Sequence[str]] = None,
+) -> jax.Array:
+    """Chunk-wavefront per-hop staged reduce-scatter: equals
+    ``lax.psum_scatter(x, tuple(axis_names), scatter_dimension=axis,
+    tiled=True)`` (exact for exactly-representable sums)."""
+    axis_names = tuple(axis_names)
+    order = (
+        _check_order(stage_order, axis_names)
+        if stage_order is not None
+        else tuple(reversed(axis_names))
+    )
+    modes = _resolve_modes(stage_modes, len(order))
+    sizes = _axis_sizes(axis_names)
+
+    if axis < 0:
+        axis += x.ndim
+    y = jnp.moveaxis(x, axis, 0) if axis != 0 else x
+    chunks = _split_rs_chunks(y, axis_names, order, sizes, num_chunks)
+    chunks = _wavefront(
+        chunks, len(order),
+        lambda ch, j: _hyb_rs_stage(ch, order[j], modes[j]),
+    )
+    out = chunks[0] if num_chunks == 1 else jnp.concatenate(chunks, axis=0)
+    return jnp.moveaxis(out, 0, axis) if axis != 0 else out
+
+
+def hybrid_all_reduce(
+    x: jax.Array,
+    axis_names: Sequence[str],
+    *,
+    rs_order: Optional[Sequence[str]] = None,
+    axis: int = 0,
+    num_chunks: int = 2,
+    stage_modes: Optional[Sequence[str]] = None,
+) -> jax.Array:
+    """Chunk-wavefront per-hop staged all-reduce (RS then AG over one plan,
+    the 2k-stage chain pipelined across chunks): equals ``lax.psum(x,
+    tuple(axis_names))`` up to ring-stage reduction order.  ``stage_modes``
+    covers the full 2k-stage chain, matching
+    ``choose_hop_schedule(..., collective="ar")``."""
+    axis_names = tuple(axis_names)
+    order = (
+        _check_order(rs_order, axis_names)
+        if rs_order is not None
+        else tuple(reversed(axis_names))
+    )
+    ag_order = tuple(reversed(order))
+    k = len(axis_names)
+    modes = _resolve_modes(stage_modes, 2 * k)
+    sizes = _axis_sizes(axis_names)
+
+    if axis < 0:
+        axis += x.ndim
+    y = jnp.moveaxis(x, axis, 0) if axis != 0 else x
+    length = y.shape[0]
+    chunks = _split_rs_chunks(y, axis_names, order, sizes, num_chunks)
+
+    def apply_stage(ch, j):
+        if j < k:
+            return _hyb_rs_stage(ch, order[j], modes[j])
+        return _hyb_ag_stage(ch, ag_order[j - k], modes[j])
+
+    chunks = _wavefront(chunks, 2 * k, apply_stage)
+    gathered = [_ag_finalize(ch, axis_names, ag_order) for ch in chunks]
+    out = jnp.stack(gathered, axis=1)  # (N, C, per_chunk, ...)
+    out = out.reshape((length,) + out.shape[3:])
+    return jnp.moveaxis(out, 0, axis) if axis != 0 else out
 
 
 def perhop_all_reduce(

@@ -50,8 +50,11 @@ from .planner import (  # noqa: F401
     AllGatherPlan,
     HopSchedule,
     LinkSpec,
+    OrderCandidate,
+    OrderSearch,
     choose_hop_schedule,
     load_links,
     plan_axis_order,
     plan_staged_allgather,
+    search_stage_orders,
 )

@@ -119,14 +119,24 @@ def _price_linkspec(plan) -> PriceReport:
     def barrier(s, payload):
         return (s.factor - 1) * (s.link.alpha_s + payload / s.link.bandwidth_bytes)
 
-    if plan.mode == "chunked" and plan.num_chunks > 1:
+    if plan.mode in ("chunked", "hybrid") and plan.num_chunks > 1:
+        # C-chunk wavefront makespan over per-chunk stage times.  Chunked
+        # pipelines blocking whole-stage collectives; hybrid pipelines the
+        # SAME wavefront over per-hop ring stages, so a stage whose hop
+        # structure is perhop contributes the overlap max-form on the
+        # 1/C-payload chunk instead of the barrier time.
         c = plan.num_chunks
-        times = tuple(barrier(s, s.payload_bytes / c) for s in plan.stages)
+        times = tuple(
+            perhop_stage_time(s.factor, s.payload_bytes / c, s.link)
+            if plan.mode == "hybrid" and s.mode == "perhop"
+            else barrier(s, s.payload_bytes / c)
+            for s in plan.stages
+        )
         return PriceReport("linkspec", plan.mode,
                            pipeline_makespan(times, c), times, num_chunks=c)
     times = []
     for s in plan.stages:
-        if plan.mode == "perhop" and s.mode == "perhop":
+        if plan.mode in ("perhop", "hybrid") and s.mode == "perhop":
             times.append(perhop_stage_time(s.factor, s.payload_bytes, s.link))
         else:
             times.append(barrier(s, s.payload_bytes))
@@ -168,8 +178,9 @@ def price(plan, model=None, *, detailed: bool = False) -> PriceReport:
 
     * ``model=None`` (or ``"electrical"``/``"linkspec"``) — the TPU-mesh
       alpha/bandwidth model from each stage's ``LinkSpec``: barrier stages
-      cost ``(f-1)·(α + p/B)``, per-hop stages the overlap max-form, and the
-      chunked mode prices the C-chunk wavefront makespan — numerically
+      cost ``(f-1)·(α + p/B)``, per-hop stages the overlap max-form, the
+      chunked mode prices the C-chunk wavefront makespan, and the hybrid
+      mode the same makespan over overlapped ring stage times — numerically
       identical to ``core.planner.choose_hop_schedule``'s modeled times for
       the same chain, so planner and pricer cannot drift.
     * ``model=OpticalSystem`` — the paper's Eq.-3 model on the RWA-lowered

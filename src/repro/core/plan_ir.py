@@ -39,8 +39,14 @@ AG.
 synchronized all-to-all round (paper §III-D; XLA blocking collective on the
 engine side); ``"perhop"`` — the stage runs as ``factor-1`` double-buffered
 ring hops (``comms.ring_executor``).  ``CollectivePlan.mode`` is the
-plan-level execution decision (``oneshot`` / ``chunked`` / ``perhop``);
-``num_chunks`` carries the wavefront chunk count for the chunked mode.
+plan-level execution decision (``oneshot`` / ``chunked`` / ``perhop`` /
+``hybrid``); ``num_chunks`` carries the wavefront chunk count for the
+chunked and hybrid modes.  ``hybrid`` is the perhop-chunked combination:
+the C-chunk wavefront flows OVER per-hop ring stages, so each pipeline
+stage is the overlapped ring (or the blocking collective where the stage's
+hop structure says ``oneshot``) on a 1/C-payload chunk — dominated by
+neither pure mode, never worse than either (the makespan of elementwise-
+smaller stage times over the same chunk candidates).
 Hops/transfers are materialized lazily (``expand_hops``) — consumers that
 only price or execute a plan never pay the O(N^2) enumeration.
 """
@@ -65,7 +71,7 @@ __all__ = [
 ]
 
 STAGE_MODES = ("oneshot", "perhop")
-PLAN_MODES = ("oneshot", "chunked", "perhop")
+PLAN_MODES = ("oneshot", "chunked", "perhop", "hybrid")
 
 
 @dataclass(frozen=True)
@@ -161,20 +167,40 @@ class CollectivePlan:
 
     def with_mode(self, mode: str) -> "CollectivePlan":
         """Same plan, different plan-level execution mode (the per-stage hop
-        structure is preserved; it only takes effect under ``perhop``)."""
+        structure is preserved; it takes effect under ``perhop``/``hybrid``).
+
+        The chunked and hybrid wavefronts carry independent chunk
+        decisions; a plan built from a ``HopSchedule`` records both in
+        ``meta["mode_chunks"]`` and switching into either mode restores the
+        matching count — so ``price(plan.with_mode(m))`` reproduces the
+        planner's modeled time for every ``m`` with no explicit
+        ``with_chunks`` bookkeeping (an explicit ``with_chunks`` afterwards
+        still wins).  A wavefront mode whose restored count is 1 normalizes
+        like ``with_chunks(1)`` does (chunked → oneshot, hybrid → perhop):
+        the label and the execution never disagree."""
         if mode not in PLAN_MODES:
             raise ValueError(f"plan mode must be one of {PLAN_MODES}, got {mode!r}")
-        return dataclasses.replace(self, mode=mode)
+        chunks = self.num_chunks
+        mode_chunks = self.meta.get("mode_chunks") if self.meta else None
+        if mode_chunks and mode in mode_chunks:
+            chunks = mode_chunks[mode]
+        if chunks == 1:
+            mode = {"chunked": "oneshot", "hybrid": "perhop"}.get(mode, mode)
+        return dataclasses.replace(self, mode=mode, num_chunks=chunks)
 
     def with_chunks(self, num_chunks: int) -> "CollectivePlan":
         """Same plan, different chunk count.  A count that collapses to 1
         (e.g. ``fit_chunks`` on a small shard) normalizes a ``chunked``
-        plan back to ``oneshot`` — the label and the execution never
-        disagree, and ``price(plan)`` is drift-free either way (a one-chunk
-        wavefront prices exactly as the one-shot barrier chain)."""
+        plan back to ``oneshot`` and a ``hybrid`` plan back to ``perhop``
+        (its one-chunk degenerate: the ring stages with no wavefront) — the
+        label and the execution never disagree, and ``price(plan)`` is
+        drift-free either way (a one-chunk wavefront prices exactly as the
+        barrier / overlapped stage chain)."""
         if num_chunks < 1:
             raise ValueError(f"num_chunks must be >= 1, got {num_chunks}")
-        mode = "oneshot" if (num_chunks == 1 and self.mode == "chunked") else self.mode
+        mode = self.mode
+        if num_chunks == 1:
+            mode = {"chunked": "oneshot", "hybrid": "perhop"}.get(mode, mode)
         return dataclasses.replace(self, num_chunks=num_chunks, mode=mode)
 
     # -- transfer-structure algebra -----------------------------------------
@@ -196,10 +222,10 @@ def gather_chain(plan: CollectivePlan) -> Tuple[Tuple[int, ...], Tuple[str, ...]
       ``schedule_from_ir``).
 
     Per-stage hop structure is the EFFECTIVE mode: a stage's ``perhop``
-    preference only materializes when the plan-level mode is ``perhop`` —
-    under ``oneshot``/``chunked`` every stage runs as a blocking collective,
-    exactly as the executor would run it.  Factor-1 stages carry no
-    transfers and are dropped.
+    preference only materializes when the plan-level mode is ``perhop`` or
+    ``hybrid`` — under ``oneshot``/``chunked`` every stage runs as a
+    blocking collective, exactly as the executor would run it.  Factor-1
+    stages carry no transfers and are dropped.
     """
     if plan.collective == "ar":
         raise ValueError("ar spans two chains; lower the halves separately")
@@ -216,8 +242,9 @@ def gather_chain(plan: CollectivePlan) -> Tuple[Tuple[int, ...], Tuple[str, ...]
 def effective_stage_mode(plan: CollectivePlan, stage: PlanStage) -> str:
     """The hop structure a stage actually executes/lowers with under the
     plan-level mode (stage ``perhop`` applies only when the plan is
-    ``perhop``)."""
-    return stage.mode if plan.mode == "perhop" else "oneshot"
+    ``perhop`` or ``hybrid`` — the hybrid wavefront flows over the same
+    ring stages the perhop mode runs)."""
+    return stage.mode if plan.mode in ("perhop", "hybrid") else "oneshot"
 
 
 def _ring_hops(

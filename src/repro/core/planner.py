@@ -36,6 +36,7 @@ __all__ = ["LinkSpec", "StagePlan", "AllGatherPlan", "AllReducePlan",
            "plan_reduce_scatter_order", "plan_all_reduce",
            "pipeline_makespan", "choose_num_chunks",
            "perhop_stage_time", "choose_hop_schedule",
+           "OrderCandidate", "OrderSearch", "search_stage_orders",
            "plan_collective_matmul", "matmul_block_time",
            "ICI_LINK", "DCN_LINK", "MXU_PEAK_FLOPS"]
 
@@ -445,9 +446,16 @@ class HopSchedule:
       * ``perhop``   — double-buffered ppermute rings (comms/ring_executor),
                        per-stage selectable via ``stage_modes`` ("ring" where
                        the overlap model wins, "oneshot" where a stage is too
-                       small for hop pipelining to matter, e.g. factor 2).
+                       small for hop pipelining to matter, e.g. factor 2);
+      * ``hybrid``   — the chunk wavefront OVER the per-hop ring stages:
+                       ``hybrid_chunks`` chunks pipeline through the same
+                       ``stage_modes`` chain, each stage costing the overlap
+                       max-form (ring) or barrier (oneshot) on a 1/C chunk.
+                       Elementwise ≤ the chunked stage times and equal to
+                       perhop at C=1, so it is never modeled worse than
+                       either pure mode; ties prefer the simpler modes.
 
-    All three modeled times come from the same ``LinkSpec``s;
+    All four modeled times come from the same ``LinkSpec``s;
     ``stage_exposed_bytes``/``stage_hidden_bytes`` carry the per-stage
     exposed-vs-hidden byte accounting of the per-hop mode.
     """
@@ -465,11 +473,14 @@ class HopSchedule:
     stages: Tuple[StagePlan, ...] = ()
     collective: str = "ag"
     shard_bytes: float = 0.0
+    hybrid_time_s: float = math.inf
+    hybrid_chunks: int = 1
 
     @property
     def time_s(self) -> float:
         return {"oneshot": self.oneshot_time_s, "chunked": self.chunked_time_s,
-                "perhop": self.perhop_time_s}[self.mode]
+                "perhop": self.perhop_time_s,
+                "hybrid": self.hybrid_time_s}[self.mode]
 
     @property
     def exposed_bytes(self) -> float:
@@ -487,7 +498,9 @@ class HopSchedule:
         executes it over (execution order — for ``ar`` the 2k-long RS+AG
         name sequence).  Per-stage hop structure maps ``"ring"`` →
         ``"perhop"``; the plan-level ``mode`` (overridable) selects which
-        modeled execution the plan carries.
+        modeled execution the plan carries — a ``hybrid`` plan carries the
+        hybrid wavefront's own chunk count, every other mode the chunked
+        decision.
         """
         from .plan_ir import CollectivePlan, PlanStage  # local: avoid a cycle
 
@@ -514,17 +527,24 @@ class HopSchedule:
             s.factor for s in (self.stages[: len(self.stages) // 2]
                                if self.collective == "ar" else self.stages)
         )
+        eff_mode = mode or self.mode
         return CollectivePlan(
             collective=self.collective,
             n=n,
             shard_bytes=self.shard_bytes,
             stages=ir_stages,
-            mode=mode or self.mode,
-            num_chunks=self.num_chunks,
+            mode=eff_mode,
+            num_chunks=(self.hybrid_chunks if eff_mode == "hybrid"
+                        else self.num_chunks),
             meta={"source": "hop_schedule",
                   "modeled": {"oneshot": self.oneshot_time_s,
                               "chunked": self.chunked_time_s,
-                              "perhop": self.perhop_time_s}},
+                              "perhop": self.perhop_time_s,
+                              "hybrid": self.hybrid_time_s},
+                  # per-mode chunk decisions: with_mode restores the right
+                  # count when flipping between chunked and hybrid
+                  "mode_chunks": {"chunked": self.num_chunks,
+                                  "hybrid": self.hybrid_chunks}},
         )
 
 
@@ -557,13 +577,17 @@ def choose_hop_schedule(
     collective: str = "ag",
     packet_bytes: int = TERARACK.packet_bytes,
 ) -> HopSchedule:
-    """Pick one-shot vs chunked-wavefront vs per-hop execution for a staged
-    collective, all from the same ``LinkSpec``s.
+    """Pick one-shot vs chunked-wavefront vs per-hop vs hybrid execution
+    for a staged collective, all from the same ``LinkSpec``s.
 
     ``factors``/``links`` are the planned *stage order* (``plan_axis_order``
     / ``plan_reduce_scatter_order`` output); ``shard_bytes`` is the
     scattered-end payload, as everywhere in this module.  For ``ar`` the
-    modeled chain is the full 2k-stage RS+AG pipeline.
+    modeled chain is the full 2k-stage RS+AG pipeline.  The hybrid
+    candidate (chunk wavefront over per-hop ring stages) reuses the perhop
+    ``stage_modes`` and the chunked candidate's power-of-two/packet-clamped
+    chunk scan, so it degenerates exactly to perhop at C=1 and to chunked
+    when no stage runs as a ring — ties resolve to the simpler mode.
     """
     stages = _stage_chain(factors, links, shard_bytes, collective)
 
@@ -603,12 +627,32 @@ def choose_hop_schedule(
         exposed.append(e)
         hidden.append(h)
 
+    # hybrid: the chunk wavefront over the per-hop stage chain — per chunk,
+    # ring stages cost the overlap max-form and oneshot stages the barrier,
+    # each on a 1/C payload (stage payloads are linear in the shard)
+    def hybrid_stage_times(c: int) -> List[float]:
+        return [
+            perhop_stage_time(s.factor, s.payload_bytes / c, s.link)
+            if m == "ring"
+            else (s.factor - 1) * (s.link.alpha_s
+                                   + (s.payload_bytes / c) / s.link.bandwidth_bytes)
+            for s, m in zip(stages, stage_modes)
+        ]
+
+    hybrid_chunks, hybrid = _best_chunks(
+        hybrid_stage_times, max_chunks,
+        shard_bytes=shard_bytes, packet_bytes=packet_bytes,
+    )
+
     mode = min(
-        (("oneshot", oneshot), ("chunked", chunked), ("perhop", perhop)),
+        (("oneshot", oneshot), ("chunked", chunked), ("perhop", perhop),
+         ("hybrid", hybrid)),
         key=lambda kv: kv[1],
     )[0]
     if mode == "chunked" and num_chunks == 1:
         mode = "oneshot"
+    if mode == "hybrid" and hybrid_chunks == 1:
+        mode = "perhop"  # one-chunk hybrid IS the per-hop schedule
     return HopSchedule(
         mode=mode,
         stage_modes=tuple(stage_modes),
@@ -621,7 +665,181 @@ def choose_hop_schedule(
         stages=tuple(stages),
         collective=collective,
         shard_bytes=float(shard_bytes),
+        hybrid_time_s=hybrid,
+        hybrid_chunks=hybrid_chunks,
     )
+
+
+# --------------------------------------------------------------------------
+# cross-world stage-order search (electrical AND optical pricing)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class OrderCandidate:
+    """One searched stage order, priced under BOTH cost worlds.
+
+    ``order`` is the all-gather-order axis naming of the candidate (the RS
+    execution order is its reverse, the AR chain RS-order + reversed — one
+    AG permutation determines all three); ``plan`` is the full
+    CollectivePlan ``choose_hop_schedule`` emitted for it, the very object
+    the executor would interpret.  ``electrical_s`` is ``price(plan)`` (the
+    LinkSpec model of the plan's chosen mode), ``optical_s``/
+    ``optical_steps`` are Eq. 3 on the RWA-lowered schedule
+    (``price(plan, system)`` == ``simulate(schedule_from_ir(plan, w))``).
+    """
+
+    order: Tuple[str, ...]
+    plan: object  # CollectivePlan (kept untyped: plan_ir imports us lazily)
+    electrical_s: float
+    optical_s: float
+    optical_steps: int
+
+
+def _order_rank_key(backend: str):
+    """Deterministic ranking key: backend time, then the (stringified —
+    names may be None) order tuple as the tie-break."""
+    time_of = {"electrical": lambda c: c.electrical_s,
+               "optical": lambda c: c.optical_s}[backend]
+    return lambda c: (time_of(c), tuple(str(n) for n in c.order))
+
+
+@dataclass(frozen=True)
+class OrderSearch:
+    """Result of ``search_stage_orders``: candidates ranked by ``backend``."""
+
+    collective: str
+    backend: str
+    candidates: Tuple[OrderCandidate, ...]
+    capped: bool = False  # True when max_candidates truncated the space
+
+    @property
+    def best(self) -> OrderCandidate:
+        return self.candidates[0]
+
+    def best_by(self, backend: str) -> OrderCandidate:
+        """The winner under one backend regardless of the search backend
+        (deterministic: time, then order, breaks ties)."""
+        return min(self.candidates, key=_order_rank_key(backend))
+
+    @property
+    def flipped(self) -> bool:
+        """True iff the two worlds GENUINELY disagree: the optical winner
+        is a different order than the electrical winner AND strictly
+        cheaper under Eq. 3.  Equal-cost candidates rank by the
+        deterministic order tie-break, so differing order tuples alone
+        (e.g. every stage fits one step at large w) are a tie, not a
+        flip."""
+        eb = self.best_by("electrical")
+        ob = self.best_by("optical")
+        return (eb.order != ob.order
+                and ob.optical_s < eb.optical_s * (1.0 - 1e-9))
+
+
+def _candidate_factorizations(
+    axes: Sequence[Tuple[Optional[str], int, LinkSpec]], max_k: Optional[int]
+) -> List[Tuple[Tuple[Optional[str], int, LinkSpec], ...]]:
+    """Stage chains to search: every permutation of the given axes; for a
+    SINGLE unnamed axis additionally its balanced k-stage factorizations
+    (the paper world, where sub-axis stages are executable) — named mesh
+    axes are atomic, the engine cannot split a shard_map axis."""
+    base: List[Tuple] = [tuple(p) for p in itertools.permutations(axes)]
+    if len(axes) == 1 and axes[0][0] is None and axes[0][1] > 1:
+        _, n, link = axes[0]
+        kmax = max_k or max(1, math.ceil(math.log2(max(n, 2))))
+        seen = {(n,)}
+        for k in range(2, kmax + 1):
+            factors = tuple(balanced_factors(n, k))
+            for perm in set(itertools.permutations(factors)):
+                if perm in seen:
+                    continue
+                seen.add(perm)
+                base.append(tuple((None, f, link) for f in perm))
+    return base
+
+
+def search_stage_orders(
+    axes: Sequence,
+    shard_bytes: float,
+    *,
+    collective: str = "ag",
+    backend: str = "electrical",
+    system=None,
+    max_chunks: int = 8,
+    max_candidates: int = 24,
+    max_k: Optional[int] = None,
+    packet_bytes: int = TERARACK.packet_bytes,
+) -> OrderSearch:
+    """Cross-world stage-order search: enumerate candidate stage
+    factorizations/permutations, price each full CollectivePlan through
+    BOTH cost backends, rank by ``backend``.
+
+    ``axes`` entries are ``(name, size, link)`` (name may be None for
+    paper-world plans, which then also search balanced factorizations of a
+    single axis).  Candidates are AG orders; the dual collectives derive
+    their execution order from each AG permutation (RS = reverse, AR = RS
+    order + its reverse), so one enumeration covers all three.
+
+    The electrical backend prices each candidate's chosen-mode LinkSpec
+    time (== ``choose_hop_schedule``'s decision signal).  The optical
+    backend lowers the same plan through ``schedule_from_ir`` and prices
+    Eq. 3 on the RWA step count — the stage ORDER changes the step count
+    (stage 1 routes on the whole ring, deeper stages inside shrinking
+    segments), which is why the two worlds can disagree; on asymmetric
+    LinkSpec tables the optical winner is often NOT slow-axis-first.
+    ``max_candidates`` caps the enumeration (``OrderSearch.capped`` reports
+    truncation); ranking ties break on the order tuple, so results are
+    deterministic.
+    """
+    from .cost_model import OpticalSystem, price  # lazy: cost_model imports us
+
+    if backend not in ("electrical", "optical"):
+        raise ValueError(
+            f"backend must be electrical|optical, got {backend!r}")
+    norm: List[Tuple[Optional[str], int, LinkSpec]] = []
+    for a in axes:
+        name, size, link = a
+        norm.append((name, int(size), link))
+    chains = _candidate_factorizations(norm, max_k)
+    capped = len(chains) > max_candidates
+    chains = chains[:max_candidates]
+
+    sys = system if system is not None else TERARACK
+    if not isinstance(sys, OpticalSystem):
+        raise TypeError(f"system must be an OpticalSystem, got {sys!r}")
+
+    cands: List[OrderCandidate] = []
+    for chain in chains:
+        ag_names = tuple(a[0] for a in chain)
+        if collective == "ag":
+            exec_chain = chain
+            plan_names = ag_names
+        elif collective == "rs":
+            exec_chain = tuple(reversed(chain))
+            plan_names = tuple(reversed(ag_names))
+        elif collective == "ar":
+            exec_chain = tuple(reversed(chain))  # the RS half's order
+            rs_names = tuple(reversed(ag_names))
+            plan_names = rs_names + tuple(reversed(rs_names))
+        else:
+            raise ValueError(f"collective must be ag|rs|ar, got {collective!r}")
+        sched = choose_hop_schedule(
+            [a[1] for a in exec_chain], [a[2] for a in exec_chain],
+            shard_bytes, max_chunks=max_chunks, collective=collective,
+            packet_bytes=packet_bytes,
+        )
+        names = plan_names if all(n is not None for n in ag_names) else None
+        plan = sched.to_ir(names)
+        opt = price(plan, sys)
+        cands.append(OrderCandidate(
+            order=ag_names,
+            plan=plan,
+            electrical_s=price(plan).total_s,
+            optical_s=opt.total_s,
+            optical_steps=opt.steps,
+        ))
+    cands.sort(key=_order_rank_key(backend))
+    return OrderSearch(collective=collective, backend=backend,
+                       candidates=tuple(cands), capped=capped)
 
 
 # --------------------------------------------------------------------------

@@ -355,7 +355,13 @@ def schedule_from_ir(plan, w: int) -> Schedule:
 
     Chunking (``plan.mode == "chunked"``) is an executor-side wavefront over
     whole-stage collectives; the optical step structure is unchanged, so the
-    lowering ignores ``num_chunks``.
+    lowering ignores ``num_chunks``.  The ``hybrid`` mode (chunk wavefront
+    OVER per-hop ring stages) lowers like ``perhop`` — each ring-preference
+    stage becomes its m-1 causally ordered hop step blocks
+    (``effective_stage_mode`` materializes stage ``perhop`` under both plan
+    modes) and the wavefront stays executor-side, so
+    ``price(plan, OpticalSystem)`` for a hybrid plan equals the simulator's
+    wall time on this lowering exactly as for every other mode.
     """
     from .plan_ir import effective_stage_mode  # local import: avoid a cycle
 

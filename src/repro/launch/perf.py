@@ -20,9 +20,9 @@ runs the staged-collective microbenchmarks instead: modeled-electrical
 (LinkSpec alpha/bandwidth), modeled-optical (paper Eq. 3 on the RWA-lowered
 schedule) and measured time — all three priced/measured off the SAME
 CollectivePlan IR object the engine executes — for each execution mode
-(one-shot stage barriers / chunked wavefront / per-hop ppermute rings) per
-AG/RS/AR per size, plus the XLA flat one-shot baseline, on a fake-device
-mesh of the given factorization.
+(one-shot stage barriers / chunked wavefront / per-hop ppermute rings /
+the perhop-chunked hybrid) per AG/RS/AR per size, plus the XLA flat
+one-shot baseline, on a fake-device mesh of the given factorization.
 
   --calibrate          fit per-axis LinkSpec alpha/bandwidth from the
                        measured sweep (least squares; printed as JSON and,
@@ -32,6 +32,17 @@ mesh of the given factorization.
                        specs instead of the hard-coded v5e constants (the
                        context's links-fingerprinted plan cache invalidates
                        itself) — the ROADMAP auto-calibration loop
+  --order electrical|optical
+                       run the cross-world stage-order search per plan
+                       (PlanPolicy.order): every candidate stage order is
+                       priced under BOTH cost worlds and the named
+                       backend's winner drives the executor.  Each
+                       collective also reports the electrical-best vs
+                       optical-best order and whether they disagree
+                       ("flipped") on this links table.
+  --optical-w W        wavelength count for the optical pricer in the
+                       order search (default: TERARACK's 64; small meshes
+                       need small w for step counts to differentiate)
 
   python -m repro.launch.perf --tp-block 2,4
 
@@ -118,11 +129,15 @@ def run_variant(arch, shape, name, overrides, out_dir):
     return row
 
 
-def _bench_setup(factors_csv: str, links_path=None):
+def _bench_setup(factors_csv: str, links_path=None, order=None,
+                 optical_w=None):
+    import dataclasses as dc
+
     import numpy as np
 
     from repro.comms import make_factorized_mesh
-    from repro.comms.api import CommContext
+    from repro.comms.api import CommContext, PlanPolicy
+    from repro.core.cost_model import TERARACK
     from repro.core.planner import DCN_LINK, ICI_LINK, load_links
 
     try:
@@ -138,7 +153,12 @@ def _bench_setup(factors_csv: str, links_path=None):
     # a --links file (a --calibrate output) overrides with fitted specs
     link_map = {names[i]: (DCN_LINK if i == 0 and len(factors) > 1 else ICI_LINK)
                 for i in range(len(factors))}
-    ctx = CommContext(mesh, tuple(names), links=link_map)
+    optical_sys = dc.replace(
+        TERARACK, n_nodes=n,
+        wavelengths=optical_w if optical_w else TERARACK.wavelengths)
+    policy = PlanPolicy(order=order, optical=optical_sys) if order \
+        else PlanPolicy()
+    ctx = CommContext(mesh, tuple(names), links=link_map, policy=policy)
     if links_path:
         # load_links validates the axis set against this mesh (unknown axes
         # raise); update_links invalidates any cached plans and re-plans —
@@ -165,12 +185,16 @@ def _timed(fn, *args, reps=10):
 
 
 def collectives_bench(factors_csv: str, sizes_kb_csv: str, reps: int = 10,
-                      links_path=None) -> None:
+                      links_path=None, order=None, optical_w=None) -> None:
     """Staged-collective microbenchmarks off the CollectivePlan IR: for each
     collective and size, the modeled-electrical (LinkSpec), modeled-optical
-    (Eq. 3 on the RWA-lowered schedule) and measured time of all three
-    execution modes — every number derived from the SAME plan object the
-    engine interprets — vs the XLA flat single-shot baseline."""
+    (Eq. 3 on the RWA-lowered schedule) and measured time of all four
+    execution modes (oneshot / chunked / perhop / hybrid) — every number
+    derived from the SAME plan object the engine interprets — vs the XLA
+    flat single-shot baseline.  With ``order=`` the context runs the
+    cross-world stage-order search and each row reports the
+    electrical-best vs optical-best order ("flipped" when the two worlds
+    disagree)."""
     import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -180,7 +204,7 @@ def collectives_bench(factors_csv: str, sizes_kb_csv: str, reps: int = 10,
     from repro.core.cost_model import TERARACK, plan_exposure, price
 
     factors, names, n, mesh, link_map, ctx = _bench_setup(
-        factors_csv, links_path)
+        factors_csv, links_path, order=order, optical_w=optical_w)
 
     for kb in (int(s) for s in sizes_kb_csv.split(",")):
         rows = kb * 256 // n * n  # f32 rows, divisible by the device count
@@ -208,35 +232,62 @@ def collectives_bench(factors_csv: str, sizes_kb_csv: str, reps: int = 10,
                 y, axis=0, ctx=ctx, mode=mode), x),
         }
 
+        ag_search = None
         for coll in ("ag", "rs", "ar"):
             fn, arg = entry[coll]
             plan = ctx.plan(coll, x.size * x.dtype.itemsize / n,
                             shape=tuple(x.shape), dtype=x.dtype)
+            if coll == "ag":
+                ag_search = plan.meta.get("order_search")
             modeled = {m: price(plan.with_mode(m)).total_s
-                       for m in ("oneshot", "chunked", "perhop")}
+                       for m in ("oneshot", "chunked", "perhop", "hybrid")}
             optical = price(plan, TERARACK)
             exposed, hidden = plan_exposure(plan)
             # jit per mode so reps measure execution, not tracing
             measured = {
                 m: _timed(jax.jit(lambda y, m=m, fn=fn: fn(y, mode=m)), arg,
                           reps=reps)
-                for m in ("oneshot", "chunked", "perhop")
+                for m in ("oneshot", "chunked", "perhop", "hybrid")
             }
             flat_us = _timed(jax.jit(flat[coll]), arg, reps=reps)
             parts = " ".join(
                 f"{m}={modeled[m]*1e6:.1f}/{measured[m]:.0f}us"
-                for m in ("oneshot", "chunked", "perhop"))
+                for m in ("oneshot", "chunked", "perhop", "hybrid"))
+            srch = plan.meta.get("order_search")
+            order_note = ""
+            if srch:
+                order_note = (
+                    f"order[{srch['backend']}]="
+                    f"{','.join(srch['order'])} "
+                    f"elec_best={','.join(srch['electrical_best_order'])} "
+                    f"opt_best={','.join(srch['optical_best_order'])} "
+                    f"flipped={srch['flipped']} ")
             print(f"[perf/collectives] {coll} {kb}KB mesh={factors} "
                   f"modeled/measured: {parts} "
                   f"xla_oneshot={flat_us:.0f}us "
                   f"optical={optical.total_s*1e6:.1f}us"
                   f"@{optical.steps}steps "
                   f"chosen={plan.mode} chunks={plan.num_chunks} "
+                  f"{order_note}"
                   f"stage_modes={list(plan.stage_modes)} "
                   f"exposed={sum(exposed)/2**10:.0f}KB "
                   f"hidden={sum(hidden)/2**10:.0f}KB "
                   f"(wall-clock on fake host devices; modeled times are the "
                   f"decision signal)")
+        if order and ag_search:
+            # one cross-world summary per size, straight off the cached AG
+            # plan's search verdict (the context already priced every
+            # candidate under both backends — no second sweep)
+            print(f"[perf/order] {kb}KB ag: electrical-best="
+                  f"{','.join(ag_search['electrical_best_order'])} "
+                  f"optical-best="
+                  f"{','.join(ag_search['optical_best_order'])} "
+                  f"winner[{ag_search['backend']}]="
+                  f"{','.join(ag_search['order'])} "
+                  f"({ag_search['electrical_s']*1e6:.1f}us elec, "
+                  f"{ag_search['optical_s']*1e6:.1f}us opt"
+                  f"@{ag_search['optical_steps']}steps) "
+                  f"flipped={ag_search['flipped']}")
 
 
 def tp_block_bench(factors_csv: str, reps: int = 5, links_path=None,
@@ -444,6 +495,15 @@ def main():
                          "this JSON file; with --collectives: load fitted "
                          "specs from it and plan with them instead of the "
                          "hard-coded v5e constants")
+    ap.add_argument("--order", default=None,
+                    choices=["electrical", "optical"],
+                    help="with --collectives: run the cross-world "
+                         "stage-order search per plan and let this backend "
+                         "pick the executed order; each row reports the "
+                         "electrical-best vs optical-best order")
+    ap.add_argument("--optical-w", type=int, default=None, metavar="W",
+                    help="wavelength count for the optical pricer in the "
+                         "--order search (default: TERARACK's 64)")
     ap.add_argument("--sizes-kb", default="64,1024")
     ap.add_argument("--shape")
     ap.add_argument("--variants", default="baseline")
@@ -463,7 +523,8 @@ def main():
                             links_path=args.links)
         else:
             collectives_bench(args.collectives, args.sizes_kb, args.reps,
-                              links_path=args.links)
+                              links_path=args.links, order=args.order,
+                              optical_w=args.optical_w)
         return
     if not args.arch:
         ap.error("--arch is required unless --collectives is given")

@@ -3,6 +3,16 @@
 Offline smoke:
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
       --requests 5
+
+The whole serve loop runs inside ONE ``comm_context`` over the local
+devices (axis ``"tp"``): any decode collective — in particular the
+sharded-KV combine (``comms/decode_attention.py``), which routes its psums
+through ``repro.comms.api.all_reduce`` — plans through this context and
+hits its plan cache instead of re-deriving stage orders per trace.  The
+cache/plan telemetry is reported when the server drains; the reduced
+single-device smoke decodes unsharded (0 plans, and the report says so) —
+the sharded combine's cache behavior is pinned by
+``tests/subproc/check_comms.py`` on an 8-device mesh.
 """
 import argparse
 import dataclasses
@@ -11,6 +21,8 @@ import time
 import jax
 import numpy as np
 
+from repro.comms import comm_context
+from repro.compat import make_mesh
 from repro.configs import get_config, reduced as reduce_cfg
 from repro.models import init_params
 from repro.runtime import BatchedServer, ServerConfig
@@ -37,16 +49,25 @@ def main():
         batch_size=args.batch_size, max_seq=args.max_seq,
         max_new_tokens=args.new_tokens))
 
-    rng = np.random.default_rng(0)
-    rids = [server.submit(rng.integers(0, cfg.vocab_size,
-                                       size=int(rng.integers(4, 20))))
-            for _ in range(args.requests)]
-    t0 = time.time()
-    results = server.run_until_drained()
-    dt = time.time() - t0
+    mesh = make_mesh((len(jax.devices()),), ("tp",))
+    with comm_context(mesh, ("tp",)) as ctx:
+        rng = np.random.default_rng(0)
+        rids = [server.submit(rng.integers(0, cfg.vocab_size,
+                                           size=int(rng.integers(4, 20))))
+                for _ in range(args.requests)]
+        t0 = time.time()
+        results = server.run_until_drained()
+        dt = time.time() - t0
     toks = sum(len(v) for v in results.values())
     print(f"served {len(rids)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s)")
+    n_plans = len(ctx.plans())
+    note = ("" if n_plans else
+            " — none issued: this run's decode path is unsharded; plans "
+            "appear when the KV cache shards across devices "
+            "(sharded_decode_attention)")
+    print(f"[serve/comms] plan cache: {n_plans} plans, "
+          f"{ctx.cache_stats}{note}")
 
 
 if __name__ == "__main__":

@@ -31,6 +31,31 @@ from repro.optim.zero1 import zero1_shard_grads, zero1_unshard_params
 from repro.checkpoint import Checkpointer
 
 
+def comm_plan_telemetry(ctx) -> list:
+    """Per-plan telemetry lines for one CommContext: the cache counters
+    (hits / misses / invalidated) and, per cached CollectivePlan, the
+    collective, payload, chosen execution mode/chunks, the stage order it
+    executes, how often it was issued, and — when the policy ran the
+    cross-world order search — which backend picked the order and whether
+    it flipped vs the other world.  Emitted every ``--log-every`` steps by
+    the explicit train loop (not just at exit), so a mid-run links update
+    (auto-calibration) is visible as invalidations + re-planned orders."""
+    st = ctx.cache_stats
+    lines = [f"comm plans={len(ctx.plans())} hits={st.hits} "
+             f"misses={st.misses} invalidated={st.invalidated}"]
+    for plan, issued in ctx.plan_usage():
+        order = ",".join(str(a) for a in plan.axes)
+        line = (f"  {plan.collective} shard={plan.shard_bytes / 2**10:.1f}KiB "
+                f"mode={plan.mode} chunks={plan.num_chunks} "
+                f"order=[{order}] issued=x{issued}")
+        srch = plan.meta.get("order_search")
+        if srch:
+            line += (f" picked_by={srch['backend']}"
+                     f" flipped={srch['flipped']}")
+        lines.append(line)
+    return lines
+
+
 def modeled_pod_traffic_note(grad_bytes: float, mesh) -> str:
     """Modeled per-device pod(DCN)-axis gradient-sync traffic per step.
 
@@ -62,6 +87,10 @@ def main():
                     help="smoke-scale config (CPU)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
     ap.add_argument("--ckpt-interval", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10,
+                    help="step-log interval; with --zero1 explicit each log "
+                         "also prints the comm context's per-plan telemetry "
+                         "(cache stats + chosen order per plan)")
     ap.add_argument("--zero1", choices=["spec", "explicit"], default="spec",
                     help="gradient sync: 'spec' lets GSPMD emit the "
                          "collectives from the ZeRO-1 sharding specs; "
@@ -173,20 +202,24 @@ def main():
             batch_dev = {k: jax.device_put(jnp.asarray(v), bspec)
                          for k, v in raw.items()}
             params, opt_state, loss = train_step(params, opt_state, batch_dev)
-            if step % 10 == 0 or step == args.steps - 1:
+            if step % args.log_every == 0 or step == args.steps - 1:
                 lv = float(loss)
                 loss0 = lv if loss0 is None else loss0
                 extra = f" [{traffic_note}]" if traffic_note else ""
                 print(f"step {step:5d} loss {lv:.4f} "
                       f"({(time.time()-t0)/(step+1):.2f}s/step){extra}")
+                if ctx is not None:
+                    for line in comm_plan_telemetry(ctx):
+                        print(f"[train/comms] {line}")
             if step and step % args.ckpt_interval == 0:
                 ckpt.save(step, {"params": params, "opt": opt_state},
                           blocking=False)
     ckpt.wait()
     pipe.stop()
     if ctx is not None:
-        print(f"[train/zero1-explicit] comm plan cache: "
-              f"{len(ctx.plans())} plans, {ctx.cache_stats}")
+        print("[train/zero1-explicit] final comm telemetry:")
+        for line in comm_plan_telemetry(ctx):
+            print(f"[train/comms] {line}")
     print(f"done: {args.steps} steps in {time.time()-t0:.1f}s; "
           f"loss {loss0:.4f} -> {float(loss):.4f}")
 

@@ -320,6 +320,36 @@ for valid_len in (1, 17, 40, 64):
     )(q, kc, vc)
     check(f"sharded_decode_attention len={valid_len}", got_att, want_att, atol=2e-5)
 
+# ---- decode collectives hit the context's plan cache (ISSUE 5) ------------
+# sharded_decode_attention's psum combines route through api.all_reduce:
+# installed context = planned collectives + ONE cache entry per combine
+# shape; a second trace re-uses the plans (hits), it does not re-plan.
+from repro.comms.api import comm_context
+
+with comm_context(mesh1, ("r",)) as dctx:
+    vl = jnp.asarray(40, jnp.int32)
+    mask = jnp.arange(T)[None, :] < vl
+    want_att = kref.flash_attention(
+        q, kc, vc, causal=False, kv_mask=jnp.broadcast_to(mask, (B, T)))
+    run = lambda: shmap(
+        lambda qq, kk, vv: sharded_decode_attention(
+            qq, kk, vv, axis_name="r", valid_len=vl),
+        mesh1, (P(), P(None, None, "r", None), P(None, None, "r", None)), P(),
+    )(q, kc, vc)
+    got_ctx = run()
+    check("decode attention under comm_context", got_ctx, want_att, atol=2e-5)
+    misses_after_first = dctx.cache_stats.misses
+    check("decode all-reduces planned via context",
+          misses_after_first >= 1, True, exact=True)
+    run()  # second trace: plans come from the cache
+    check("decode re-trace hits the plan cache",
+          dctx.cache_stats.hits >= 1
+          and dctx.cache_stats.misses == misses_after_first, True, exact=True)
+    # the cached plans are the real IR objects (priceable)
+    from repro.core import price as _price
+    check("decode cached plans priceable",
+          all(_price(p).total_s > 0 for p in dctx.plans()), True, exact=True)
+
 # ---- report ---------------------------------------------------------------
 bad = [n for n, ok in checks if not ok]
 print(f"{len(checks) - len(bad)}/{len(checks)} comms checks passed")

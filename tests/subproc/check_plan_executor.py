@@ -12,6 +12,14 @@ Contracts (ISSUE 3):
     the conflict-checked optical simulator;
   * ``allgather_matmul`` / ``matmul_reduce_scatter`` gradients (custom_vjp,
     fused-ring backward) match the unfused XLA composition's gradients.
+
+Contracts (ISSUE 5, cross-world order search + hybrid execution):
+  * on an asymmetric links table, ``PlanPolicy(order="optical")`` picks a
+    DIFFERENT stage order than ``order="electrical"`` with strictly lower
+    simulated Eq.-3 time, and the executor runs that exact plan
+    bit-identically to the XLA one-shot collectives;
+  * the ``hybrid`` mode (chunk wavefront over per-hop ring stages) stays
+    bit-identical too, in both stage orders.
 """
 import os
 
@@ -280,6 +288,71 @@ for shard0, tag, exact in ((True, "bitexact", True), (False, "dense", False)):
             check("tp_block gspmd-partitioned bitexact",
                   gspmd(x_pm1, layer_tp), ref, exact=True)
     assert ctx_tp.cache_stats.misses > 0  # the block planned via the context
+
+# ---- ISSUE 5: optical stage-order search + hybrid execution ---------------
+# Asymmetric links: the size-4 axis rides the SLOW transport.  The
+# electrical planner puts it first for the all-gather (smallest payload on
+# the slow link); the optical Eq.-3/RWA pricer at w=2 prefers running its
+# ring hops as stage 1 (whole-ring wavelength reuse) — a strictly cheaper,
+# strictly different order.  The executor must run BOTH plans (and the new
+# hybrid mode) bit-identically to the XLA one-shot collectives.
+import dataclasses as _dc
+
+from repro.comms.api import PlanPolicy, all_gather, all_reduce, reduce_scatter
+from repro.comms.api import CommContext
+from repro.core.planner import LinkSpec
+
+ASYM_LINKS = {"a": LinkSpec("fast", 50e9, 1e-6),
+              "b": LinkSpec("slow", 1e9, 1e-5)}
+SYS_W2 = _dc.replace(TERARACK, n_nodes=8, wavelengths=2)
+ctx_elec = CommContext(mesh, names, links=ASYM_LINKS,
+                       policy=PlanPolicy(order="electrical", optical=SYS_W2))
+ctx_opt = CommContext(mesh, names, links=ASYM_LINKS,
+                      policy=PlanPolicy(order="optical", optical=SYS_W2))
+
+xb = jnp.arange(2**14, dtype=jnp.float32)  # 64 KiB: big enough to chunk
+xbs = jax.device_put(xb, NamedSharding(mesh, P(names)))
+shard_b = xb.size * xb.dtype.itemsize / 8
+
+for coll in ("ag", "rs", "ar"):
+    pe = ctx_elec.plan(coll, shard_b, shape=tuple(xb.shape), dtype=xb.dtype)
+    po = ctx_opt.plan(coll, shard_b, shape=tuple(xb.shape), dtype=xb.dtype)
+    srch = po.meta["order_search"]
+    checks.append((f"order {coll} flipped", pe.axes != po.axes
+                   and srch["flipped"]))
+    # the optical pick is STRICTLY cheaper under Eq. 3 (not a tie-break)
+    checks.append((
+        f"order {coll} optical strictly cheaper",
+        price(po, SYS_W2).total_s < price(pe, SYS_W2).total_s,
+    ))
+    # price == simulate for the winner, conflict-checked
+    rep = simulate(schedule_from_ir(po, SYS_W2.wavelengths), SYS_W2,
+                   po.shard_bytes, check=True)
+    checks.append((f"order {coll} price==sim",
+                   abs(rep.time_s - price(po, SYS_W2).total_s) < 1e-12))
+
+# both contexts' searched plans execute bit-identically to XLA, in the
+# planned mode AND forced hybrid (chunk wavefront over ring stages)
+for tag, ctx_i in (("elec", ctx_elec), ("optical", ctx_opt)):
+    for mode, chunks in ((None, None), ("hybrid", 2), ("hybrid", 4)):
+        mtag = f"{tag}/{mode or 'planned'}" + (f"x{chunks}" if chunks else "")
+        check(f"order ag {mtag}",
+              all_gather(xbs, ctx=ctx_i, mode=mode, num_chunks=chunks),
+              xb, exact=True)
+        check(f"order rs {mtag}",
+              reduce_scatter(xb, ctx=ctx_i, mode=mode, num_chunks=chunks),
+              8 * xb, exact=True)
+        check(f"order ar {mtag}",
+              all_reduce(xb, axis=0, ctx=ctx_i, mode=mode, num_chunks=chunks),
+              8 * xb, exact=True)
+
+# hybrid via the default (symmetric-links) engine too: planned mode at this
+# size may already BE hybrid; force a chunked wavefront explicitly as well
+check("engine ag hybrid", eng.all_gather(xs, mode="hybrid"), x, exact=True)
+check("engine rs hybrid", eng.reduce_scatter(x, mode="hybrid"), 8 * x,
+      exact=True)
+check("engine ar hybrid", eng.all_reduce(x, mode="hybrid"), 8 * x,
+      exact=True)
 
 # ---------------------------------------------------------------------------
 failed = [n for n, ok in checks if not ok]

@@ -67,7 +67,10 @@ class TestContextNesting:
         with comm_context(axis_names=NAMES, axis_sizes=SIZES,
                           num_chunks=4) as ctx:
             plan = ctx.plan("ag", 2**20)
-            assert plan.mode == "chunked" and plan.num_chunks == 4
+            # forced chunk count resizes the wavefront; a planner-picked
+            # hybrid keeps its ring stages (chunked-family), anything else
+            # is forced to the chunked wavefront
+            assert plan.mode in ("chunked", "hybrid") and plan.num_chunks == 4
 
     def test_policy_forced_order(self):
         for order in (("pod", "tp"), ("tp", "pod")):

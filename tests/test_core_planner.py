@@ -152,8 +152,13 @@ class TestHopSchedule:
                 hs = choose_hop_schedule(
                     [2, 16], [DCN_LINK, ICI_LINK], shard, collective=coll)
                 assert hs.perhop_time_s <= hs.oneshot_time_s * (1 + 1e-12)
+                # the hybrid wavefront dominates both chunked and perhop
+                # (ISSUE 5); the chosen mode is the argmin of all four
+                assert hs.hybrid_time_s <= min(
+                    hs.chunked_time_s, hs.perhop_time_s) * (1 + 1e-12)
                 assert hs.time_s == min(
-                    hs.oneshot_time_s, hs.chunked_time_s, hs.perhop_time_s)
+                    hs.oneshot_time_s, hs.chunked_time_s, hs.perhop_time_s,
+                    hs.hybrid_time_s)
 
     def test_factor2_stages_stay_oneshot(self):
         from repro.core.planner import choose_hop_schedule

@@ -106,6 +106,63 @@ class TestElasticReplan:
         assert p256.total_time_s > 0
 
 
+class TestCommTelemetry:
+    """launch/train.py emits per-plan comm telemetry every --log-every
+    steps (ISSUE 5): cache counters + per-plan mode/chunks/order/issue
+    counts, including the order-search verdict when the policy ran one.
+    Exercised meshless (axis_sizes planning) — no devices needed."""
+
+    def _ctx(self, **policy):
+        from repro.comms.api import CommContext, PlanPolicy
+        from repro.core.planner import LinkSpec
+
+        links = {"a": LinkSpec("fast", 50e9, 1e-6),
+                 "b": LinkSpec("slow", 1e9, 1e-5)}
+        return CommContext(axis_names=("a", "b"), links=links,
+                           axis_sizes={"a": 2, "b": 4},
+                           policy=PlanPolicy(**policy))
+
+    def test_lines_cover_cache_and_plans(self):
+        from repro.launch.train import comm_plan_telemetry
+
+        ctx = self._ctx()
+        ctx.plan("ag", 2**20)
+        ctx.plan("ar", 2**16)
+        ctx.plan("ag", 2**20)  # hit
+        lines = comm_plan_telemetry(ctx)
+        assert lines[0].startswith("comm plans=2 ")
+        assert "hits=1" in lines[0] and "misses=2" in lines[0]
+        assert len(lines) == 3  # header + one line per cached plan
+        ag_line = next(l for l in lines[1:] if l.strip().startswith("ag"))
+        assert "order=[" in ag_line and "mode=" in ag_line
+        assert "issued=x2" in ag_line  # deduplicated plan, issued twice
+
+    def test_order_search_verdict_surfaces(self):
+        import dataclasses
+
+        from repro.core.cost_model import TERARACK
+        from repro.launch.train import comm_plan_telemetry
+
+        sys2 = dataclasses.replace(TERARACK, n_nodes=8, wavelengths=2)
+        ctx = self._ctx(order="optical", optical=sys2)
+        ctx.plan("ag", 2**20)
+        lines = comm_plan_telemetry(ctx)
+        ag_line = next(l for l in lines[1:] if l.strip().startswith("ag"))
+        assert "picked_by=optical" in ag_line
+        assert "flipped=True" in ag_line  # asymmetric table: worlds disagree
+
+    def test_invalidation_visible(self):
+        from repro.core.planner import LinkSpec
+        from repro.launch.train import comm_plan_telemetry
+
+        ctx = self._ctx()
+        ctx.plan("ag", 2**20)
+        ctx.update_links({"a": LinkSpec("fitted", 40e9, 2e-6)})
+        lines = comm_plan_telemetry(ctx)
+        assert "invalidated=1" in lines[0]
+        assert len(lines) == 1  # cache dropped; no stale plan lines
+
+
 class TestArtifacts:
     """The committed dry-run artifacts stay self-consistent."""
 

@@ -1,0 +1,361 @@
+"""Plan-conformance suite (ISSUE 5): planner, pricer, simulator and
+executor semantics locked to each other across the searched plan space.
+
+The invariants, swept over factorizations / stage orders / chunk counts /
+link tables / payloads:
+
+  (a) ``price(plan, optical)`` equals ``simulate(schedule_from_ir(plan))``
+      wall time for EVERY searched candidate — the optical pricer that
+      ranks stage orders IS the conflict-checked simulator, byte for byte;
+  (b) electrical ``price`` reproduces ``choose_hop_schedule``'s modeled
+      time for every mode (oneshot / chunked / perhop / hybrid) — the
+      planner's decision signal and the pricer cannot drift;
+  (c) the hybrid wavefront's modeled makespan never exceeds the better of
+      the pure modes (it degenerates to perhop at C=1 and its stage times
+      are elementwise <= the chunked stage times);
+  (d) ``with_chunks(1)`` normalization is drift-free: a chunked plan
+      normalizes to oneshot and a hybrid plan to perhop, at identical
+      prices — the label and the execution never disagree.
+
+Each invariant is one check function with TWO drivers: hypothesis
+``@given`` sweeps when hypothesis is installed, and a deterministic
+parametrized grid otherwise — the suite locks the contracts down in both
+environments instead of skipping itself away.  Everything here is
+single-process planner/cost-model work (no devices); the executor side of
+the same contracts runs in ``tests/subproc/check_plan_executor.py``
+(subproc lane).
+"""
+import dataclasses
+import itertools
+import math
+
+import pytest
+
+from repro.core import (
+    TERARACK,
+    choose_hop_schedule,
+    price,
+    schedule_from_ir,
+    search_stage_orders,
+    validate_schedule,
+)
+from repro.core.planner import DCN_LINK, ICI_LINK, LinkSpec, pipeline_makespan
+from repro.optics import simulate
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised by the grid drivers
+    HAVE_HYPOTHESIS = False
+
+SLOW = LinkSpec("slow", 1e9, 1e-5)
+FAST = LinkSpec("fast", 50e9, 1e-6)
+FAT = LinkSpec("fat", 1e6, 1e-12)  # bandwidth-bound: chunking pays deep
+
+# deterministic grid (the no-hypothesis driver): factorizations incl.
+# factor-1 stages and non-powers of two, payloads from alpha-bound to
+# bandwidth-bound, heterogeneous link tables
+GRID_FACTORS = [(2,), (8,), (2, 4), (16, 2), (2, 3, 4), (1, 4, 2)]
+GRID_SHARDS = [64.0, 64 * 2**10, 1 * 2**20, 8 * 2**20]
+GRID_COLLS = ["ag", "rs", "ar"]
+
+
+def _grid_links(factors, variant):
+    if variant == "dcn_ici":
+        return [DCN_LINK] + [ICI_LINK] * (len(factors) - 1)
+    if variant == "slow_last":
+        return [FAST] * (len(factors) - 1) + [SLOW]
+    return [FAT] * len(factors)  # "fat"
+
+
+GRID = [
+    pytest.param(f, s, c, lv, id=f"{'x'.join(map(str, f))}-{int(s)}B-{c}-{lv}")
+    for f, s, c, lv in itertools.product(
+        GRID_FACTORS, GRID_SHARDS, GRID_COLLS,
+        ["dcn_ici", "slow_last", "fat"])
+]
+
+
+def _sys(n, w):
+    return dataclasses.replace(TERARACK, n_nodes=n, wavelengths=w)
+
+
+# --------------------------------------------------------------------------
+# (b) electrical price == planner modeled time, every mode
+# --------------------------------------------------------------------------
+
+def check_electrical_no_drift(factors, shard, coll, links):
+    hs = choose_hop_schedule(factors, links, shard, collective=coll)
+    ir = hs.to_ir()
+    want = {"oneshot": hs.oneshot_time_s, "chunked": hs.chunked_time_s,
+            "perhop": hs.perhop_time_s, "hybrid": hs.hybrid_time_s}
+    for mode, t in want.items():
+        got = price(ir.with_mode(mode))
+        assert got.total_s == pytest.approx(t, rel=1e-12), mode
+    # the plan's own mode is the planner's pick, priced identically
+    assert price(ir).total_s == pytest.approx(hs.time_s, rel=1e-12)
+
+
+def check_forced_chunks_price_as_makespan(factors, shard, coll, links,
+                                          chunks):
+    """Forced chunk counts price as the C-chunk pipeline makespan — for
+    the chunked AND hybrid wavefronts.  The forced state is built exactly
+    the way the api's override path builds it (mode + count honored
+    verbatim); the helper chain is checked separately since a one-chunk
+    wavefront normalizes to its pure mode."""
+    hs = choose_hop_schedule(factors, links, shard, collective=coll)
+    ir = hs.to_ir()
+    for mode in ("chunked", "hybrid"):
+        helper = ir.with_mode(mode).with_chunks(chunks)
+        if chunks == 1:
+            # helpers never leave a one-chunk wavefront labeled as one
+            assert helper.mode == ("oneshot" if mode == "chunked"
+                                   else "perhop")
+            continue
+        forced = dataclasses.replace(ir, mode=mode, num_chunks=chunks)
+        got = price(forced)
+        assert got.num_chunks == chunks
+        assert got.total_s == pytest.approx(
+            pipeline_makespan(got.stage_times_s, chunks), rel=1e-12)
+        # the helper chain agrees whenever it lands in the same state
+        if helper.mode == mode and helper.num_chunks == chunks:
+            assert price(helper).total_s == pytest.approx(
+                got.total_s, rel=1e-12)
+
+
+# --------------------------------------------------------------------------
+# (c) hybrid dominance
+# --------------------------------------------------------------------------
+
+def check_hybrid_dominance(factors, shard, coll, links):
+    hs = choose_hop_schedule(factors, links, shard, collective=coll)
+    assert hs.hybrid_time_s <= min(
+        hs.chunked_time_s, hs.perhop_time_s) * (1 + 1e-12)
+    # the chosen mode is the argmin of all four modeled times
+    assert hs.time_s == min(hs.oneshot_time_s, hs.chunked_time_s,
+                            hs.perhop_time_s, hs.hybrid_time_s)
+    # hybrid never labels a one-chunk wavefront (that IS perhop)
+    if hs.mode == "hybrid":
+        assert hs.hybrid_chunks > 1
+
+
+# --------------------------------------------------------------------------
+# (d) with_chunks(1) normalization, per-mode chunk decisions
+# --------------------------------------------------------------------------
+
+def check_chunk_normalization_no_drift(factors, shard, coll, links):
+    hs = choose_hop_schedule(factors, links, shard, collective=coll)
+    ir = hs.to_ir()
+    chunked1 = ir.with_mode("chunked").with_chunks(1)
+    assert chunked1.mode == "oneshot"
+    assert price(chunked1).total_s == pytest.approx(
+        price(ir.with_mode("oneshot")).total_s, rel=1e-12)
+    hybrid1 = ir.with_mode("hybrid").with_chunks(1)
+    assert hybrid1.mode == "perhop"
+    assert price(hybrid1).total_s == pytest.approx(
+        price(ir.with_mode("perhop")).total_s, rel=1e-12)
+    # with_mode restores each wavefront's own chunk count (meta mode_chunks)
+    assert ir.with_mode("hybrid").with_mode("chunked").num_chunks \
+        == hs.num_chunks
+    assert ir.with_mode("chunked").with_mode("hybrid").num_chunks \
+        == hs.hybrid_chunks
+
+
+# --------------------------------------------------------------------------
+# (a) optical price == simulator, every searched candidate
+# --------------------------------------------------------------------------
+
+def check_candidates_price_as_simulated(sizes, w, coll, slow_idx, shard):
+    axes = [(f"x{i}", s, SLOW if i == slow_idx % len(sizes) else FAST)
+            for i, s in enumerate(sizes)]
+    sys_w = _sys(math.prod(sizes), w)
+    srch = search_stage_orders(axes, shard, collective=coll,
+                               backend="optical", system=sys_w)
+    assert srch.candidates
+    for cand in srch.candidates:
+        sched = schedule_from_ir(cand.plan, w)
+        validate_schedule(sched)
+        rep = simulate(sched, sys_w, cand.plan.shard_bytes, check=True)
+        assert cand.optical_s == pytest.approx(rep.time_s, rel=1e-12)
+        assert cand.optical_steps == rep.steps
+        assert price(cand.plan, sys_w).total_s == pytest.approx(
+            rep.time_s, rel=1e-12)
+        # the electrical figure is the plan's own priced mode
+        assert cand.electrical_s == pytest.approx(
+            price(cand.plan).total_s, rel=1e-12)
+    # ranked: the search backend's best leads the candidate list
+    opt_times = [c.optical_s for c in srch.candidates]
+    assert opt_times[0] == min(opt_times)
+
+
+# --------------------------------------------------------------------------
+# drivers
+# --------------------------------------------------------------------------
+
+class TestConformanceGrid:
+    """Deterministic sweep — runs everywhere, hypothesis or not."""
+
+    @pytest.mark.parametrize("factors,shard,coll,link_variant", GRID)
+    def test_all_invariants(self, factors, shard, coll, link_variant):
+        links = _grid_links(factors, link_variant)
+        check_electrical_no_drift(factors, shard, coll, links)
+        check_hybrid_dominance(factors, shard, coll, links)
+        check_chunk_normalization_no_drift(factors, shard, coll, links)
+
+    @pytest.mark.parametrize("chunks", [1, 2, 8])
+    @pytest.mark.parametrize("coll", GRID_COLLS)
+    def test_forced_chunks(self, coll, chunks):
+        check_forced_chunks_price_as_makespan(
+            (2, 4), 1 * 2**20, coll, _grid_links((2, 4), "dcn_ici"), chunks)
+        check_forced_chunks_price_as_makespan(
+            (16, 2), 8 * 2**20, coll, _grid_links((16, 2), "fat"), chunks)
+
+    @pytest.mark.parametrize("coll", GRID_COLLS)
+    @pytest.mark.parametrize("w", [1, 2, 8])
+    @pytest.mark.parametrize("sizes,slow_idx", [
+        ((2, 4), 1), ((4, 2), 0), ((2, 2, 2), 2), ((3, 4), 1), ((8,), 0),
+    ])
+    def test_candidates_price_as_simulated(self, sizes, slow_idx, w, coll):
+        check_candidates_price_as_simulated(
+            list(sizes), w, coll, slow_idx, 1 * 2**20)
+
+
+if HAVE_HYPOTHESIS:
+    factors_st = st.lists(st.integers(min_value=1, max_value=5),
+                          min_size=1, max_size=3).filter(
+                              lambda f: math.prod(f) > 1)
+    shard_st = st.floats(min_value=64.0, max_value=1e8)
+    coll_st = st.sampled_from(GRID_COLLS)
+    links_st = st.lists(
+        st.tuples(st.floats(min_value=1e8, max_value=1e11),
+                  st.floats(min_value=1e-7, max_value=1e-4)),
+        min_size=3, max_size=3)
+
+    def _links_for(factors, raw):
+        return [LinkSpec(f"l{i}", bw, a)
+                for i, ((bw, a), _) in enumerate(zip(raw, factors))]
+
+    @given(factors=factors_st, shard=shard_st, coll=coll_st, raw=links_st)
+    @settings(max_examples=60, deadline=None)
+    def test_electrical_no_drift_property(factors, shard, coll, raw):
+        check_electrical_no_drift(factors, shard, coll,
+                                  _links_for(factors, raw))
+
+    @given(factors=factors_st, shard=shard_st, coll=coll_st, raw=links_st,
+           chunks=st.sampled_from([1, 2, 4, 8]))
+    @settings(max_examples=40, deadline=None)
+    def test_forced_chunks_property(factors, shard, coll, raw, chunks):
+        check_forced_chunks_price_as_makespan(
+            factors, shard, coll, _links_for(factors, raw), chunks)
+
+    @given(factors=factors_st, shard=shard_st, coll=coll_st, raw=links_st)
+    @settings(max_examples=60, deadline=None)
+    def test_hybrid_dominance_property(factors, shard, coll, raw):
+        check_hybrid_dominance(factors, shard, coll,
+                               _links_for(factors, raw))
+
+    @given(factors=factors_st, shard=shard_st, coll=coll_st, raw=links_st)
+    @settings(max_examples=40, deadline=None)
+    def test_chunk_normalization_property(factors, shard, coll, raw):
+        check_chunk_normalization_no_drift(factors, shard, coll,
+                                           _links_for(factors, raw))
+
+    @given(
+        sizes=st.lists(st.integers(min_value=2, max_value=4),
+                       min_size=1, max_size=3),
+        w=st.sampled_from([1, 2, 8, 64]),
+        coll=coll_st,
+        slow_idx=st.integers(min_value=0, max_value=2),
+        shard=st.floats(min_value=1024.0, max_value=1e7),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_candidates_price_as_simulated_property(
+            sizes, w, coll, slow_idx, shard):
+        check_candidates_price_as_simulated(sizes, w, coll, slow_idx, shard)
+
+
+# --------------------------------------------------------------------------
+# deterministic pins for the cross-world decision itself
+# --------------------------------------------------------------------------
+
+class TestOrderSearchDecisions:
+    """The asymmetric table where the two worlds provably disagree: the
+    size-4 axis on the SLOW transport — electrically the AG wants it first
+    (smallest payload over the slow link), optically its ring hops are
+    cheaper as stage 1 (whole-ring wavelength reuse), so at w<=2 the
+    optical winner is a strictly different, strictly cheaper order."""
+
+    AXES = [("a", 2, FAST), ("b", 4, SLOW)]
+
+    @pytest.mark.parametrize("coll", GRID_COLLS)
+    def test_optical_flips_and_strictly_wins(self, coll):
+        srch = search_stage_orders(self.AXES, 1 * 2**20, collective=coll,
+                                   backend="optical", system=_sys(8, 2))
+        eb, ob = srch.best_by("electrical"), srch.best_by("optical")
+        assert eb.order != ob.order
+        assert ob.optical_s < eb.optical_s  # strictly, not a tie-break
+        assert eb.electrical_s <= ob.electrical_s  # each world's own argmin
+        assert srch.best == ob  # backend="optical" ranks by optical
+
+    def test_electrical_backend_matches_default_planner_order(self):
+        srch = search_stage_orders(self.AXES, 1 * 2**20, collective="ag",
+                                   backend="electrical", system=_sys(8, 2))
+        assert srch.best.order == ("b", "a")  # slow axis first
+
+    def test_single_axis_factorization_candidates(self):
+        """Paper-world search: one unnamed axis also enumerates balanced
+        factorizations; every candidate still prices == simulates."""
+        srch = search_stage_orders([(None, 16, ICI_LINK)], 1 * 2**20,
+                                   backend="optical", system=_sys(16, 2))
+        assert len(srch.candidates) > 1  # factorizations, not just (16,)
+        for cand in srch.candidates:
+            rep = simulate(schedule_from_ir(cand.plan, 2), _sys(16, 2),
+                           cand.plan.shard_bytes, check=True)
+            assert cand.optical_s == pytest.approx(rep.time_s, rel=1e-12)
+
+    def test_backend_validated(self):
+        with pytest.raises(ValueError, match="electrical|optical"):
+            search_stage_orders(self.AXES, 1024, backend="fastest")
+
+    def test_candidate_cap(self):
+        srch = search_stage_orders(self.AXES, 1024, backend="electrical",
+                                   max_candidates=1)
+        assert len(srch.candidates) == 1 and srch.capped
+
+
+class TestPolicyOrderHook:
+    """PlanPolicy.order="optical" drives the context's cached plan (the
+    meshless axis_sizes path — no devices needed)."""
+
+    def _ctx(self, backend):
+        from repro.comms.api import CommContext, PlanPolicy
+
+        links = {"a": FAST, "b": SLOW}
+        return CommContext(
+            axis_names=("a", "b"), links=links,
+            axis_sizes={"a": 2, "b": 4},
+            policy=PlanPolicy(order=backend, optical=_sys(8, 2)))
+
+    def test_optical_policy_picks_different_order(self):
+        ctx_e, ctx_o = self._ctx("electrical"), self._ctx("optical")
+        for coll in GRID_COLLS:
+            pe, po = ctx_e.plan(coll, 2**20), ctx_o.plan(coll, 2**20)
+            assert pe.axes != po.axes
+            srch = po.meta["order_search"]
+            assert srch["backend"] == "optical" and srch["flipped"]
+            assert price(po, _sys(8, 2)).total_s \
+                < price(pe, _sys(8, 2)).total_s
+
+    def test_winner_cached_per_key(self):
+        ctx = self._ctx("optical")
+        p1 = ctx.plan("ag", 2**20)
+        p2 = ctx.plan("ag", 2**20)
+        assert p1 is p2  # the search ran once; the winner is the cache entry
+        assert ctx.cache_stats.hits == 1 and ctx.cache_stats.misses == 1
+
+    def test_policy_rejects_unknown_backend(self):
+        from repro.comms.api import PlanPolicy
+
+        with pytest.raises(ValueError, match="electrical"):
+            PlanPolicy(order="fastest")
