@@ -21,6 +21,11 @@ cost matters); ``derived`` carries the paper-comparable numbers.
             table: the order the optical (Eq. 3 / RWA) pricer picks vs the
             electrical winner, with the winner's price asserted equal to
             the conflict-checked simulator's wall time
+  a2a     — all-to-all as a first-class collective: cross-world order
+            search on the 2x3 asymmetric table (electrical order-invariant,
+            optical strictly prefers an order at low w — a pure-optical
+            flip, price==simulate via the exchange item model) + bit-
+            identity vs the XLA one-shot lax.all_to_all in every plan mode
   tp_block — explicit-TP transformer block on context collectives
             (repro.comms.api) vs the GSPMD path: modeled electrical +
             optical + measured, off the same CollectivePlan objects
@@ -371,6 +376,84 @@ def order_search():
     assert flipped_ag, "optical pricer should flip the AG order at low w"
 
 
+def a2a():
+    """All-to-all as a first-class collective (ISSUE 6).  (1) The cross-
+    world order search on the asymmetric 2x3 table: a2a's electrical cost
+    is stage-order INVARIANT (every stage moves 1/m of every peer's
+    shard), so every candidate prices identically there, while the optical
+    RWA step count still depends on the order — at w<=2 the optical winner
+    strictly beats the electrical tie-break, a pure-optical flip.  Price ==
+    simulate for every winner via the exchange item model
+    (``optical_message_bytes``: the (origin,dest) block, shard/n).  (2)
+    Duality with the XLA one-shot: ``api.all_to_all`` stays bit-identical
+    to ``lax.all_to_all(tiled=True)`` in every plan mode on 8 fake
+    devices, with both paths timed."""
+    import dataclasses
+
+    from repro.core import optical_message_bytes, price, schedule_from_ir
+    from repro.core.planner import LinkSpec, search_stage_orders
+
+    axes23 = [("a", 2, LinkSpec("fast", 50e9, 1e-6)),
+              ("b", 3, LinkSpec("slow", 1e9, 1e-5))]
+    flipped_low_w = None
+    for w in (1, 2, 64):
+        sys_w = dataclasses.replace(TERARACK, n_nodes=6, wavelengths=w)
+        us, srch = _timeit(lambda s=sys_w: search_stage_orders(
+            axes23, 1 * 2**20, collective="a2a", backend="optical", system=s))
+        eb, ob = srch.best_by("electrical"), srch.best_by("optical")
+        # electrical order-invariance: every candidate the same to 1e-12
+        elec = [c.electrical_s for c in srch.candidates]
+        assert max(elec) - min(elec) <= 1e-12 * max(elec), "a2a not invariant"
+        rep = simulate(schedule_from_ir(ob.plan, w), sys_w,
+                       optical_message_bytes(ob.plan), check=True)
+        assert abs(rep.time_s - ob.optical_s) < 1e-12, w
+        assert abs(rep.time_s - price(ob.plan, sys_w).total_s) < 1e-12
+        if w <= 2:
+            flipped_low_w = srch.flipped
+            assert ob.optical_s < eb.optical_s  # strictly, not a tie-break
+        _row(f"a2a/order_w{w}", us,
+             f"elec_order={'>'.join(eb.order)};opt_order={'>'.join(ob.order)};"
+             f"flipped={srch.flipped};"
+             f"opt_us={ob.optical_s*1e6:.1f}@{ob.optical_steps};"
+             f"elec_pick_opt_us={eb.optical_s*1e6:.1f}@{eb.optical_steps};"
+             f"elec_invariant=True")
+    assert flipped_low_w, "a2a order should flip at low w (optical-only pref)"
+
+    # duality vs the XLA one-shot, on fake devices
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.comms import comm_context, make_factorized_mesh
+    from repro.comms.api import all_to_all as api_a2a
+
+    if len(jax.devices()) != 8:
+        _row("a2a/exec/status", 0.0,
+             f"SKIP(need 8 devices, have {len(jax.devices())})")
+        return
+    mesh = make_factorized_mesh([2, 4], ["a", "b"])
+    x = jnp.arange(8 * 512, dtype=jnp.float32)
+    xla = jax.jit(shard_map(
+        lambda y: lax.all_to_all(y, ("a", "b"), 0, 0, tiled=True),
+        mesh=mesh, in_specs=P(("a", "b")), out_specs=P(("a", "b"))))
+    want = np.asarray(xla(x))
+    us_xla, _ = _timeit(lambda: np.asarray(xla(x)))
+    with comm_context(mesh, ("a", "b")) as ctx:
+        for mode, chunks in ((None, None), ("oneshot", None),
+                             ("chunked", 4), ("perhop", None),
+                             ("hybrid", 2)):
+            f = jax.jit(lambda y, m=mode, c=chunks: api_a2a(
+                y, ctx=ctx, mode=m, num_chunks=c))
+            got = np.asarray(f(x))
+            assert np.array_equal(got, want), (mode, chunks)
+            us, _ = _timeit(lambda f=f: np.asarray(f(x)))
+            tag = (mode or "planned") + (f"x{chunks}" if chunks else "")
+            _row(f"a2a/exec_{tag}", us,
+                 f"bit_identical=True;xla_oneshot_us={us_xla:.0f}")
+
+
 def tp_block():
     """Explicit-TP transformer block driven entirely by the context-scoped
     collectives API vs the GSPMD path — the ROADMAP "full shard_map
@@ -422,6 +505,7 @@ def main() -> None:
     perhop()
     ir()
     order_search()
+    a2a()
     tp_block()
     duality()
     roofline()

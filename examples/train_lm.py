@@ -15,6 +15,14 @@ and checks it against the single-device reference block — the same
 machinery `launch/train.py --zero1 explicit` and `launch/perf.py
 --tp-block` use at scale.  Spin up fake devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+``--arch llama4-scout-17b-a16e`` (or ``arctic-480b``) trains the reduced
+registry config instead of the example profile; add ``--expert-parallel``
+to set the MoE ``expert_axis`` knob (``repro.configs.expert_parallel`` —
+no config hand-editing) and first demo the expert-parallel block: experts
+sharded over all visible devices, dispatch/combine through the
+context-planned ``api.all_to_all``, checked against the all-experts-local
+reference.
 """
 import argparse
 import dataclasses
@@ -22,7 +30,8 @@ import time
 
 import jax
 
-from repro.configs import ModelConfig
+from repro.configs import ModelConfig, expert_parallel, get_config, list_archs
+from repro.configs import reduced as reduce_cfg
 from repro.data import DataConfig, SyntheticLMPipeline
 from repro.models import init_params
 from repro.optim import OptimizerConfig, adamw_init
@@ -86,9 +95,59 @@ def tp_demo():
               f"({ctx.cache_stats})")
 
 
+def moe_demo(arch: str):
+    """The expert-parallel MoE block on the context-scoped API vs the
+    all-experts-local reference, experts sharded over every visible
+    device (``models.moe`` EP path through ``api.all_to_all``)."""
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.comms import comm_context, make_factorized_mesh
+    from repro.models.moe import moe_block, moe_init
+
+    n = len(jax.devices())
+    cfg = reduce_cfg(get_config(arch))
+    if cfg.moe is None:
+        raise SystemExit(f"--expert-parallel: {arch} has no MoE block")
+    # experts must divide over the device axis; pad the reduced count up
+    E = ((cfg.moe.num_experts + n - 1) // n) * n
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, num_experts=E))
+    cfg_ep = expert_parallel(cfg, axis="ep")
+
+    p = moe_init(jax.random.key(0), cfg_ep, dtype=jnp.float32)
+    B, S = 2 * n, 8
+    x = jax.random.normal(jax.random.key(1), (B, S, cfg.d_model), jnp.float32)
+    ref = jnp.concatenate(
+        [moe_block(p, cfg, x[i * 2:(i + 1) * 2])[0] for i in range(n)], axis=0)
+
+    mesh = make_factorized_mesh([n], ["ep"])
+    with comm_context(mesh, ("ep",)) as ctx:
+        fn = shard_map(lambda pp, xx: moe_block(pp, cfg_ep, xx)[0],
+                       mesh=mesh, in_specs=(P(), P("ep")), out_specs=P("ep"))
+        got = jax.jit(fn)(p, x)
+        ok = np.allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+        a2a = [pl for pl in ctx.plans() if pl.collective == "a2a"]
+        print(f"[moe-demo] {arch} EP block ({E} experts over {n} device(s)) "
+              f"== all-experts-local reference: {ok}")
+        print(f"[moe-demo] context cached {len(ctx.plans())} plans "
+              f"({len(a2a)} a2a, {ctx.cache_stats})")
+        assert ok
+        assert n == 1 or a2a, "EP dispatch did not go through api.all_to_all"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--size", choices=list(PROFILES), default="small")
+    ap.add_argument("--arch", choices=list_archs(), default=None,
+                    help="train this registry arch (reduced config) instead "
+                         "of the example profile")
+    ap.add_argument("--expert-parallel", action="store_true",
+                    help="with a MoE --arch: set the expert_axis knob on the "
+                         "training config and demo the expert-parallel block "
+                         "(context-planned all-to-all dispatch) first")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
     ap.add_argument("--tp-demo", action="store_true",
@@ -98,9 +157,23 @@ def main():
 
     if args.tp_demo:
         tp_demo()
+    if args.expert_parallel:
+        if not args.arch:
+            raise SystemExit("--expert-parallel needs --arch (a MoE arch, "
+                             "e.g. llama4-scout-17b-a16e or arctic-480b)")
+        moe_demo(args.arch)
 
     prof = PROFILES[args.size]
-    cfg = build_config(args.size)
+    if args.arch:
+        cfg = dataclasses.replace(reduce_cfg(get_config(args.arch)),
+                                  dtype="float32")
+        if args.expert_parallel:
+            # the knob, no hand-editing: dormant under the plain-jit Trainer
+            # (no bound axis), live in launch/train.py --zero1 explicit
+            cfg = expert_parallel(cfg, axis="data")
+        prof = dict(prof, seq=64, batch=4)
+    else:
+        cfg = build_config(args.size)
     n_params_est = (
         cfg.vocab_size * cfg.d_model * 2
         + cfg.num_layers * (2 * cfg.d_model * (cfg.q_dim + cfg.kv_dim)

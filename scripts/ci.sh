@@ -22,6 +22,11 @@
 #                                  # order-search microbench with
 #                                  # PlanPolicy(order="optical") driving
 #                                  # the engine on 8 host devices
+#   scripts/ci.sh --a2a-smoke      # all-to-all as a first-class collective:
+#                                  # api.all_to_all bit-identity in every
+#                                  # plan mode + the expert-parallel MoE
+#                                  # block through the context-planned a2a
+#                                  # (launch/perf.py --moe) on 8 host devices
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -36,6 +41,13 @@ api_grep_gate() {
     if grep -rn "StagedCollectiveEngine(" src/repro/models src/repro/optim; then
         echo "CI FAIL: src/repro/models|optim construct StagedCollectiveEngine" \
              "directly; route through repro.comms.api / comm_context" >&2
+        exit 1
+    fi
+    # the EP dispatch must stay on the planned api: models/moe.py may not
+    # reacquire the raw XLA exchange primitives
+    if grep -n "lax\.all_to_all\|lax\.ppermute" src/repro/models/moe.py; then
+        echo "CI FAIL: src/repro/models/moe.py uses raw lax.all_to_all/" \
+             "ppermute; route the EP dispatch through api.all_to_all" >&2
         exit 1
     fi
 }
@@ -128,6 +140,59 @@ if [[ "${1:-}" == "--order-smoke" ]]; then
     python -m repro.launch.perf --collectives 2,4 --sizes-kb 16 --reps 2 \
         --order optical --optical-w 2 "$@"
     echo "CI order-smoke OK"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--a2a-smoke" ]]; then
+    shift
+    # (1) api.all_to_all bit-identity vs the XLA one-shot lax.all_to_all in
+    # every plan mode, plus the a2a cross-world order flip (2x3 at w=2:
+    # electrical is order-invariant, optical strictly prefers slow-first)
+    python - <<'PY'
+import dataclasses
+import numpy as np
+import jax, jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.comms import comm_context, make_factorized_mesh
+from repro.comms.api import CommContext, PlanPolicy, all_to_all
+from repro.core import TERARACK, optical_message_bytes, price, schedule_from_ir
+from repro.core.planner import LinkSpec
+from repro.optics import simulate
+
+mesh = make_factorized_mesh([2, 4], ["a", "b"])
+x = jnp.arange(8 * 16, dtype=jnp.float32)
+want = shard_map(lambda y: lax.all_to_all(y, ("a", "b"), 0, 0, tiled=True),
+                 mesh=mesh, in_specs=P(("a", "b")),
+                 out_specs=P(("a", "b")))(x)
+with comm_context(mesh, ("a", "b")) as ctx:
+    for mode, chunks in ((None, None), ("oneshot", None), ("chunked", 4),
+                         ("perhop", None), ("hybrid", 2)):
+        got = all_to_all(x, ctx=ctx, mode=mode, num_chunks=chunks)
+        assert np.array_equal(np.asarray(got), np.asarray(want)), (mode, chunks)
+    assert any(p.collective == "a2a" for p in ctx.plans())
+
+sys6 = dataclasses.replace(TERARACK, n_nodes=6, wavelengths=2)
+ctxo = CommContext(
+    axis_names=("a", "b"), axis_sizes={"a": 2, "b": 3},
+    links={"a": LinkSpec("fast", 50e9, 1e-6),
+           "b": LinkSpec("slow", 1e9, 1e-5)},
+    policy=PlanPolicy(order="optical", optical=sys6))
+plan = ctxo.plan("a2a", 6 * 1024.0)
+srch = plan.meta["order_search"]
+assert srch["flipped"], "a2a order did not flip on the 2x3 table"
+rep = simulate(schedule_from_ir(plan, 2), sys6,
+               optical_message_bytes(plan), check=True)
+assert abs(rep.time_s - price(plan, sys6).total_s) < 1e-12
+print("a2a gate OK (bit-identity every mode + order flip + price==simulate)")
+PY
+    # (2) the expert-parallel MoE block through the context-planned a2a:
+    # modeled elec/optical + measured off the cached plans, checked against
+    # the all-experts-local reference per shard
+    python -m repro.launch.perf --moe 2,4 --reps 2 "$@"
+    echo "CI a2a-smoke OK"
     exit 0
 fi
 

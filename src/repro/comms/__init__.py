@@ -15,17 +15,21 @@ from .staged_collectives import (  # noqa: F401
     plan_collectives,
     staged_all_gather_chunked,
     staged_all_reduce,
+    staged_all_to_all,
     staged_reduce_scatter,
     tp_all_reduce,
 )
 from .ring_executor import (  # noqa: F401
     hybrid_all_gather,
     hybrid_all_reduce,
+    hybrid_all_to_all,
     hybrid_reduce_scatter,
     perhop_all_gather,
     perhop_all_reduce,
+    perhop_all_to_all,
     perhop_reduce_scatter,
     ring_all_gather_stage,
+    ring_all_to_all_stage,
     ring_reduce_scatter_stage,
 )
 from .plan_executor import execute_plan  # noqa: F401

@@ -68,6 +68,7 @@ __all__ = [
     "all_gather",
     "reduce_scatter",
     "all_reduce",
+    "all_to_all",
     "allgather_matmul",
     "matmul_reduce_scatter",
 ]
@@ -259,11 +260,13 @@ class CommContext:
     ) -> CollectivePlan:
         """The policy-resolved CollectivePlan for one (collective, payload)
         point.  ``shard_bytes`` is the scattered-end payload, as everywhere
-        in the planner.  Cached on ``(collective, shape, dtype, axes,
+        in the planner (for "a2a": the full local exchange buffer — all N
+        destination blocks).  Cached on ``(collective, shape, dtype, axes,
         policy, links_fingerprint)``; a links change re-keys everything.
         """
-        if collective not in ("ag", "rs", "ar"):
-            raise ValueError(f"collective must be ag|rs|ar, got {collective!r}")
+        if collective not in ("ag", "rs", "ar", "a2a"):
+            raise ValueError(
+                f"collective must be ag|rs|ar|a2a, got {collective!r}")
         names = self._names(axes)
         sizes = self._sizes(names)
         # shard_bytes AND the resolved axis sizes are always part of the
@@ -352,7 +355,8 @@ class CommContext:
 
     def _plan_forced_order(self, collective, shard_bytes, names, sizes):
         """Policy-forced stage order: build the schedule for exactly this
-        AG order (RS runs the reverse; AR is RS-order + its reverse)."""
+        AG order (RS runs the reverse; AR is RS-order + its reverse; a2a
+        runs the given order directly — its digit transposes commute)."""
         from ..core.planner import choose_hop_schedule
         from .staged_allgather import link_for_axis
 
@@ -362,7 +366,8 @@ class CommContext:
                 f"policy order {ag_order} must permute the axes {names}")
         rs_order = tuple(reversed(ag_order))
         order = {"ag": ag_order, "rs": rs_order,
-                 "ar": rs_order + tuple(reversed(rs_order))}[collective]
+                 "ar": rs_order + tuple(reversed(rs_order)),
+                 "a2a": ag_order}[collective]
         exec_order = order if collective != "ar" else rs_order
         factors = [sizes[n] for n in exec_order]
         links = [link_for_axis(n, self.links) for n in exec_order]
@@ -699,6 +704,50 @@ def all_reduce(
     plan = _apply_overrides(plan, mode, num_chunks)
     plan = _fit_plan(plan, x.shape[axis], n)
     return _wrap(ctx, lambda y: execute_plan(y, plan, axis=axis), x, P(), P())
+
+
+def all_to_all(
+    x: jax.Array,
+    *,
+    axis: int = 0,
+    axes: Optional[Sequence[str]] = None,
+    ctx: Optional[CommContext] = None,
+    mode: Optional[str] = None,
+    num_chunks: Optional[int] = None,
+) -> jax.Array:
+    """Context-planned staged all-to-all over the context axes (the
+    expert-parallel MoE dispatch/combine primitive).
+
+    The dim ``axis`` holds N equal destination blocks in canonical
+    (major-first) device order; the result holds the N received blocks by
+    origin — the block transpose, bit-identical to ``lax.all_to_all(x,
+    names, split_axis=axis, concat_axis=axis, tiled=True)``.  Inside
+    shard_map ``x`` is the full local exchange buffer; outside, ``x`` is
+    sharded along ``axis`` over the context's mesh and the op wraps itself
+    in shard_map (output sharded the same way).  ``mode``/``num_chunks``
+    override the context policy for this call."""
+    from .plan_executor import execute_plan  # lazy: cycle
+
+    ctx, names = _resolve(ctx, axes)
+    if axis < 0:
+        axis += x.ndim
+    if _in_axis_env(names):
+        n_total = math.prod(axis_size(n) for n in names)
+        plan = ctx.plan("a2a", x.size * x.dtype.itemsize, axes=names,
+                        shape=tuple(x.shape), dtype=x.dtype)
+        plan = _apply_overrides(plan, mode, num_chunks)
+        plan = _fit_plan(plan, x.shape[axis], n_total)
+        return execute_plan(x, plan, axis=axis)
+
+    n = math.prod(ctx._sizes(names).values())
+    shard_bytes = x.size * x.dtype.itemsize / n  # one local exchange buffer
+    plan = ctx.plan("a2a", shard_bytes, axes=names,
+                    shape=tuple(x.shape), dtype=x.dtype)
+    plan = _apply_overrides(plan, mode, num_chunks)
+    plan = _fit_plan(plan, x.shape[axis] // n, n)
+    spec = _axis_spec(x.ndim, axis, names)
+    return _wrap(ctx, lambda y: execute_plan(y, plan, axis=axis), x,
+                 spec, spec)
 
 
 # --------------------------------------------------------------------------

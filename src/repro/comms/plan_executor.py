@@ -34,13 +34,16 @@ from ..core.plan_ir import CollectivePlan, PlanStage, effective_stage_mode
 from .ring_executor import (
     hybrid_all_gather,
     hybrid_all_reduce,
+    hybrid_all_to_all,
     hybrid_reduce_scatter,
     perhop_all_gather,
+    perhop_all_to_all,
     perhop_reduce_scatter,
 )
 from .staged_collectives import (
     staged_all_gather_chunked,
     staged_all_reduce,
+    staged_all_to_all,
     staged_reduce_scatter,
 )
 
@@ -80,6 +83,10 @@ def execute_plan(y: jax.Array, plan: CollectivePlan, *, axis: int = 0) -> jax.Ar
       canonical block of the sum (equals ``lax.psum_scatter``).
     * ``ar`` — returns ``lax.psum(y, names)`` (up to reduction order for
       per-hop ring stages).
+    * ``a2a`` — ``y`` is the full local exchange buffer (N destination
+      blocks along ``axis``); returns the block transpose (equals
+      ``lax.all_to_all(y, names, split_axis=axis, concat_axis=axis,
+      tiled=True)`` bit for bit).
     """
     names = plan_axis_names(plan)
     coll = plan.collective
@@ -115,6 +122,21 @@ def execute_plan(y: jax.Array, plan: CollectivePlan, *, axis: int = 0) -> jax.Ar
                 num_chunks=plan.num_chunks,
                 stage_modes=_executor_modes(plan, plan.stages))
         return perhop_reduce_scatter(
+            y, names, stage_order=order, axis=axis,
+            stage_modes=_executor_modes(plan, plan.stages))
+
+    if coll == "a2a":
+        order = plan.axes
+        if chunked:
+            return staged_all_to_all(
+                y, names, stage_order=order, axis=axis,
+                num_chunks=plan.num_chunks)
+        if hybrid:
+            return hybrid_all_to_all(
+                y, names, stage_order=order, axis=axis,
+                num_chunks=plan.num_chunks,
+                stage_modes=_executor_modes(plan, plan.stages))
+        return perhop_all_to_all(
             y, names, stage_order=order, axis=axis,
             stage_modes=_executor_modes(plan, plan.stages))
 

@@ -30,6 +30,8 @@ from jax import lax
 
 from ..compat import axis_size
 from .staged_collectives import (
+    _a2a_merge_digits,
+    _a2a_split_digits,
     _ag_finalize,
     _axis_sizes,
     _check_order,
@@ -41,12 +43,15 @@ from .staged_collectives import (
 __all__ = [
     "ring_all_gather_stage",
     "ring_reduce_scatter_stage",
+    "ring_all_to_all_stage",
     "perhop_all_gather",
     "perhop_reduce_scatter",
     "perhop_all_reduce",
+    "perhop_all_to_all",
     "hybrid_all_gather",
     "hybrid_reduce_scatter",
     "hybrid_all_reduce",
+    "hybrid_all_to_all",
 ]
 
 
@@ -120,6 +125,37 @@ def ring_reduce_scatter_stage(
         recv = lax.ppermute(acc, name, perm)
         acc = recv + block_fn((idx - s - 1) % m)
     return acc
+
+
+def ring_all_to_all_stage(y: jax.Array, name: str) -> jax.Array:
+    """One ring all-to-all digit transpose on the leading (m, ...) axis:
+    equals ``lax.all_to_all(y, name, split_axis=0, concat_axis=0,
+    tiled=True)`` bit for bit.
+
+    m-1 ppermute hops, hop t carrying exactly the slices whose digit shift
+    is t: device q ships its resident slice (q+t) mod m along the rotation
+    q → (q+t) mod m, and receiver r files the arrival under origin
+    (r-t) mod m.  Unlike the gather ring there is NO forwarding chain —
+    every hop sends a distinct locally-resident slice, the causal
+    independence the per-hop overlap model prices.  Arrival slot t holds
+    origin (idx - t) mod m, so the same flip+roll as the all-gather ring
+    restores origin order in one local copy.
+    """
+    m = axis_size(name)
+    if m == 1:
+        return y
+    if y.shape[0] != m:
+        raise ValueError(f"digit axis {y.shape[0]} != ring size {m}")
+    idx = lax.axis_index(name)
+    pieces = [lax.dynamic_index_in_dim(y, idx, axis=0, keepdims=False)]
+    for t in range(1, m):
+        send = lax.dynamic_index_in_dim(
+            y, (idx + t) % m, axis=0, keepdims=False
+        )
+        perm = [(i, (i + t) % m) for i in range(m)]
+        pieces.append(lax.ppermute(send, name, perm))
+    stacked = jnp.flip(jnp.stack(pieces, axis=0), axis=0)
+    return jnp.roll(stacked, idx + 1, axis=0)
 
 
 def _resolve_modes(
@@ -223,6 +259,54 @@ def perhop_reduce_scatter(
     return jnp.moveaxis(y, 0, axis) if axis != 0 else y
 
 
+def _a2a_stage_dispatch(y, name, dim, mode):
+    """One a2a digit transpose on digit axis ``dim``: a double-buffered
+    ppermute rotation ("ring") or the blocking XLA collective ("oneshot")."""
+    if mode == "ring":
+        y = jnp.moveaxis(y, dim, 0) if dim != 0 else y
+        y = ring_all_to_all_stage(y, name)
+        return jnp.moveaxis(y, 0, dim) if dim != 0 else y
+    return lax.all_to_all(y, name, split_axis=dim, concat_axis=dim, tiled=True)
+
+
+def perhop_all_to_all(
+    x: jax.Array,
+    axis_names: Sequence[str],
+    *,
+    stage_order: Optional[Sequence[str]] = None,
+    axis: int = 0,
+    stage_modes: Optional[Sequence[str]] = None,
+) -> jax.Array:
+    """Per-hop staged all-to-all inside shard_map: bit-identical to
+    ``lax.all_to_all(x, tuple(axis_names), split_axis=axis,
+    concat_axis=axis, tiled=True)``.
+
+    The N-block exchange factorizes into k per-sub-axis digit transposes
+    that commute — any ``stage_order`` yields the identical output (no
+    finalize transpose needed, unlike the gather family); only the modeled
+    cost differs.  Each stage runs as a ppermute rotation ring or the
+    blocking XLA collective per ``stage_modes``.
+    """
+    axis_names = tuple(axis_names)
+    order = (
+        _check_order(stage_order, axis_names)
+        if stage_order is not None
+        else axis_names
+    )
+    modes = _resolve_modes(stage_modes, len(order))
+    sizes = _axis_sizes(axis_names)
+    k = len(axis_names)
+
+    if axis < 0:
+        axis += x.ndim
+    y = jnp.moveaxis(x, axis, 0) if axis != 0 else x
+    shaped = _a2a_split_digits(y, axis_names, sizes)
+    for name, mode in zip(order, modes):
+        shaped = _a2a_stage_dispatch(shaped, name, axis_names.index(name), mode)
+    out = _a2a_merge_digits(shaped, k)
+    return jnp.moveaxis(out, 0, axis) if axis != 0 else out
+
+
 # --------------------------------------------------------------------------
 # hybrid execution: the chunk wavefront OVER per-hop ring stages
 # --------------------------------------------------------------------------
@@ -321,6 +405,54 @@ def hybrid_reduce_scatter(
         lambda ch, j: _hyb_rs_stage(ch, order[j], modes[j]),
     )
     out = chunks[0] if num_chunks == 1 else jnp.concatenate(chunks, axis=0)
+    return jnp.moveaxis(out, 0, axis) if axis != 0 else out
+
+
+def hybrid_all_to_all(
+    x: jax.Array,
+    axis_names: Sequence[str],
+    *,
+    stage_order: Optional[Sequence[str]] = None,
+    axis: int = 0,
+    num_chunks: int = 2,
+    stage_modes: Optional[Sequence[str]] = None,
+) -> jax.Array:
+    """Chunk-wavefront per-hop staged all-to-all: equals
+    ``lax.all_to_all(x, tuple(axis_names), split_axis=axis,
+    concat_axis=axis, tiled=True)`` bit for bit (same block-interior chunk
+    split as ``staged_all_to_all``, same digit-transpose stages as
+    ``perhop_all_to_all``)."""
+    axis_names = tuple(axis_names)
+    order = (
+        _check_order(stage_order, axis_names)
+        if stage_order is not None
+        else axis_names
+    )
+    modes = _resolve_modes(stage_modes, len(order))
+    sizes = _axis_sizes(axis_names)
+    k = len(axis_names)
+
+    if axis < 0:
+        axis += x.ndim
+    y = jnp.moveaxis(x, axis, 0) if axis != 0 else x
+    shaped = _a2a_split_digits(y, axis_names, sizes)
+    block = shaped.shape[k]
+    if block % num_chunks:
+        raise ValueError(
+            f"block interior {block} not divisible by {num_chunks} chunks"
+        )
+    per = block // num_chunks
+    chunks = [
+        lax.slice_in_dim(shaped, c * per, (c + 1) * per, axis=k)
+        for c in range(num_chunks)
+    ]
+    chunks = _wavefront(
+        chunks, k,
+        lambda ch, j: _a2a_stage_dispatch(
+            ch, order[j], axis_names.index(order[j]), modes[j]),
+    )
+    out = chunks[0] if num_chunks == 1 else jnp.concatenate(chunks, axis=k)
+    out = _a2a_merge_digits(out, k)
     return jnp.moveaxis(out, 0, axis) if axis != 0 else out
 
 

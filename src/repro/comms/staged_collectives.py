@@ -50,6 +50,7 @@ __all__ = [
     "staged_reduce_scatter",
     "staged_all_reduce",
     "staged_all_gather_chunked",
+    "staged_all_to_all",
     "tp_all_reduce",
     "fit_chunks",
     "plan_collectives",
@@ -219,6 +220,86 @@ def staged_all_gather_chunked(
     return jnp.moveaxis(out, 0, axis) if axis != 0 else out
 
 
+def _a2a_split_digits(y, axis_names, sizes):
+    """(n_total·B, ...) → (s₁, ..., s_k, B, ...): expose the N destination
+    blocks of an all-to-all buffer as one mixed-radix digit axis per sub-axis
+    (canonical major-first order), so each stage can transpose its own
+    digit independently."""
+    n_total = math.prod(sizes[n] for n in axis_names)
+    if y.shape[0] % n_total:
+        raise ValueError(
+            f"axis length {y.shape[0]} not divisible by devices {n_total}"
+        )
+    block = y.shape[0] // n_total
+    return y.reshape(
+        tuple(sizes[n] for n in axis_names) + (block,) + y.shape[1:]
+    )
+
+
+def _a2a_merge_digits(y, k: int):
+    """Inverse of ``_a2a_split_digits``: collapse the k digit axes + block
+    interior back into one (n_total·B, ...) leading axis."""
+    n_total = math.prod(y.shape[:k])
+    return y.reshape((n_total * y.shape[k],) + y.shape[k + 1:])
+
+
+def _a2a_stage(y, name, dim):
+    # one digit transpose: exchange the m slices along digit axis ``dim``
+    # over sub-axis ``name`` (out[d] = device d's slice for us)
+    return lax.all_to_all(y, name, split_axis=dim, concat_axis=dim, tiled=True)
+
+
+def staged_all_to_all(
+    x: jax.Array,
+    axis_names: Sequence[str],
+    *,
+    stage_order: Optional[Sequence[str]] = None,
+    axis: int = 0,
+    num_chunks: int = 1,
+) -> jax.Array:
+    """k-stage all-to-all inside shard_map: equals ``lax.all_to_all(x,
+    tuple(axis_names), split_axis=axis, concat_axis=axis, tiled=True)`` bit
+    for bit.
+
+    The N-block exchange factorizes into k per-sub-axis digit transposes
+    that COMMUTE — any ``stage_order`` yields the identical output and only
+    the modeled cost differs (each m-ary stage moves 1/m of every peer's
+    shard, never a gathered block).  ``num_chunks=C`` splits the block
+    *interior* into C slices and pipelines the stage chain across them in
+    the same wavefront as the gather family.
+    """
+    axis_names = tuple(axis_names)
+    order = (
+        _check_order(stage_order, axis_names)
+        if stage_order is not None
+        else axis_names
+    )
+    sizes = _axis_sizes(axis_names)
+    k = len(axis_names)
+
+    if axis < 0:
+        axis += x.ndim
+    y = jnp.moveaxis(x, axis, 0) if axis != 0 else x
+    shaped = _a2a_split_digits(y, axis_names, sizes)
+    block = shaped.shape[k]
+    if block % num_chunks:
+        raise ValueError(
+            f"block interior {block} not divisible by {num_chunks} chunks"
+        )
+    per = block // num_chunks
+    chunks = [
+        lax.slice_in_dim(shaped, c * per, (c + 1) * per, axis=k)
+        for c in range(num_chunks)
+    ]
+    chunks = _wavefront(
+        chunks, k,
+        lambda ch, j: _a2a_stage(ch, order[j], axis_names.index(order[j])),
+    )
+    out = chunks[0] if num_chunks == 1 else jnp.concatenate(chunks, axis=k)
+    out = _a2a_merge_digits(out, k)
+    return jnp.moveaxis(out, 0, axis) if axis != 0 else out
+
+
 def staged_all_reduce(
     x: jax.Array,
     axis_names: Sequence[str],
@@ -304,7 +385,7 @@ def plan_collectives(
     max_chunks: int = 8,
 ) -> Dict[str, CollectivePlan]:
     """One :class:`~repro.core.plan_ir.CollectivePlan` per collective
-    ("ag" / "rs" / "ar") for this (mesh axes, payload) point.
+    ("ag" / "rs" / "ar" / "a2a") for this (mesh axes, payload) point.
 
     ``mesh`` is a :class:`jax.sharding.Mesh` or a plain ``{axis: size}``
     dict (the comms context plans from trace-time axis sizes, meshless).
@@ -316,7 +397,9 @@ def plan_collectives(
     (``core.cost_model.price``) and the optical validator
     (``core.schedule.schedule_from_ir`` → ``optics.simulator``) consume the
     same object.  ``shard_bytes`` is the per-device payload at the
-    scattered end (AG input / RS output)."""
+    scattered end (AG input / RS output); for "a2a" it is the node's full
+    local exchange buffer (all N destination blocks), matching the IR's
+    scaled-payload law (stage j moves shard/f_j)."""
     axis_names = tuple(axis_names)
     if isinstance(mesh, dict):
         sizes = {n: int(mesh[n]) for n in axis_names}
@@ -340,6 +423,13 @@ def plan_collectives(
             rs_plan.factors, rs_links, shard_bytes,
             max_chunks=max_chunks, collective="ar"),
             rs_order + tuple(reversed(rs_order))),
+        # electrical a2a cost is stage-order invariant (each stage moves
+        # shard·(f-1)/f regardless of position), so reuse the AG order as
+        # the deterministic choice; order-sensitive optical planning goes
+        # through search_stage_orders / PlanPolicy(order="search") instead
+        "a2a": (choose_hop_schedule(
+            ag_plan.factors, ag_links, shard_bytes,
+            max_chunks=max_chunks, collective="a2a"), ag_order),
     }
     plans: Dict[str, CollectivePlan] = {}
     for coll, (sched, order) in scheds.items():

@@ -8,6 +8,7 @@ from .base import (  # noqa: F401
     SSMConfig,
     ShapeConfig,
     active_param_count,
+    expert_parallel,
     input_specs,
     param_count,
     reduced,

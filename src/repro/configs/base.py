@@ -21,6 +21,7 @@ __all__ = [
     "ModelConfig",
     "ShapeConfig",
     "SHAPES",
+    "expert_parallel",
     "input_specs",
     "reduced",
     "param_count",
@@ -36,6 +37,13 @@ class MoEConfig:
     dense_residual: bool = False  # arctic-style parallel dense FFN branch
     capacity_factor: float = 1.25
     router_z_loss: float = 1e-3
+    # expert parallelism: mesh axis the experts are sharded over.  When set
+    # AND the model runs inside shard_map with this axis bound, moe_block
+    # dispatches/combines across the mesh through the context-planned
+    # ``repro.comms.api.all_to_all`` (num_experts must divide by the axis
+    # size).  None = every device holds all experts (the GSPMD EP layout
+    # stays available via sharding.param_specs).
+    expert_axis: Optional[str] = None
 
 
 @dataclass(frozen=True)
@@ -178,6 +186,18 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtyp
     if shape.kind == "decode":
         specs["cache_pos"] = _sds((), "int32")
     return specs
+
+
+def expert_parallel(cfg: ModelConfig, axis: str = "data") -> ModelConfig:
+    """The expert-parallel variant of an MoE config: experts sharded over
+    mesh axis ``axis``, dispatch/combine crossing the mesh through
+    ``repro.comms.api.all_to_all`` (the CLI knob behind
+    ``examples/train_lm.py --expert-parallel`` and ``launch/train.py`` /
+    ``launch/perf.py --moe`` — no config hand-editing)."""
+    if cfg.moe is None:
+        raise ValueError(f"{cfg.name} has no MoE block to expert-parallelize")
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, expert_axis=axis))
 
 
 # --------------------------------------------------------------------------

@@ -38,11 +38,15 @@ from .cost_model import (  # noqa: F401
     step_time,
 )
 from .plan_ir import (  # noqa: F401
+    COLLECTIVES,
+    CollectiveKind,
     CollectivePlan,
     Hop,
     PlanStage,
     Transfer,
+    collective_kind,
     expand_hops,
+    optical_message_bytes,
 )
 from .planner import (  # noqa: F401
     DCN_LINK,

@@ -145,10 +145,13 @@ def _price_linkspec(plan) -> PriceReport:
 
 
 def _price_optical(plan, sys: "OpticalSystem", *, detailed: bool = False) -> PriceReport:
+    from .plan_ir import optical_message_bytes  # lazy: avoid a cycle
     from .schedule import schedule_from_ir  # lazy: avoid a cycle
 
     sched = schedule_from_ir(plan, sys.wavelengths)
-    per_step = step_time(sys, plan.shard_bytes, detailed=detailed)
+    # one step moves ONE schedule item: the whole shard for gather traffic,
+    # a 1/n (origin, destination) block for exchange (a2a) traffic
+    per_step = step_time(sys, optical_message_bytes(plan), detailed=detailed)
     times = tuple(per_step * s for s in sched.stage_steps)
     return PriceReport("optical", plan.mode, per_step * sched.num_steps,
                        times, steps=sched.num_steps,

@@ -64,6 +64,10 @@ __all__ = [
     "Hop",
     "PlanStage",
     "CollectivePlan",
+    "CollectiveKind",
+    "COLLECTIVES",
+    "collective_kind",
+    "optical_message_bytes",
     "expand_hops",
     "stage_hops",
     "gather_chain",
@@ -72,6 +76,128 @@ __all__ = [
 
 STAGE_MODES = ("oneshot", "perhop")
 PLAN_MODES = ("oneshot", "chunked", "perhop", "hybrid")
+
+
+# --------------------------------------------------------------------------
+# collective registry — the stage algebra of each collective kind
+# --------------------------------------------------------------------------
+
+def _gather_payloads(shard_bytes: float, factors: Sequence[int]) -> List[float]:
+    """Entering payload of each gather stage: grows by the already-gathered
+    prefix (stage j moves shard · prod_{i<j} f_i per peer)."""
+    out: List[float] = []
+    payload = float(shard_bytes)
+    for f in factors:
+        out.append(payload)
+        payload *= f
+    return out
+
+
+def _scatter_payloads(shard_bytes: float, factors: Sequence[int]) -> List[float]:
+    """Leaving payload of each scatter stage — the gather law run backwards
+    (stage j of an RS with execution factors g_1..g_k moves
+    shard · prod_{i>j} g_i per peer)."""
+    out: List[float] = []
+    payload = float(shard_bytes) * math.prod(factors)
+    for f in factors:
+        payload /= f
+        out.append(payload)
+    return out
+
+
+@dataclass(frozen=True)
+class CollectiveKind:
+    """Stage-algebra descriptor for one collective kind — the registry entry
+    that replaces the string-literal ``ag|rs|ar`` special-casing.
+
+    ``traffic`` — the per-stage hop structure family:
+
+      * ``"gather"`` — stage j broadcasts each member's entering block within
+        its "same position across siblings" subset; the payload grows
+        (forward) or shrinks (reversed) with the already-covered factors;
+      * ``"exchange"`` — stage j transposes ONE mixed-radix digit of the
+        (origin, destination) block grid: every member sends a ``1/m`` slice
+        of its constant-``n``-block residency to every sibling (the scaled-
+        payload all-to-all semantics — nothing accumulates across stages).
+
+    ``chain`` — how execution-order stages map onto the gather-equivalent
+    lowering chain: ``"forward"`` (ag, a2a), ``"reversed"`` (rs — the
+    time-reversed mirror AG), ``"two_phase"`` (ar — an RS half then an AG
+    half; consumers split at ``k = len(stages) // 2``).
+
+    ``dual`` — the kind whose chain is this one's time reversal (rs ↔ ag);
+    ``a2a`` is self-dual: an all-to-all run backwards is the inverse
+    all-to-all, with identical hop and step structure.
+    """
+
+    name: str
+    traffic: str  # "gather" | "exchange"
+    chain: str  # "forward" | "reversed" | "two_phase"
+    dual: Optional[str] = None
+
+    @property
+    def two_phase(self) -> bool:
+        return self.chain == "two_phase"
+
+    def expected_factor_product(self, n: int) -> int:
+        """What the plan's stage factors must multiply to (two-phase kinds
+        span both mirrored chains)."""
+        return n * n if self.two_phase else n
+
+    def item_count(self, n: int) -> int:
+        """Size of the schedule item space: origin shards for gather
+        traffic, ``n²`` (origin, destination) blocks for exchange traffic."""
+        return n * n if self.traffic == "exchange" else n
+
+    def message_bytes(self, shard_bytes: float, n: int) -> float:
+        """Bytes of ONE schedule item — the per-step optical message size
+        (a whole shard for gather traffic; a ``1/n`` block for exchange)."""
+        return shard_bytes / n if self.traffic == "exchange" else shard_bytes
+
+    def stage_payloads(
+        self, shard_bytes: float, factors: Sequence[int]
+    ) -> Tuple[float, ...]:
+        """The payload-per-stage law: the per-peer ``p`` each EXECUTED stage
+        moves, as fed to the ``(f-1)·(α + p/B)`` barrier and
+        ``max((f-1)·p/B + α, (f-1)·α + p/B)`` overlap models."""
+        factors = tuple(factors)
+        if self.traffic == "exchange":
+            return tuple(shard_bytes / f for f in factors)
+        if self.two_phase:
+            k = len(factors) // 2
+            return tuple(
+                _scatter_payloads(shard_bytes, factors[:k])
+                + _gather_payloads(shard_bytes, factors[k:])
+            )
+        if self.chain == "reversed":
+            return tuple(_scatter_payloads(shard_bytes, factors))
+        return tuple(_gather_payloads(shard_bytes, factors))
+
+
+COLLECTIVES: Dict[str, CollectiveKind] = {
+    "ag": CollectiveKind("ag", traffic="gather", chain="forward", dual="rs"),
+    "rs": CollectiveKind("rs", traffic="gather", chain="reversed", dual="ag"),
+    "ar": CollectiveKind("ar", traffic="gather", chain="two_phase"),
+    "a2a": CollectiveKind("a2a", traffic="exchange", chain="forward", dual="a2a"),
+}
+
+
+def collective_kind(name: str) -> CollectiveKind:
+    """Registry lookup; raises with the registered names on a miss."""
+    try:
+        return COLLECTIVES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown collective {name!r}; registered: {sorted(COLLECTIVES)}"
+        ) from None
+
+
+def optical_message_bytes(plan: "CollectivePlan") -> float:
+    """Bytes of one schedule item of ``plan`` — the per-step message size
+    the optical Eq.-3 model prices AND the size every ``simulate`` call must
+    pass: the whole shard for gather traffic, a ``1/n`` (origin,
+    destination) block for exchange traffic."""
+    return collective_kind(plan.collective).message_bytes(plan.shard_bytes, plan.n)
 
 
 @dataclass(frozen=True)
@@ -131,7 +257,7 @@ class CollectivePlan:
     ``collective == "ar"`` they span the full 2k-stage RS+AG chain.
     """
 
-    collective: str  # "ag" | "rs" | "ar"
+    collective: str  # a key of COLLECTIVES: "ag" | "rs" | "ar" | "a2a"
     n: int
     shard_bytes: float
     stages: Tuple[PlanStage, ...]
@@ -140,12 +266,11 @@ class CollectivePlan:
     meta: Dict = field(default_factory=dict)
 
     def __post_init__(self):
-        if self.collective not in ("ag", "rs", "ar"):
-            raise ValueError(f"collective must be ag|rs|ar, got {self.collective!r}")
+        kind = collective_kind(self.collective)
         if self.mode not in PLAN_MODES:
             raise ValueError(f"plan mode must be one of {PLAN_MODES}, got {self.mode!r}")
         prod = math.prod(s.factor for s in self.stages)
-        expect = self.n * self.n if self.collective == "ar" else self.n
+        expect = kind.expected_factor_product(self.n)
         if prod != expect:
             raise ValueError(
                 f"stage factors {tuple(s.factor for s in self.stages)} do not "
@@ -153,6 +278,11 @@ class CollectivePlan:
             )
 
     # -- convenience ---------------------------------------------------------
+    @property
+    def kind(self) -> CollectiveKind:
+        """This plan's registry descriptor (stage algebra)."""
+        return collective_kind(self.collective)
+
     @property
     def factors(self) -> Tuple[int, ...]:
         return tuple(s.factor for s in self.stages)
@@ -211,14 +341,16 @@ class CollectivePlan:
 
 
 def gather_chain(plan: CollectivePlan) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
-    """(factors, stage_modes) of the plan's gather-equivalent chain.
+    """(factors, stage_modes) of the plan's lowering-equivalent chain.
 
-    * ``ag`` — the stages as executed.
-    * ``rs`` — the time-reversed mirror: an RS with execution factors
-      (f_1..f_k) moves exactly the transfers of the mirrored AG with factors
-      (f_k..f_1) run backwards, so hop/step counts are identical.
-    * ``ar`` — only the gather half is a single gather chain; callers that
-      need the full AR structure handle the two halves explicitly (see
+    Dispatches on the registry descriptor's ``chain``:
+
+    * ``forward`` (ag, a2a) — the stages as executed.
+    * ``reversed`` (rs) — the time-reversed mirror: an RS with execution
+      factors (f_1..f_k) moves exactly the transfers of the mirrored AG with
+      factors (f_k..f_1) run backwards, so hop/step counts are identical.
+    * ``two_phase`` (ar) — only each half is a single chain; callers that
+      need the full structure handle the two halves explicitly (see
       ``schedule_from_ir``).
 
     Per-stage hop structure is the EFFECTIVE mode: a stage's ``perhop``
@@ -227,10 +359,12 @@ def gather_chain(plan: CollectivePlan) -> Tuple[Tuple[int, ...], Tuple[str, ...]
     blocking collective, exactly as the executor would run it.  Factor-1
     stages carry no transfers and are dropped.
     """
-    if plan.collective == "ar":
-        raise ValueError("ar spans two chains; lower the halves separately")
+    kind = collective_kind(plan.collective)
+    if kind.two_phase:
+        raise ValueError(
+            f"{plan.collective} spans two chains; lower the halves separately")
     stages = plan.stages
-    if plan.collective == "rs":
+    if kind.chain == "reversed":
         stages = tuple(reversed(stages))
     pairs = [(s.factor, effective_stage_mode(plan, s)) for s in stages
              if s.factor > 1]
@@ -297,31 +431,96 @@ def _oneshot_hop(
     return [Hop(tuple(transfers))]
 
 
+def _a2a_stage_transfers(
+    tree: OpTreePlan, stage: int, shard_bytes: float
+) -> List[Tuple[int, Transfer]]:
+    """(digit shift, Transfer) for every block an exchange stage moves.
+
+    Item space is the n² (origin, destination) blocks, labeled
+    ``u * n + v`` with each block ``shard_bytes / n``.  At stage-``j`` entry
+    block (u, v) resides at the node whose mixed-radix coords are
+    ``(v_1..v_{j-1}, u_j..u_k)``; stage j rewrites digit j from ``u_j`` to
+    ``v_j`` — after all k stages the block sits at v: the full all-to-all.
+    A block with ``u_j == v_j`` does not move; the rest travel within the
+    same stage-``j`` subset the gather traffic uses (same groups, 1/m of
+    the resident bytes to each sibling — the scaled-payload semantics)."""
+    n = tree.n
+    block = shard_bytes / n
+    j = stage
+    m = tree.factors[j - 1]
+    out: List[Tuple[int, Transfer]] = []
+    coords = [tree.coords(p) for p in range(n)]
+    for u in range(n):
+        cu = coords[u]
+        for v in range(n):
+            cv = coords[v]
+            if cu[j - 1] == cv[j - 1]:
+                continue
+            src = tree.node(cv[: j - 1] + cu[j - 1:])
+            dst = tree.node(cv[:j] + cu[j:])
+            shift = (cv[j - 1] - cu[j - 1]) % m
+            out.append((shift, Transfer(src, dst, u * n + v, block)))
+    return out
+
+
+def _a2a_oneshot_hop(
+    tree: OpTreePlan, stage: int, shard_bytes: float
+) -> List[Hop]:
+    """One synchronized exchange round: every member of every stage subset
+    sends its 1/m destination slices to all m-1 siblings at once."""
+    return [Hop(tuple(t for _, t in _a2a_stage_transfers(tree, stage, shard_bytes)))]
+
+
+def _a2a_ring_hops(
+    tree: OpTreePlan, stage: int, shard_bytes: float
+) -> List[Hop]:
+    """``m - 1`` rotation hops: hop t carries exactly the slices whose digit
+    shift ``(v_j - u_j) mod m == t`` — every block moves once, in the hop
+    matching its shift distance, so the union over hops equals the oneshot
+    round and hops are causally independent (no forwarding chains: the
+    double-buffered overlap model applies)."""
+    m = tree.factors[stage - 1]
+    buckets: List[List[Transfer]] = [[] for _ in range(m)]
+    for shift, t in _a2a_stage_transfers(tree, stage, shard_bytes):
+        buckets[shift].append(t)
+    return [Hop(tuple(buckets[t])) for t in range(1, m)]
+
+
 def stage_hops(
     factors: Sequence[int],
     modes: Sequence[str],
     stage_idx: int,
     shard_bytes: float,
+    *,
+    collective: str = "ag",
 ) -> List[Hop]:
-    """Hops of gather-chain stage ``stage_idx`` (0-indexed execution order)."""
+    """Hops of lowering-chain stage ``stage_idx`` (0-indexed execution
+    order), built by the collective's traffic family (gather broadcast
+    subsets vs. exchange digit transposes)."""
     tree = OpTreePlan(int(math.prod(factors)), tuple(factors))
-    if modes[stage_idx] == "perhop":
-        return _ring_hops(tree, stage_idx + 1, shard_bytes)
-    return _oneshot_hop(tree, stage_idx + 1, shard_bytes)
+    perhop = modes[stage_idx] == "perhop"
+    if collective_kind(collective).traffic == "exchange":
+        builder = _a2a_ring_hops if perhop else _a2a_oneshot_hop
+    else:
+        builder = _ring_hops if perhop else _oneshot_hop
+    return builder(tree, stage_idx + 1, shard_bytes)
 
 
 def expand_hops(plan: CollectivePlan) -> CollectivePlan:
-    """Materialize ``hops`` on every stage of an ``ag``/``rs`` plan.
+    """Materialize ``hops`` on every stage of a single-chain plan.
 
     RS stages get the hops of their time-reversed mirror AG (identical
-    counts; the executed RS runs them backwards carrying partial sums).
-    O(N^2) transfers — validation-sized plans only.
+    counts; the executed RS runs them backwards carrying partial sums);
+    exchange (a2a) stages get their digit-transpose hops over the n² block
+    items.  O(N^2) transfers — validation-sized plans only.
     """
+    kind = collective_kind(plan.collective)
     factors, modes = gather_chain(plan)
     per_stage: List[Tuple[Hop, ...]] = []
     for j in range(len(factors)):
-        per_stage.append(tuple(stage_hops(factors, modes, j, plan.shard_bytes)))
-    if plan.collective == "rs":
+        per_stage.append(tuple(stage_hops(
+            factors, modes, j, plan.shard_bytes, collective=plan.collective)))
+    if kind.chain == "reversed":
         per_stage = list(reversed(per_stage))
     out: List[PlanStage] = []
     it = iter(per_stage)

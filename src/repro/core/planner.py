@@ -28,6 +28,7 @@ from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
 from .cost_model import TERARACK
+from .plan_ir import collective_kind
 from .tree import balanced_factors
 
 __all__ = ["LinkSpec", "StagePlan", "AllGatherPlan", "AllReducePlan",
@@ -183,18 +184,27 @@ def _stage_time(factor: int, payload: float, link: LinkSpec) -> float:
     return (factor - 1) * (link.alpha_s + payload / link.bandwidth_bytes)
 
 
+def _plan_from_law(
+    collective: str, factors: Sequence[int], links: Sequence[LinkSpec],
+    shard_bytes: float,
+) -> AllGatherPlan:
+    """Stage chain priced by the registry's payload-per-stage law
+    (``plan_ir.CollectiveKind.stage_payloads``): gather grows, scatter
+    shrinks, exchange moves a constant ``shard / f_j`` per peer."""
+    payloads = collective_kind(collective).stage_payloads(shard_bytes, factors)
+    stages = tuple(
+        StagePlan(factor=f, link=link, payload_bytes=p,
+                  time_s=_stage_time(f, p, link))
+        for f, link, p in zip(factors, links, payloads)
+    )
+    return AllGatherPlan(stages=stages,
+                         total_time_s=sum(s.time_s for s in stages))
+
+
 def _plan_for_factors(
     factors: Sequence[int], links: Sequence[LinkSpec], shard_bytes: float
 ) -> AllGatherPlan:
-    stages: List[StagePlan] = []
-    payload = float(shard_bytes)
-    total = 0.0
-    for f, link in zip(factors, links):
-        t = _stage_time(f, payload, link)
-        stages.append(StagePlan(factor=f, link=link, payload_bytes=payload, time_s=t))
-        total += t
-        payload *= f
-    return AllGatherPlan(stages=tuple(stages), total_time_s=total)
+    return _plan_from_law("ag", factors, links, shard_bytes)
 
 
 def plan_staged_allgather(
@@ -230,15 +240,7 @@ def _rs_plan_for_factors(
     *output* shard (input = shard * prod(factors)) so the duality with the
     all-gather plan is literal: reversed factors give mirrored stage costs.
     """
-    stages: List[StagePlan] = []
-    payload = float(shard_bytes) * math.prod(factors)
-    total = 0.0
-    for f, link in zip(factors, links):
-        payload /= f
-        t = (f - 1) * (link.alpha_s + payload / link.bandwidth_bytes)
-        stages.append(StagePlan(factor=f, link=link, payload_bytes=payload, time_s=t))
-        total += t
-    return AllGatherPlan(stages=tuple(stages), total_time_s=total)
+    return _plan_from_law("rs", factors, links, shard_bytes)
 
 
 def _chunked_stage_times(
@@ -250,8 +252,7 @@ def _chunked_stage_times(
 ) -> List[float]:
     """Per-chunk stage times with the shard split into ``num_chunks``:
     bandwidth terms shrink by C, alpha terms are paid per chunk per stage."""
-    builder = _plan_for_factors if collective == "ag" else _rs_plan_for_factors
-    plan = builder(factors, links, shard_bytes / num_chunks)
+    plan = _plan_from_law(collective, factors, links, shard_bytes / num_chunks)
     return [s.time_s for s in plan.stages]
 
 
@@ -525,7 +526,8 @@ class HopSchedule:
         )
         n = math.prod(
             s.factor for s in (self.stages[: len(self.stages) // 2]
-                               if self.collective == "ar" else self.stages)
+                               if collective_kind(self.collective).two_phase
+                               else self.stages)
         )
         eff_mode = mode or self.mode
         return CollectivePlan(
@@ -552,20 +554,19 @@ def _stage_chain(
     factors: Sequence[int], links: Sequence[LinkSpec], shard_bytes: float,
     collective: str,
 ) -> List[StagePlan]:
-    """The (factor, link, payload) chain a collective actually executes:
-    AG/RS stages, or the RS half followed by the reversed AG half for AR."""
-    if collective == "ag":
-        return list(_plan_for_factors(factors, links, shard_bytes).stages)
-    if collective == "rs":
-        return list(_rs_plan_for_factors(factors, links, shard_bytes).stages)
-    if collective == "ar":
+    """The (factor, link, payload) chain a collective actually executes —
+    the registry's payload-per-stage law over the execution order.  For a
+    two-phase kind (AR) ``factors`` is the first (RS) half's order and the
+    second half mirrors it; single-chain kinds (AG/RS/A2A) execute the
+    given order directly."""
+    if collective_kind(collective).two_phase:
         rs = _rs_plan_for_factors(factors, links, shard_bytes).stages
         ag = _plan_for_factors(
             [s.factor for s in reversed(rs)], [s.link for s in reversed(rs)],
             shard_bytes,
         ).stages
         return list(rs) + list(ag)
-    raise ValueError(f"collective must be ag|rs|ar, got {collective!r}")
+    return list(_plan_from_law(collective, factors, links, shard_bytes).stages)
 
 
 def choose_hop_schedule(
@@ -593,7 +594,7 @@ def choose_hop_schedule(
 
     oneshot = sum(s.time_s for s in stages)
 
-    if collective == "ar":
+    if collective_kind(collective).two_phase:
         num_chunks, chunked = _best_chunks(
             lambda c: [
                 t.time_s
@@ -775,9 +776,10 @@ def search_stage_orders(
 
     ``axes`` entries are ``(name, size, link)`` (name may be None for
     paper-world plans, which then also search balanced factorizations of a
-    single axis).  Candidates are AG orders; the dual collectives derive
-    their execution order from each AG permutation (RS = reverse, AR = RS
-    order + its reverse), so one enumeration covers all three.
+    single axis).  Candidates are AG orders; every registered collective
+    derives its execution order from each AG permutation via its chain
+    descriptor (RS = reverse, AR = RS order + its reverse, A2A = the order
+    itself), so one enumeration covers them all.
 
     The electrical backend prices each candidate's chosen-mode LinkSpec
     time (== ``choose_hop_schedule``'s decision signal).  The optical
@@ -810,18 +812,17 @@ def search_stage_orders(
     cands: List[OrderCandidate] = []
     for chain in chains:
         ag_names = tuple(a[0] for a in chain)
-        if collective == "ag":
-            exec_chain = chain
-            plan_names = ag_names
-        elif collective == "rs":
-            exec_chain = tuple(reversed(chain))
-            plan_names = tuple(reversed(ag_names))
-        elif collective == "ar":
+        kind = collective_kind(collective)
+        if kind.two_phase:
             exec_chain = tuple(reversed(chain))  # the RS half's order
             rs_names = tuple(reversed(ag_names))
             plan_names = rs_names + tuple(reversed(rs_names))
-        else:
-            raise ValueError(f"collective must be ag|rs|ar, got {collective!r}")
+        elif kind.chain == "reversed":
+            exec_chain = tuple(reversed(chain))
+            plan_names = tuple(reversed(ag_names))
+        else:  # forward: ag, a2a execute the candidate order directly
+            exec_chain = chain
+            plan_names = ag_names
         sched = choose_hop_schedule(
             [a[1] for a in exec_chain], [a[2] for a in exec_chain],
             shard_bytes, max_chunks=max_chunks, collective=collective,

@@ -292,8 +292,10 @@ def _lower_gather_chain(
     modes: Sequence[str],
     w: int,
     offset: int,
+    *,
+    collective: str = "ag",
 ) -> int:
-    """Lower one gather chain (execution-order ``factors`` with per-stage hop
+    """Lower one stage chain (execution-order ``factors`` with per-stage hop
     ``modes``) into ``sched``, starting at step ``offset``.
 
     The transfers come straight from ``plan_ir.stage_hops`` — the IR's own
@@ -302,10 +304,14 @@ def _lower_gather_chain(
     execution-major mixed-radix ring order, so stage-1 transfers route on
     the whole ring and stage-j>=2 transfers inside their contiguous parent
     segment of size ``prod(factors[j-1:])`` — exactly like
-    ``build_optree_schedule``.  A ``oneshot`` stage is one all-to-all
-    broadcast round; a ``perhop`` stage is ``m-1`` causally ordered ring
-    hops, each colored into its own step block.  Returns the new step
-    offset; appends one ``stage_steps`` entry per stage.
+    ``build_optree_schedule``.  This holds for exchange (a2a) traffic too:
+    a digit-transpose stage moves blocks only within the same stage-j
+    subsets the gather broadcast uses, so the identical routing geometry
+    applies (the items are the n² (origin, destination) blocks instead of
+    the n origin shards).  A ``oneshot`` stage is one synchronized round; a
+    ``perhop`` stage is ``m-1`` causally ordered hops, each colored into
+    its own step block.  Returns the new step offset; appends one
+    ``stage_steps`` entry per stage.
     """
     from .plan_ir import stage_hops  # local import: avoid a cycle
     from .tree import mixed_radix_sizes
@@ -315,7 +321,7 @@ def _lower_gather_chain(
     for j, (m, mode) in enumerate(zip(factors, modes)):
         parent_sz = child_sizes[j] * m
         stage_steps = 0
-        for hop in stage_hops(factors, modes, j, 0.0):
+        for hop in stage_hops(factors, modes, j, 0.0, collective=collective):
             raw: List[RawTx] = []
             for t in hop.transfers:
                 if j == 0:
@@ -352,6 +358,12 @@ def schedule_from_ir(plan, w: int) -> Schedule:
       of the plan occupies the time-reversed i-th block of the schedule.
     * ``ar`` — the RS mirror chain followed by the AG chain (2k stages);
       the RS half's ``stage_steps`` are execution-ordered the same way.
+    * ``a2a`` — lowered forward like ``ag`` but with exchange traffic: the
+      items are the n² (origin, destination) blocks (labels ``u·n + v``,
+      each ``shard/n`` bytes) and stage j transposes one mixed-radix digit
+      within the same subsets/segments the gather stages use.
+      ``meta["semantics"] = "exchange"`` tells the simulator to start node
+      u holding ``{u·n + v}`` and check node v ends holding ``{u·n + v}``.
 
     Chunking (``plan.mode == "chunked"``) is an executor-side wavefront over
     whole-stage collectives; the optical step structure is unchanged, so the
@@ -363,25 +375,27 @@ def schedule_from_ir(plan, w: int) -> Schedule:
     ``price(plan, OpticalSystem)`` for a hybrid plan equals the simulator's
     wall time on this lowering exactly as for every other mode.
     """
-    from .plan_ir import effective_stage_mode  # local import: avoid a cycle
+    from .plan_ir import collective_kind, effective_stage_mode  # local import: avoid a cycle
 
+    kind = collective_kind(plan.collective)
     sched = Schedule(
         n=plan.n, w=w,
         meta={"algorithm": f"ir-{plan.collective}",
               "factors": plan.factors,
               "modes": plan.stage_modes,
               "mode": plan.mode,
+              "semantics": kind.traffic,
               "source": plan.meta.get("source")},
     )
     # factor-1 stages are lowered too (zero transfers, zero steps) so
     # ``stage_steps`` always has one entry per plan stage and per-stage
     # attribution pairs with ``plan.factors`` index for index
     offset = 0
-    if plan.collective == "ar":
+    if kind.two_phase:
         k = len(plan.stages) // 2
         halves = ((plan.stages[:k], True), (plan.stages[k:], False))
     else:
-        halves = ((plan.stages, plan.collective == "rs"),)
+        halves = ((plan.stages, kind.chain == "reversed"),)
     for half, flip in halves:
         # scatter halves lower as their time-reversed mirror all-gather
         stages = tuple(reversed(half)) if flip else half
@@ -393,6 +407,7 @@ def schedule_from_ir(plan, w: int) -> Schedule:
             [s.factor for s in stages],
             [effective_stage_mode(plan, s) for s in stages],
             w, offset,
+            collective=plan.collective,
         )
         if flip:  # attribution back to execution order
             sched.stage_steps[mark:] = sched.stage_steps[mark:][::-1]

@@ -1,12 +1,19 @@
 """Schedule validators: the correctness oracle for every schedule builder.
 
-A schedule is a *valid all-gather* iff:
+A schedule is *valid* iff:
   1. conflict-freedom — within a step, no two lightpaths share a
      (direction, link) on the same wavelength, and wavelength < w;
   2. causality — a node only transmits items it holds when the step begins;
-  3. completeness — afterwards every node holds all n items.
+  3. completeness — afterwards every node holds its collective's target set.
 
-These three checks are what the hypothesis property tests sweep.
+``sched.meta["semantics"]`` selects the item model, exactly as in
+``optics.simulator``: ``"gather"`` (the default) starts node i holding
+item i and requires every node to end with all n items; ``"exchange"``
+(a2a) uses the n² (origin, destination) item space ``u·n + v`` — node u
+starts holding ``{u·n + v : v}`` and node v must end holding
+``{u·n + v : u}``.
+
+These checks are what the hypothesis property tests sweep.
 """
 from __future__ import annotations
 
@@ -45,7 +52,13 @@ def validate_conflict_free(sched: Schedule) -> None:
 
 
 def validate_causality_completeness(sched: Schedule) -> None:
-    holdings: List[Set[int]] = [{i} for i in range(sched.n)]
+    exchange = sched.meta.get("semantics") == "exchange"
+    if exchange:
+        holdings: List[Set[int]] = [
+            {u * sched.n + v for v in range(sched.n)} for u in range(sched.n)
+        ]
+    else:
+        holdings = [{i} for i in range(sched.n)]
     for step_txs in sched.by_step():
         arrivals: Dict[int, Set[int]] = defaultdict(set)
         for tx in step_txs:
@@ -58,10 +71,13 @@ def validate_causality_completeness(sched: Schedule) -> None:
         for dst, items in arrivals.items():
             holdings[dst] |= items
     for p, h in enumerate(holdings):
-        if len(h) != sched.n:
-            missing = sorted(set(range(sched.n)) - h)
+        need = ({u * sched.n + p for u in range(sched.n)} if exchange
+                else set(range(sched.n)))
+        missing = sorted(need - h)
+        if missing:
             raise ScheduleError(
-                f"incomplete all-gather: node {p} missing items {missing[:8]}"
+                f"incomplete {'all-to-all' if exchange else 'all-gather'}: "
+                f"node {p} missing items {missing[:8]}"
                 f"{'...' if len(missing) > 8 else ''}"
             )
 

@@ -50,6 +50,15 @@ benchmarks the explicit-TP transformer block (context-scoped collectives,
 TP and SP variants — models.model.transformer_block_tp) against the GSPMD
 path: modeled-electrical, modeled-optical and measured time off the same
 CollectivePlan objects the context cached while the block ran.
+
+  python -m repro.launch.perf --moe 2,4
+
+benchmarks the expert-parallel MoE block: experts sharded over the last
+mesh axis, dispatch/combine crossing the mesh through the context-planned
+``api.all_to_all`` (two a2a issues per block).  Reports modeled-electrical,
+modeled-optical and measured time off the cached CollectivePlan objects,
+checks the EP block against the all-experts-local reference per device
+shard, and times the replicated-experts GSPMD path for contrast.
 """
 
 import argparse
@@ -395,6 +404,112 @@ def tp_block_bench(factors_csv: str, reps: int = 5, links_path=None,
     return rows
 
 
+def moe_block_bench(factors_csv: str, reps: int = 5, links_path=None,
+                    archs: str = "llama4-scout-17b-a16e,arctic-480b",
+                    seq: int = 8) -> list:
+    """Expert-parallel MoE block vs the all-experts-local reference: experts
+    sharded over the LAST mesh axis, dispatch/combine crossing the mesh
+    through the context-planned ``api.all_to_all`` (``models.moe`` EP path).
+
+    Every number comes off the SAME CollectivePlan objects the context
+    cached while the block ran: modeled-electrical (LinkSpec), modeled-
+    optical (Eq. 3 on the RWA-lowered a2a schedule) and measured time,
+    weighted by issue count.  The EP output must match running the block
+    per device shard with all experts local (group-local dispatch never
+    crosses shards — only the expert compute location differs); the
+    replicated-experts GSPMD jit is timed for contrast.
+    """
+    import dataclasses as dc
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.comms import comm_context
+    from repro.configs import expert_parallel, get_config, reduced
+    from repro.core.cost_model import TERARACK, price
+    from repro.models.moe import moe_block, moe_init
+
+    factors, names, n, mesh, link_map, _ = _bench_setup(factors_csv, links_path)
+    ep_axis = names[-1]
+    m = factors[-1]
+    rows = []
+    for arch in archs.split(","):
+        cfg = expert_parallel(reduced(get_config(arch)), axis=ep_axis)
+        if cfg.moe.num_experts % m:
+            raise SystemExit(
+                f"--moe: {arch} reduced num_experts={cfg.moe.num_experts} "
+                f"not divisible by expert axis {ep_axis!r} size {m}")
+        cfg_ref = dc.replace(
+            cfg, moe=dc.replace(cfg.moe, expert_axis=None))
+        p = moe_init(jax.random.key(0), cfg, dtype=jnp.float32)
+        per_dev = 2
+        B = per_dev * n
+        x = jax.random.normal(jax.random.key(1), (B, seq, cfg.d_model),
+                              jnp.float32)
+
+        # all-experts-local reference, shard by shard (P(names) batch order)
+        ref = jnp.concatenate(
+            [moe_block(p, cfg_ref, x[i * per_dev:(i + 1) * per_dev])[0]
+             for i in range(n)], axis=0)
+
+        spec = P(tuple(names))
+        with comm_context(mesh, tuple(names), links=link_map) as ctx:
+            ep_fn = jax.jit(shard_map(
+                lambda pp, xx: moe_block(pp, cfg, xx)[0], mesh=mesh,
+                in_specs=(P(), spec), out_specs=spec))
+            got = ep_fn(p, x)
+            ok = bool(np.allclose(np.asarray(got), np.asarray(ref),
+                                  atol=2e-5))
+            t_ep = _timed(ep_fn, p, x, reps=reps)
+
+            # GSPMD contrast: replicated experts, the partitioner decides
+            gspmd = jax.jit(
+                lambda pp, xx: moe_block(pp, cfg_ref, xx)[0],
+                in_shardings=(NamedSharding(mesh, P()),
+                              NamedSharding(mesh, spec)),
+                out_shardings=NamedSharding(mesh, spec))
+            t_gspmd = _timed(gspmd, p, x, reps=reps)
+
+            usage = ctx.plan_usage()
+            a2a = [(pl, c) for pl, c in usage if pl.collective == "a2a"]
+            issued = sum(c for _, c in usage)
+            elec = sum(price(pl).total_s * c for pl, c in usage)
+            opt = sum(
+                price(pl, dc.replace(TERARACK, n_nodes=pl.n)).total_s * c
+                for pl, c in usage)
+            row = dict(
+                arch=arch, plans=len(usage), a2a_plans=len(a2a),
+                issued=issued, modeled_elec_us=elec * 1e6,
+                modeled_opt_us=opt * 1e6, measured_ep_us=t_ep,
+                measured_gspmd_us=t_gspmd, allclose=ok,
+                cache=dc.asdict(ctx.cache_stats),
+                modes=sorted({pl.mode for pl, _ in usage}),
+            )
+            rows.append(row)
+            print(f"[perf/moe] {arch} mesh={factors} ep_axis={ep_axis} "
+                  f"E={cfg.moe.num_experts} top_k={cfg.moe.top_k}: "
+                  f"plans={row['plans']} (a2a={row['a2a_plans']}) "
+                  f"issued={issued} "
+                  f"modeled elec={row['modeled_elec_us']:.1f}us "
+                  f"optical={row['modeled_opt_us']:.1f}us | measured "
+                  f"ep={t_ep:.0f}us gspmd={t_gspmd:.0f}us "
+                  f"allclose={ok} modes={row['modes']} "
+                  f"cache={row['cache']} "
+                  f"(fake host devices: modeled times are the decision "
+                  f"signal)")
+            if not ok:
+                raise SystemExit(f"--moe {arch}: EP block diverged from "
+                                 f"the all-experts-local reference")
+            if not a2a:
+                raise SystemExit(f"--moe {arch}: no a2a plan in the "
+                                 f"context cache — EP dispatch did not go "
+                                 f"through api.all_to_all")
+    return rows
+
+
 def calibrate_links(factors_csv: str, sizes_kb_csv: str, reps: int = 10,
                     links_path=None) -> None:
     """Fit per-axis LinkSpec alpha/bandwidth from measured wall-clock.
@@ -484,6 +599,14 @@ def main():
                          "GSPMD path on this mesh factorization — modeled "
                          "electrical/optical and measured, off the same "
                          "CollectivePlan objects")
+    ap.add_argument("--moe", default=None, metavar="F1,F2",
+                    help="benchmark the expert-parallel MoE block (experts "
+                         "sharded over the last mesh axis, context-planned "
+                         "all-to-all dispatch/combine) vs the replicated-"
+                         "experts GSPMD path on this mesh factorization")
+    ap.add_argument("--moe-archs", default="llama4-scout-17b-a16e,arctic-480b",
+                    help="comma-set of MoE arch names for --moe "
+                         "(reduced configs)")
     ap.add_argument("--calibrate", action="store_true",
                     help="with --collectives: fit LinkSpec alpha/bandwidth "
                          "per mesh axis from measured wall-clock (printed "
@@ -516,6 +639,10 @@ def main():
 
     if args.tp_block:
         tp_block_bench(args.tp_block, reps=args.reps, links_path=args.links)
+        return
+    if args.moe:
+        moe_block_bench(args.moe, reps=args.reps, links_path=args.links,
+                        archs=args.moe_archs)
         return
     if args.collectives:
         if args.calibrate:

@@ -22,7 +22,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.comms import comm_context
-from repro.configs import SHAPES, get_config, reduced as reduce_cfg
+from repro.configs import (
+    SHAPES,
+    expert_parallel,
+    get_config,
+    reduced as reduce_cfg,
+)
 from repro.data import DataConfig, SyntheticLMPipeline
 from repro.models import init_params, loss_fn
 from repro.models import sharding as shd
@@ -91,6 +96,14 @@ def main():
                     help="step-log interval; with --zero1 explicit each log "
                          "also prints the comm context's per-plan telemetry "
                          "(cache stats + chosen order per plan)")
+    ap.add_argument("--expert-parallel", action="store_true",
+                    help="MoE archs: shard the experts over the 'data' mesh "
+                         "axis and route dispatch/combine through the "
+                         "context-planned api.all_to_all (models.moe EP "
+                         "path).  Requires --zero1 explicit — the EP "
+                         "all-to-all only activates inside the shard_map "
+                         "train step where the axis is bound; the a2a "
+                         "plans show up in the per-plan comm telemetry.")
     ap.add_argument("--zero1", choices=["spec", "explicit"], default="spec",
                     help="gradient sync: 'spec' lets GSPMD emit the "
                          "collectives from the ZeRO-1 sharding specs; "
@@ -104,6 +117,12 @@ def main():
     if args.reduced:
         cfg = reduce_cfg(cfg)
         cfg = dataclasses.replace(cfg, dtype="float32")
+    if args.expert_parallel:
+        if args.zero1 != "explicit":
+            raise SystemExit("--expert-parallel needs --zero1 explicit: the "
+                             "EP all-to-all only runs inside the shard_map "
+                             "train step where the expert axis is bound")
+        cfg = expert_parallel(cfg, axis="data")  # raises if arch has no MoE
     shape = SHAPES["train_4k"]
     seq = args.seq or (64 if args.reduced else shape.seq_len)
     batch = args.batch or (4 if args.reduced else shape.global_batch)

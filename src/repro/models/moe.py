@@ -18,13 +18,25 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
+from ..compat import axis_size
 from ..configs.base import ModelConfig
 from .layers import dense, dense_init
 from .mlp import ffn_apply, ffn_init
 from .sharding import constrain
 
 __all__ = ["moe_init", "moe_block"]
+
+
+def _ep_active(axis_name: str) -> bool:
+    """True when ``axis_name`` is bound in the ambient axis env — i.e. we
+    are tracing inside a shard_map body that carries the expert axis."""
+    try:
+        axis_size(axis_name)
+        return True
+    except Exception:
+        return False
 
 
 def moe_init(key, cfg: ModelConfig, *, dtype) -> Dict:
@@ -61,6 +73,61 @@ def _expert_ffn(experts: Dict, xe: jax.Array) -> jax.Array:
     return jnp.einsum("ecf,efd->ecd", h, experts["down"])
 
 
+def _ep_expert_ffn(experts: Dict, buf: jax.Array, axis_name: str) -> jax.Array:
+    """Expert-parallel (G, E, C, d) -> (G, E, C, d): each device owns
+    E/m contiguous experts along mesh axis ``axis_name``.
+
+    The dispatch buffer's expert dim is owner-major (experts contiguous per
+    owner device), so one context-planned ``api.all_to_all`` ships every
+    device's per-expert slices to the expert owners, the local expert shard
+    runs on the concatenated arrivals, and the inverse all-to-all returns
+    the results to the token owners — the only cross-device movement, and
+    it flows through the same CollectivePlan IR the pricer and the optical
+    simulator consume.
+
+    ``experts`` may hold the full (E, ...) stacked weights (replicated
+    params, e.g. the explicit-ZeRO1 trainer: this device's shard is sliced
+    out locally, so gradients land in the right slice) or an already-local
+    (E/m, ...) shard."""
+    from ..comms import api  # lazy: models must stay importable without comms
+
+    m = axis_size(axis_name)
+    G, E, C, d = buf.shape
+    if E % m:
+        raise ValueError(
+            f"num_experts {E} not divisible by expert axis "
+            f"{axis_name!r} size {m}")
+    e_loc = E // m
+    w_gate, w_up, w_down = experts["gate"], experts["up"], experts["down"]
+    if w_gate.shape[0] == E and m > 1:
+        idx = lax.axis_index(axis_name)
+
+        def sl(w):
+            return lax.dynamic_slice_in_dim(w, idx * e_loc, e_loc, axis=0)
+
+        w_gate, w_up, w_down = sl(w_gate), sl(w_up), sl(w_down)
+    elif w_gate.shape[0] != e_loc:
+        raise ValueError(
+            f"expert weights have leading dim {w_gate.shape[0]}; expected "
+            f"{E} (replicated) or {e_loc} (local shard) for "
+            f"{m}-way expert parallelism")
+
+    # (G,E,C,d) -> (E,G,C,d) -> (E·G·C, d): destination block v = the
+    # slices for experts [v·e_loc, (v+1)·e_loc) — owner-major by experts
+    z = jnp.swapaxes(buf, 0, 1).reshape(E * G * C, d)
+    z = api.all_to_all(z, axes=(axis_name,))
+    # received block u = device u's slices for MY experts
+    z = jnp.swapaxes(z.reshape(m, e_loc, G, C, d), 0, 1)
+    y = _expert_ffn(
+        {"gate": w_gate, "up": w_up, "down": w_down},
+        z.reshape(e_loc, m * G * C, d),
+    )
+    # inverse exchange: results back to the token owners, expert-major
+    y = jnp.swapaxes(y.reshape(e_loc, m, G, C, d), 0, 1).reshape(E * G * C, d)
+    y = api.all_to_all(y, axes=(axis_name,))
+    return jnp.swapaxes(y.reshape(E, G, C, d), 0, 1)
+
+
 def _num_groups(T: int, want: int = 32) -> int:
     g = min(want, T)
     while T % g:
@@ -79,6 +146,13 @@ def moe_block(
     is the (G, E, C, d) <-> expert-weights contraction — the EP all-to-all.
     (A global argsort permutes tokens across the whole data axis every layer;
     that cost arctic-480b 16 TB/step of all-reduce — EXPERIMENTS.md §Perf.)
+
+    With ``cfg.moe.expert_axis`` set AND that axis bound in the ambient axis
+    env (tracing inside shard_map), the EP all-to-all is EXPLICIT: experts
+    shard over the axis and ``_ep_expert_ffn`` routes dispatch/combine
+    through ``repro.comms.api.all_to_all`` — context-planned, plan-cached,
+    and numerically identical to running this block per device shard with
+    all experts local.
     """
     e = cfg.moe
     B, S, d = x.shape
@@ -127,10 +201,19 @@ def moe_block(
     buf = jax.vmap(scatter_group)(xg, sorted_ids, pos_c, src_token)  # (G,E,C,d)
     buf = constrain(buf, "moe_buffer")
 
-    g_ = jnp.einsum("gecd,edf->gecf", buf, p["experts"]["gate"])
-    u_ = jnp.einsum("gecd,edf->gecf", buf, p["experts"]["up"])
-    h_ = (jax.nn.silu(g_.astype(jnp.float32)) * u_.astype(jnp.float32)).astype(x.dtype)
-    ye = jnp.einsum("gecf,efd->gecd", h_, p["experts"]["down"])  # (G,E,C,d)
+    ep = e.expert_axis is not None and _ep_active(e.expert_axis)
+    if ep:
+        # experts live on the mesh: dispatch/combine cross it through the
+        # context-planned all-to-all (comms.api); aux means become global
+        # below.  Routing/capacity above is group-local per device, exactly
+        # the math of the non-EP block on this device's tokens.
+        ye = _ep_expert_ffn(p["experts"], buf, e.expert_axis)  # (G,E,C,d)
+        aux = {k: lax.pmean(v, e.expert_axis) for k, v in aux.items()}
+    else:
+        g_ = jnp.einsum("gecd,edf->gecf", buf, p["experts"]["gate"])
+        u_ = jnp.einsum("gecd,edf->gecf", buf, p["experts"]["up"])
+        h_ = (jax.nn.silu(g_.astype(jnp.float32)) * u_.astype(jnp.float32)).astype(x.dtype)
+        ye = jnp.einsum("gecf,efd->gecd", h_, p["experts"]["down"])  # (G,E,C,d)
     ye = constrain(ye, "moe_buffer")
 
     pos_clip = jnp.minimum(pos_c, C - 1)

@@ -48,7 +48,23 @@ def simulate(
     detailed: bool = False,
     check: bool = True,
 ) -> SimReport:
-    holdings: List[Set[int]] = [{i} for i in range(sched.n)]
+    """Execute ``sched`` step by step.  ``message_bytes`` is the size of ONE
+    schedule item (``plan_ir.optical_message_bytes`` for IR-lowered plans:
+    the shard for gather traffic, a 1/n block for exchange traffic).
+
+    ``sched.meta["semantics"]`` selects the item model: ``"gather"`` (the
+    default) starts node i holding item i and requires every node to end
+    with all n items; ``"exchange"`` (a2a) uses the n² (origin,
+    destination) item space ``u·n + v`` — node u starts holding
+    ``{u·n + v : v}`` and node v must end holding ``{u·n + v : u}``.
+    """
+    exchange = sched.meta.get("semantics") == "exchange"
+    if exchange:
+        holdings: List[Set[int]] = [
+            {u * sched.n + v for v in range(sched.n)} for u in range(sched.n)
+        ]
+    else:
+        holdings = [{i} for i in range(sched.n)]
     max_load = 0
     steps = sched.by_step()
     for step_txs in steps:
@@ -75,7 +91,15 @@ def simulate(
             holdings[dst] |= items
     if check:
         for p, h in enumerate(holdings):
-            assert len(h) == sched.n, f"simulator: node {p} incomplete ({len(h)}/{sched.n})"
+            if exchange:
+                need = {u * sched.n + p for u in range(sched.n)}
+                missing = need - h
+                assert not missing, (
+                    f"simulator: node {p} missing {len(missing)} destination "
+                    f"blocks (e.g. {sorted(missing)[:4]})")
+            else:
+                assert len(h) == sched.n, \
+                    f"simulator: node {p} incomplete ({len(h)}/{sched.n})"
     per_step = step_time(sys, message_bytes, detailed=detailed)
     return SimReport(
         algorithm=str(sched.meta.get("algorithm", "?")),

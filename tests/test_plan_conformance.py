@@ -40,6 +40,7 @@ from repro.core import (
     validate_schedule,
 )
 from repro.core.planner import DCN_LINK, ICI_LINK, LinkSpec, pipeline_makespan
+from repro.core.plan_ir import optical_message_bytes
 from repro.optics import simulate
 
 try:
@@ -58,7 +59,11 @@ FAT = LinkSpec("fat", 1e6, 1e-12)  # bandwidth-bound: chunking pays deep
 # bandwidth-bound, heterogeneous link tables
 GRID_FACTORS = [(2,), (8,), (2, 4), (16, 2), (2, 3, 4), (1, 4, 2)]
 GRID_SHARDS = [64.0, 64 * 2**10, 1 * 2**20, 8 * 2**20]
-GRID_COLLS = ["ag", "rs", "ar"]
+# "a2a" rides the same grid: shard_bytes is the node's full exchange
+# buffer there, and its optical item is the (origin, dest) block — the
+# invariants hold verbatim (price==simulate per candidate, hybrid
+# dominance, with_chunks(1)/meta round-trip no-drift)
+GRID_COLLS = ["ag", "rs", "ar", "a2a"]
 
 
 def _grid_links(factors, variant):
@@ -176,7 +181,11 @@ def check_candidates_price_as_simulated(sizes, w, coll, slow_idx, shard):
     for cand in srch.candidates:
         sched = schedule_from_ir(cand.plan, w)
         validate_schedule(sched)
-        rep = simulate(sched, sys_w, cand.plan.shard_bytes, check=True)
+        # optical_message_bytes: the per-item payload the RWA schedule
+        # moves — shard_bytes for gather traffic, shard/n per
+        # (origin, dest) block for the a2a exchange
+        rep = simulate(sched, sys_w, optical_message_bytes(cand.plan),
+                       check=True)
         assert cand.optical_s == pytest.approx(rep.time_s, rel=1e-12)
         assert cand.optical_steps == rep.steps
         assert price(cand.plan, sys_w).total_s == pytest.approx(
@@ -287,11 +296,19 @@ class TestOrderSearchDecisions:
     optical winner is a strictly different, strictly cheaper order."""
 
     AXES = [("a", 2, FAST), ("b", 4, SLOW)]
+    # a2a's electrical cost is stage-order invariant (every stage moves
+    # 1/m of every peer's shard regardless of position), so its "flip" is
+    # electrical tie-break vs a strict optical preference — and the 2x4
+    # table ties optically too.  2x3 at w<=2 separates: ("b","a") beats
+    # the tie-break order ("a","b") on RWA step count (6 vs 7 at w=2).
+    AXES_A2A = [("a", 2, FAST), ("b", 3, SLOW)]
 
     @pytest.mark.parametrize("coll", GRID_COLLS)
     def test_optical_flips_and_strictly_wins(self, coll):
-        srch = search_stage_orders(self.AXES, 1 * 2**20, collective=coll,
-                                   backend="optical", system=_sys(8, 2))
+        axes = self.AXES_A2A if coll == "a2a" else self.AXES
+        n = math.prod(s for _, s, _ in axes)
+        srch = search_stage_orders(axes, 1 * 2**20, collective=coll,
+                                   backend="optical", system=_sys(n, 2))
         eb, ob = srch.best_by("electrical"), srch.best_by("optical")
         assert eb.order != ob.order
         assert ob.optical_s < eb.optical_s  # strictly, not a tie-break
@@ -328,24 +345,27 @@ class TestPolicyOrderHook:
     """PlanPolicy.order="optical" drives the context's cached plan (the
     meshless axis_sizes path — no devices needed)."""
 
-    def _ctx(self, backend):
+    def _ctx(self, backend, b_size=4):
         from repro.comms.api import CommContext, PlanPolicy
 
         links = {"a": FAST, "b": SLOW}
         return CommContext(
             axis_names=("a", "b"), links=links,
-            axis_sizes={"a": 2, "b": 4},
-            policy=PlanPolicy(order=backend, optical=_sys(8, 2)))
+            axis_sizes={"a": 2, "b": b_size},
+            policy=PlanPolicy(order=backend, optical=_sys(2 * b_size, 2)))
 
     def test_optical_policy_picks_different_order(self):
-        ctx_e, ctx_o = self._ctx("electrical"), self._ctx("optical")
         for coll in GRID_COLLS:
+            # a2a needs the 2x3 table — 2x4 ties optically (see
+            # TestOrderSearchDecisions.AXES_A2A)
+            b = 3 if coll == "a2a" else 4
+            ctx_e, ctx_o = self._ctx("electrical", b), self._ctx("optical", b)
             pe, po = ctx_e.plan(coll, 2**20), ctx_o.plan(coll, 2**20)
             assert pe.axes != po.axes
             srch = po.meta["order_search"]
             assert srch["backend"] == "optical" and srch["flipped"]
-            assert price(po, _sys(8, 2)).total_s \
-                < price(pe, _sys(8, 2)).total_s
+            assert price(po, _sys(2 * b, 2)).total_s \
+                < price(pe, _sys(2 * b, 2)).total_s
 
     def test_winner_cached_per_key(self):
         ctx = self._ctx("optical")
