@@ -27,6 +27,12 @@
 #                                  # plan mode + the expert-parallel MoE
 #                                  # block through the context-planned a2a
 #                                  # (launch/perf.py --moe) on 8 host devices
+#   scripts/ci.sh --fault-smoke    # fault layer: the 8-device chaos harness
+#                                  # (injected ppermute faults detected +
+#                                  # retried + degraded bit-identically,
+#                                  # report_fault re-plans the cache) + the
+#                                  # healthy-vs-degraded modeled-cost report
+#                                  # (launch/perf.py --faults)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -52,6 +58,20 @@ api_grep_gate() {
     fi
 }
 api_grep_gate
+
+# fault gate: the executor's verified/retry path must never swallow errors
+# blind — a bare ``except:`` (or blanket ``except Exception``) in the
+# executors would mask real faults as "recovered".  Detection is checksum-
+# driven, not exception-driven; keep it that way.
+fault_grep_gate() {
+    if grep -nE "except(\s+Exception)?\s*:" \
+            src/repro/comms/plan_executor.py src/repro/comms/ring_executor.py; then
+        echo "CI FAIL: bare except/except Exception in the executors; the" \
+             "fault path must detect via checksums, not swallow errors" >&2
+        exit 1
+    fi
+}
+fault_grep_gate
 
 # order gate: the cross-world planning contract, in EVERY lane (pure
 # python, no devices, <1s) — on the canonical asymmetric links table the
@@ -193,6 +213,21 @@ PY
     # the all-experts-local reference per shard
     python -m repro.launch.perf --moe 2,4 --reps 2 "$@"
     echo "CI a2a-smoke OK"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--fault-smoke" ]]; then
+    shift
+    # (1) health-model + degraded-planning unit tests, in-process
+    python -m pytest -x -q tests/test_health.py
+    # (2) the 8-device chaos harness: injected ppermute faults are detected
+    # by the conservation checksums, retried, and degraded bit-identically;
+    # report_fault re-plans the cache under the degraded world
+    python tests/subproc/check_fault_tolerance.py
+    # (3) healthy-vs-degraded modeled cost per collective (also asserts
+    # degraded >= healthy in both pricing worlds)
+    python -m repro.launch.perf --faults 2,4 --sizes-kb 64 --optical-w 8 "$@"
+    echo "CI fault-smoke OK"
     exit 0
 fi
 

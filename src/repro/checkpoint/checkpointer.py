@@ -4,8 +4,13 @@ async save thread, latest-checkpoint discovery for restart.
 Layout:  <dir>/step_<N>.tmp/ -> arrays.npz + meta.json, renamed to
 <dir>/step_<N>/ only after both files are fully written (the rename is the
 commit point — a crashed save leaves only a .tmp that restore ignores).
-On a multi-host cluster each process writes ``arrays_<proc>.npz`` of its
-addressable shards; offline (single process) that is one file.
+Every file inside the tmp dir is itself written atomically (sibling .part
++ fsync + rename, meta.json last) and the parent directory is fsynced
+after the commit rename, so a kill at ANY instant leaves either the
+previous checkpoint set or the new one — never a torn file a restore
+could load.  On a multi-host cluster each process writes
+``arrays_<proc>.npz`` of its addressable shards; offline (single process)
+that is one file.
 """
 from __future__ import annotations
 
@@ -21,6 +26,30 @@ import jax
 import numpy as np
 
 __all__ = ["Checkpointer"]
+
+
+def _atomic_write(path: Path, write_fn) -> None:
+    """Write ``path`` via a sibling ``.part`` temp file, fsync, rename.
+
+    Readers can never observe a torn/partial file under the final name,
+    and the bytes are durable before the name appears — the per-file half
+    of the checkpointer's crash-safety story (the directory rename in
+    ``_write`` is the other half).
+    """
+    tmp = path.with_name(path.name + ".part")
+    with open(tmp, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _fsync_dir(path: Path) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -82,18 +111,21 @@ class Checkpointer:
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
         flat = _flatten(state)
-        np.savez(tmp / f"arrays_{self.process_id}.npz", **flat)
+        _atomic_write(tmp / f"arrays_{self.process_id}.npz",
+                      lambda f: np.savez(f, **flat))
         meta = {
             "step": step,
             "time": time.time(),
             "keys": sorted(flat.keys()),
             "process_count": 1,
         }
-        with open(tmp / "meta.json", "w") as f:
-            json.dump(meta, f)
+        # meta.json LAST: _steps() treats its presence as "files complete"
+        _atomic_write(tmp / "meta.json",
+                      lambda f: f.write(json.dumps(meta).encode()))
         if final.exists():  # same-step re-save (e.g. final save after async)
             shutil.rmtree(final)
         os.replace(tmp, final)  # commit point
+        _fsync_dir(self.dir)  # make the commit rename itself durable
         self._gc()
 
     def _gc(self) -> None:

@@ -48,6 +48,13 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from ..compat import axis_size, shard_map
+from ..core.health import (
+    FaultEvent,
+    HealthError,
+    LinkHealth,
+    health_fingerprint,
+    load_health,
+)
 from ..core.plan_ir import CollectivePlan
 from ..core.planner import (
     LinkSpec,
@@ -111,6 +118,12 @@ class PlanPolicy:
                      with (None = TERARACK defaults); lower wavelength
                      counts sharpen order differences (step counts tie at
                      large w on small meshes).
+    ``verify``     — run ops through ``execute_plan_verified``: per-stage
+                     conservation checksums, up to ``verify_retries``
+                     bounded retries of the staged path, then a graceful
+                     degrade to the bit-identical XLA one-shot collective
+                     (counted in ``CacheStats.fallbacks``).
+    ``verify_retries`` — retry budget for the verified executor (>= 0).
     """
 
     mode: Optional[str] = None
@@ -119,12 +132,18 @@ class PlanPolicy:
     fuse: object = "auto"
     order: object = None
     optical: object = None
+    verify: bool = False
+    verify_retries: int = 1
 
     def __post_init__(self):
         if self.mode is not None and self.mode not in (
                 "oneshot", "chunked", "perhop", "hybrid"):
             raise ValueError(f"policy mode must be oneshot|chunked|perhop|"
                              f"hybrid, got {self.mode!r}")
+        if not isinstance(self.verify_retries, int) or self.verify_retries < 0:
+            raise ValueError(
+                f"verify_retries must be a non-negative int, "
+                f"got {self.verify_retries!r}")
         if isinstance(self.order, str):
             if self.order not in ("electrical", "optical"):
                 raise ValueError(
@@ -140,12 +159,21 @@ class PlanPolicy:
 
 @dataclass
 class CacheStats:
-    """Plan-cache counters; ``invalidated`` counts entries dropped by a
-    links-table change (``CommContext.update_links``)."""
+    """Plan-cache counters.
+
+    ``invalidated`` counts entries dropped by a links-table change
+    (``CommContext.update_links``) or a health change;
+    ``replans_on_fault`` counts entries re-planned IN PLACE after a
+    ``report_fault``/``update_health`` (the self-healing path);
+    ``fallbacks`` counts degrades to the one-shot collective — either at
+    plan time (a dead axis/direction made every staged candidate illegal)
+    or at run time (the verified executor exhausted its retries)."""
 
     hits: int = 0
     misses: int = 0
     invalidated: int = 0
+    replans_on_fault: int = 0
+    fallbacks: int = 0
 
 
 def links_fingerprint(links: Optional[Dict[str, LinkSpec]]) -> str:
@@ -179,15 +207,21 @@ class CommContext:
         links: Optional[Dict[str, LinkSpec]] = None,
         policy: Optional[PlanPolicy] = None,
         axis_sizes: Optional[Dict[str, int]] = None,
+        health: Optional[LinkHealth] = None,
     ):
         self.mesh = mesh
         self.axis_names = tuple(axis_names) if axis_names is not None else None
         self.links = dict(links) if links else None
         self.policy = policy or PlanPolicy()
         self.axis_sizes = dict(axis_sizes) if axis_sizes else None
+        self.health = health
         self._links_fp = links_fingerprint(self.links)
+        self._health_fp = health_fingerprint(health)
         self._cache: Dict[tuple, CollectivePlan] = {}
         self._counts: Dict[tuple, int] = {}
+        # what each cache entry was planned FOR — lets a health change
+        # re-plan every live entry in place instead of just dropping it
+        self._requests: Dict[tuple, tuple] = {}
         self.cache_stats = CacheStats()
 
     # -- links / auto-calibration -----------------------------------------
@@ -210,12 +244,84 @@ class CommContext:
             self.cache_stats.invalidated += len(self._cache)
             self._cache.clear()
             self._counts.clear()
+            self._requests.clear()
             self._links_fp = new_fp
         return self.links
 
     @property
     def links_fp(self) -> str:
         return self._links_fp
+
+    # -- health / fault handling -------------------------------------------
+    def update_health(self, health: Union[str, LinkHealth, None]) -> Optional[LinkHealth]:
+        """Swap the link/wavelength health table (a :class:`LinkHealth`, a
+        JSON path, or None = fully healthy) and RE-PLAN every cached entry
+        in place under the new degraded world — the self-healing path:
+        callers keep calling the same ops, and the very next hit serves a
+        plan already priced (and order-searched) for the faulted fabric.
+        A planning dead end (dead axis / every order crossing a dead
+        direction) degrades that entry to the one-shot fallback plan,
+        counted in ``cache_stats.fallbacks``."""
+        if isinstance(health, (str,)) or hasattr(health, "read_text"):
+            health = load_health(health, expect_axes=self.axis_names)
+        new_fp = health_fingerprint(health)
+        self.health = health
+        if new_fp != self._health_fp:
+            self._health_fp = new_fp
+            self._replan_cached()
+        return self.health
+
+    def report_fault(
+        self,
+        event: Optional[FaultEvent] = None,
+        *,
+        axis: Optional[str] = None,
+        kind: Optional[str] = None,
+        direction: Optional[int] = None,
+        derate: Optional[float] = None,
+        wavelength: Optional[int] = None,
+        step: int = 0,
+    ) -> Optional[LinkHealth]:
+        """Fold one fault (or recovery) event into the health table and
+        re-plan affected cache entries in place.  Pass a
+        :class:`~repro.core.health.FaultEvent`, or keyword pieces —
+        ``kind`` is inferred when omitted (``wavelength=`` →
+        ``lose_wavelength``, ``derate=`` → ``derate``, else ``dead``)."""
+        if event is None:
+            if axis is None:
+                raise ValueError(
+                    "report_fault needs a FaultEvent or axis=... pieces")
+            if kind is None:
+                kind = ("lose_wavelength" if wavelength is not None
+                        else "derate" if derate is not None else "dead")
+            event = FaultEvent(step=step, kind=kind, axis=axis,
+                               direction=direction, derate=derate,
+                               wavelength=wavelength)
+        base = self.health if self.health is not None else LinkHealth()
+        return self.update_health(base.apply(event))
+
+    def _replan_cached(self):
+        """Re-key and re-plan every cached entry under the current health
+        fingerprint.  Old keys are invalidated (counted), each live request
+        is planned afresh — ``cache_stats.replans_on_fault`` counts them —
+        and usage counts carry over so telemetry stays meaningful."""
+        stale = list(self._cache)
+        self.cache_stats.invalidated += len(stale)
+        old_counts, old_requests = self._counts, self._requests
+        self._cache, self._counts, self._requests = {}, {}, {}
+        for old_key in stale:
+            req = old_requests.get(old_key)
+            if req is None:
+                continue
+            new_key = old_key[:-1] + (self._health_fp,)
+            self._cache[new_key] = self._plan_with_fallback(*req)
+            self._requests[new_key] = req
+            self._counts[new_key] = old_counts.get(old_key, 0)
+            self.cache_stats.replans_on_fault += 1
+
+    @property
+    def health_fp(self) -> str:
+        return self._health_fp
 
     def plans(self) -> List[CollectivePlan]:
         """Snapshot of every cached CollectivePlan — the same objects the
@@ -283,6 +389,7 @@ class CommContext:
             names,
             self.policy,
             self._links_fp,
+            self._health_fp,  # LAST: _replan_cached re-keys on it
         )
         self._counts[key] = self._counts.get(key, 0) + 1
         cached = self._cache.get(key)
@@ -290,9 +397,43 @@ class CommContext:
             self.cache_stats.hits += 1
             return cached
         self.cache_stats.misses += 1
-        plan = self._plan_uncached(collective, float(shard_bytes), names, sizes)
+        plan = self._plan_with_fallback(
+            collective, float(shard_bytes), names, sizes)
         self._cache[key] = plan
+        self._requests[key] = (collective, float(shard_bytes), names, sizes)
         return plan
+
+    def _plan_with_fallback(
+        self, collective: str, shard_bytes: float, names: Tuple[str, ...],
+        sizes: Dict[str, int],
+    ) -> CollectivePlan:
+        """Plan under the current health; when the degraded world makes
+        every staged candidate illegal (dead axis, or every stage order
+        crossing a dead ring direction), degrade gracefully to the one-shot
+        fallback plan instead of failing the op."""
+        try:
+            plan = self._plan_uncached(collective, shard_bytes, names, sizes)
+        except HealthError as err:
+            plan = self._fallback_plan(
+                collective, shard_bytes, names, sizes, str(err))
+            self.cache_stats.fallbacks += 1
+        if self._health_fp != "healthy":
+            plan = dataclasses.replace(
+                plan, meta={**plan.meta, "health_fp": self._health_fp})
+        return plan
+
+    def _fallback_plan(self, collective, shard_bytes, names, sizes, reason):
+        """The graceful-degrade plan: every stage one-shot (pure XLA
+        collectives — bit-identical results, no staged ring traffic over
+        the faulted fabric), with the reason recorded for telemetry."""
+        from .staged_collectives import plan_collectives  # lazy: cycle
+
+        plan = plan_collectives(
+            sizes, names, shard_bytes, links=self.links,
+            max_chunks=self.policy.max_chunks,
+        )[collective].with_mode("oneshot")
+        return dataclasses.replace(
+            plan, meta={**plan.meta, "fallback": reason})
 
     def _plan_uncached(
         self, collective: str, shard_bytes: float, names: Tuple[str, ...],
@@ -301,18 +442,34 @@ class CommContext:
         from .staged_collectives import plan_collectives  # lazy: cycle
 
         pol = self.policy
+        health = self.health
+        if health is not None and health.is_healthy:
+            health = None
         if pol.order in ("electrical", "optical"):
-            plan = self._plan_searched_order(collective, shard_bytes, names, sizes)
+            plan = self._plan_searched_order(
+                collective, shard_bytes, names, sizes, health)
         elif pol.order is not None:
-            plan = self._plan_forced_order(collective, shard_bytes, names, sizes)
+            plan = self._plan_forced_order(
+                collective, shard_bytes, names, sizes, health)
         else:
+            links = self.links
+            if health is not None:
+                from .staged_allgather import link_for_axis
+                # plan under the DEGRADED world: each axis's link scaled by
+                # its best alive direction (a fully dead axis raises
+                # DeadAxisError → _plan_with_fallback builds the one-shot
+                # fallback plan)
+                links = {
+                    n: health.degrade_link(n, link_for_axis(n, self.links))
+                    for n in names}
             plan = plan_collectives(
-                sizes, names, shard_bytes, links=self.links,
+                sizes, names, shard_bytes, links=links,
                 max_chunks=pol.max_chunks,
             )[collective]
         return _apply_overrides(plan, pol.mode, pol.num_chunks)
 
-    def _plan_searched_order(self, collective, shard_bytes, names, sizes):
+    def _plan_searched_order(self, collective, shard_bytes, names, sizes,
+                             health=None):
         """Cross-world order search (``PlanPolicy.order`` = ``"electrical"``
         or ``"optical"``): enumerate candidate stage orders, price every
         candidate CollectivePlan under BOTH cost backends
@@ -327,10 +484,13 @@ class CommContext:
 
         axes = [(n, sizes[n], link_for_axis(n, self.links)) for n in names]
         kw = {} if self.policy.optical is None else {"system": self.policy.optical}
+        # the search derates links / shrinks wavelengths / prunes orders
+        # crossing dead directions itself — pass the raw table plus health
+        # (DeadDirectionError with zero survivors → fallback upstream)
         search = search_stage_orders(
             axes, shard_bytes, collective=collective,
             backend=self.policy.order, max_chunks=self.policy.max_chunks,
-            **kw,
+            health=health, **kw,
         )
         best = search.best
         eb = search.best_by("electrical")
@@ -351,9 +511,12 @@ class CommContext:
                       # genuine cross-world disagreement only: a strictly
                       # cheaper optical order, not an equal-cost tie-break
                       "flipped": search.flipped,
+                      # orders a dead ring direction made illegal
+                      "pruned": search.pruned,
                   }})
 
-    def _plan_forced_order(self, collective, shard_bytes, names, sizes):
+    def _plan_forced_order(self, collective, shard_bytes, names, sizes,
+                           health=None):
         """Policy-forced stage order: build the schedule for exactly this
         AG order (RS runs the reverse; AR is RS-order + its reverse; a2a
         runs the given order directly — its digit transposes commute)."""
@@ -374,6 +537,7 @@ class CommContext:
         sched = choose_hop_schedule(
             factors, links, shard_bytes,
             max_chunks=self.policy.max_chunks, collective=collective,
+            health=health, axis_names=exec_order,
         )
         plan = sched.to_ir(order)
         return dataclasses.replace(
@@ -441,14 +605,15 @@ def comm_context(
     links: Optional[Dict[str, LinkSpec]] = None,
     policy: Optional[PlanPolicy] = None,
     axis_sizes: Optional[Dict[str, int]] = None,
+    health: Optional[LinkHealth] = None,
     **policy_overrides,
 ):
     """Install a :class:`CommContext` for the dynamic extent of the block.
 
-    Nesting inherits: omitted mesh / axis_names / links come from the
-    enclosing context, and ``policy_overrides`` (mode=, num_chunks=,
-    max_chunks=, fuse=, order=, optical=) merge into the enclosing
-    policy — so
+    Nesting inherits: omitted mesh / axis_names / links / health come from
+    the enclosing context, and ``policy_overrides`` (mode=, num_chunks=,
+    max_chunks=, fuse=, order=, optical=, verify=, verify_retries=) merge
+    into the enclosing policy — so
 
         with comm_context(mesh, ("pod", "tp")):
             with comm_context(mode="perhop"):       # same scope, forced mode
@@ -463,13 +628,14 @@ def comm_context(
         axis_names = axis_names if axis_names is not None else parent.axis_names
         links = links if links is not None else parent.links
         axis_sizes = axis_sizes if axis_sizes is not None else parent.axis_sizes
+        health = health if health is not None else parent.health
         base_policy = policy or parent.policy
     else:
         base_policy = policy or PlanPolicy()
     if policy_overrides:
         base_policy = base_policy.merged(**policy_overrides)
     ctx = CommContext(mesh, axis_names, links=links, policy=base_policy,
-                      axis_sizes=axis_sizes)
+                      axis_sizes=axis_sizes, health=health)
     _stack().append(ctx)
     try:
         yield ctx
@@ -595,6 +761,53 @@ def _axis_spec(ndim: int, axis: int, names) -> P:
     return P(*spec)
 
 
+def _run_local(ctx, y, plan, axis):
+    """Execute a plan on a local shard (inside shard_map) — verified when
+    the policy says so.  Fallback counting is impossible here (the diag is
+    a tracer inside the caller's program); the verified output itself is
+    still the checksum-selected one."""
+    from .plan_executor import execute_plan, execute_plan_verified  # lazy: cycle
+
+    if ctx.policy.verify:
+        out, _ = execute_plan_verified(
+            y, plan, axis=axis, retries=ctx.policy.verify_retries)
+        return out
+    return execute_plan(y, plan, axis=axis)
+
+
+def _note_fallback(ctx, fell):
+    if isinstance(fell, jax.core.Tracer):
+        return  # traced (op called under jit): nothing concrete to count
+    if int(fell) > 0:
+        ctx.cache_stats.fallbacks += 1
+
+
+def _run_wrapped(ctx, x, plan, axis, names, in_spec, out_spec):
+    """shard_map-wrap + execute for the outside-shard_map op paths.  Under
+    ``policy.verify`` the plan runs through ``execute_plan_verified``: each
+    attempt's per-stage/conservation checksums pick the first clean result,
+    exhausted retries degrade to the bit-identical XLA one-shot reference,
+    and a concrete degrade is counted into ``ctx.cache_stats.fallbacks``."""
+    from .plan_executor import execute_plan, execute_plan_verified  # lazy: cycle
+
+    if not ctx.policy.verify:
+        return _wrap(ctx, lambda y: execute_plan(y, plan, axis=axis), x,
+                     in_spec, out_spec)
+
+    def fn(y):
+        out, diag = execute_plan_verified(
+            y, plan, axis=axis, retries=ctx.policy.verify_retries)
+        # replicate the flag over the group so P() is a sound out_spec
+        fell = lax.psum(diag["used_fallback"].astype(jnp.int32), tuple(names))
+        return out, fell
+
+    mesh = _require_mesh(ctx, "this op")
+    out, fell = shard_map(fn, mesh=mesh, in_specs=in_spec,
+                          out_specs=(out_spec, P()))(x)
+    _note_fallback(ctx, fell)
+    return out
+
+
 # --------------------------------------------------------------------------
 # module-level ops
 # --------------------------------------------------------------------------
@@ -623,7 +836,7 @@ def all_gather(
     if _in_axis_env(names):
         plan, _ = _local_plan(ctx, "ag", names, x, axis,
                               mode=mode, num_chunks=num_chunks, scattered=True)
-        return execute_plan(x, plan, axis=axis)
+        return _run_local(ctx, x, plan, axis)
 
     n = math.prod(ctx._sizes(names).values())
     shard_bytes = x.size * x.dtype.itemsize / n
@@ -631,8 +844,8 @@ def all_gather(
                     shape=tuple(x.shape), dtype=x.dtype)
     plan = _apply_overrides(plan, mode, num_chunks)
     plan = _fit_plan(plan, x.shape[axis] // n, 1)
-    return _wrap(ctx, lambda y: execute_plan(y, plan, axis=axis), x,
-                 _axis_spec(x.ndim, axis, names), P())
+    return _run_wrapped(ctx, x, plan, axis, names,
+                        _axis_spec(x.ndim, axis, names), P())
 
 
 def reduce_scatter(
@@ -655,7 +868,7 @@ def reduce_scatter(
     if _in_axis_env(names):
         plan, _ = _local_plan(ctx, "rs", names, x, axis,
                               mode=mode, num_chunks=num_chunks, scattered=False)
-        return execute_plan(x, plan, axis=axis)
+        return _run_local(ctx, x, plan, axis)
 
     n = math.prod(ctx._sizes(names).values())
     shard_bytes = x.size * x.dtype.itemsize / n
@@ -663,8 +876,8 @@ def reduce_scatter(
                     shape=tuple(x.shape), dtype=x.dtype)
     plan = _apply_overrides(plan, mode, num_chunks)
     plan = _fit_plan(plan, x.shape[axis], n)
-    return _wrap(ctx, lambda y: execute_plan(y, plan, axis=axis), x,
-                 P(), _axis_spec(x.ndim, axis, names))
+    return _run_wrapped(ctx, x, plan, axis, names,
+                        P(), _axis_spec(x.ndim, axis, names))
 
 
 def all_reduce(
@@ -693,7 +906,7 @@ def all_reduce(
             return lax.psum(x, names)
         plan, _ = _local_plan(ctx, "ar", names, x, axis,
                               mode=mode, num_chunks=num_chunks, scattered=False)
-        return execute_plan(x, plan, axis=axis)
+        return _run_local(ctx, x, plan, axis)
 
     n = math.prod(ctx._sizes(names).values())
     if x.shape[axis] % n:  # before planning: don't cache a plan never run
@@ -703,7 +916,7 @@ def all_reduce(
                     shape=tuple(x.shape), dtype=x.dtype)
     plan = _apply_overrides(plan, mode, num_chunks)
     plan = _fit_plan(plan, x.shape[axis], n)
-    return _wrap(ctx, lambda y: execute_plan(y, plan, axis=axis), x, P(), P())
+    return _run_wrapped(ctx, x, plan, axis, names, P(), P())
 
 
 def all_to_all(
@@ -737,7 +950,7 @@ def all_to_all(
                         shape=tuple(x.shape), dtype=x.dtype)
         plan = _apply_overrides(plan, mode, num_chunks)
         plan = _fit_plan(plan, x.shape[axis], n_total)
-        return execute_plan(x, plan, axis=axis)
+        return _run_local(ctx, x, plan, axis)
 
     n = math.prod(ctx._sizes(names).values())
     shard_bytes = x.size * x.dtype.itemsize / n  # one local exchange buffer
@@ -746,8 +959,7 @@ def all_to_all(
     plan = _apply_overrides(plan, mode, num_chunks)
     plan = _fit_plan(plan, x.shape[axis] // n, n)
     spec = _axis_spec(x.ndim, axis, names)
-    return _wrap(ctx, lambda y: execute_plan(y, plan, axis=axis), x,
-                 spec, spec)
+    return _run_wrapped(ctx, x, plan, axis, names, spec, spec)
 
 
 # --------------------------------------------------------------------------

@@ -22,7 +22,9 @@ to pipeline — see ``core.planner.choose_hop_schedule``.
 from __future__ import annotations
 
 import math
-from typing import List, Optional, Sequence, Tuple
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +43,8 @@ from .staged_collectives import (
 )
 
 __all__ = [
+    "FaultInjection",
+    "fault_injection",
     "ring_all_gather_stage",
     "ring_reduce_scatter_stage",
     "ring_all_to_all_stage",
@@ -57,6 +61,67 @@ __all__ = [
 
 def _ring_perm(m: int) -> List[Tuple[int, int]]:
     return [(i, (i + 1) % m) for i in range(m)]
+
+
+# --------------------------------------------------------------------------
+# fault injection (chaos harness hook)
+# --------------------------------------------------------------------------
+
+@dataclass
+class FaultInjection:
+    """Corrupt a chosen ppermute hop of a ring stage, for chaos tests.
+
+    ``axis`` is the mesh axis whose ring stage to hit, ``hop`` the 1-based
+    hop index within the stage, ``mode`` either ``"drop"`` (the received
+    block arrives zeroed — a lost lightpath) or ``"corrupt"`` (+1 to every
+    element — a payload bit flip).  ``times`` bounds how many matching hop
+    *traces* are corrupted: the executor's bounded retry re-traces the
+    stage per attempt, so ``times=1`` means only the first attempt sees the
+    fault (the retry genuinely recovers) while a large ``times`` keeps
+    every attempt faulty (forcing the one-shot fallback).  ``device``
+    optionally restricts the fault to one position on the ring.
+    """
+
+    axis: str
+    hop: int = 1
+    mode: str = "drop"
+    times: int = 1
+    device: Optional[int] = None
+    applied: int = 0  # mutable: matching hop traces consumed so far
+
+    def __post_init__(self) -> None:
+        if self.mode not in ("drop", "corrupt"):
+            raise ValueError(f"mode must be drop|corrupt, got {self.mode!r}")
+
+
+_INJECTIONS: List[FaultInjection] = []
+
+
+@contextmanager
+def fault_injection(spec: FaultInjection):
+    """Activate ``spec`` for every ring stage traced inside the block."""
+    _INJECTIONS.append(spec)
+    try:
+        yield spec
+    finally:
+        _INJECTIONS.remove(spec)
+
+
+def _maybe_inject(recv: jax.Array, name: str, hop: int) -> jax.Array:
+    """Pass a just-received ppermute block through the active injections."""
+    for spec in _INJECTIONS:
+        if spec.axis != name or spec.hop != hop or spec.applied >= spec.times:
+            continue
+        spec.applied += 1
+        if spec.mode == "drop":
+            bad = jnp.zeros_like(recv)
+        else:
+            bad = recv + jnp.ones_like(recv)
+        if spec.device is None:
+            recv = bad
+        else:
+            recv = jnp.where(lax.axis_index(name) == spec.device, bad, recv)
+    return recv
 
 
 def _store(buf: jax.Array, piece: jax.Array, slot) -> jax.Array:
@@ -82,7 +147,8 @@ def ring_all_gather_stage(x: jax.Array, name: str) -> jax.Array:
     perm = _ring_perm(m)
     pieces = [x]  # arrival order: origin idx, idx-1, ..., idx-(m-1)
     for t in range(1, m):
-        pieces.append(lax.ppermute(pieces[-1], name, perm))
+        pieces.append(_maybe_inject(lax.ppermute(pieces[-1], name, perm),
+                                    name, t))
     # arrival[t] holds origin (idx - t) mod m; flipping gives origin
     # (idx + 1 + j) mod m at slot j, and rolling by idx+1 lands origin j
     # at slot j — the all_gather stacking order
@@ -122,7 +188,7 @@ def ring_reduce_scatter_stage(
     perm = _ring_perm(m)
     acc = block_fn((idx - 1) % m)  # own contribution to the departing block
     for s in range(1, m):
-        recv = lax.ppermute(acc, name, perm)
+        recv = _maybe_inject(lax.ppermute(acc, name, perm), name, s)
         acc = recv + block_fn((idx - s - 1) % m)
     return acc
 
@@ -153,7 +219,7 @@ def ring_all_to_all_stage(y: jax.Array, name: str) -> jax.Array:
             y, (idx + t) % m, axis=0, keepdims=False
         )
         perm = [(i, (i + t) % m) for i in range(m)]
-        pieces.append(lax.ppermute(send, name, perm))
+        pieces.append(_maybe_inject(lax.ppermute(send, name, perm), name, t))
     stacked = jnp.flip(jnp.stack(pieces, axis=0), axis=0)
     return jnp.roll(stacked, idx + 1, axis=0)
 
@@ -187,6 +253,7 @@ def perhop_all_gather(
     stage_order: Optional[Sequence[str]] = None,
     axis: int = 0,
     stage_modes: Optional[Sequence[str]] = None,
+    stage_probe: Optional[Callable] = None,
 ) -> jax.Array:
     """Per-hop staged all-gather inside shard_map: bit-identical to
     ``lax.all_gather(x, tuple(axis_names), axis=axis, tiled=True)``.
@@ -195,6 +262,10 @@ def perhop_all_gather(
     each as a double-buffered ppermute ring (or the blocking XLA collective
     where ``stage_modes`` says ``"oneshot"``); the stacked stage axes are
     collapsed to canonical device order by one local transpose at the end.
+
+    ``stage_probe(before, after, name)`` is called once per stage with the
+    stage's traced input/output — the hook the verified executor uses for
+    per-stage conservation checksums.
     """
     axis_names = tuple(axis_names)
     order = (
@@ -208,10 +279,13 @@ def perhop_all_gather(
         axis += x.ndim
     y = x
     for name, mode in zip(order, modes):
+        before = y
         if mode == "ring":
             y = ring_all_gather_stage(y, name)
         else:
             y = lax.all_gather(y, name, axis=0, tiled=False)
+        if stage_probe is not None:
+            stage_probe(before, y, name)
     y = _ag_finalize(y, axis_names, order)  # (N, *x.shape)
     return _merge_device_axis(y, axis)
 
@@ -223,6 +297,7 @@ def perhop_reduce_scatter(
     stage_order: Optional[Sequence[str]] = None,
     axis: int = 0,
     stage_modes: Optional[Sequence[str]] = None,
+    stage_probe: Optional[Callable] = None,
 ) -> jax.Array:
     """Per-hop staged reduce-scatter: equals ``lax.psum_scatter(x,
     tuple(axis_names), scatter_dimension=axis, tiled=True)`` (bit-identical
@@ -252,10 +327,13 @@ def perhop_reduce_scatter(
     if order != axis_names:
         y = _permute_blocks_to_order(y, axis_names, order, sizes)
     for name, mode in zip(order, modes):
+        before = y
         if mode == "ring":
             y = ring_reduce_scatter_stage(y, name)
         else:
             y = lax.psum_scatter(y, name, scatter_dimension=0, tiled=True)
+        if stage_probe is not None:
+            stage_probe(before, y, name)
     return jnp.moveaxis(y, 0, axis) if axis != 0 else y
 
 
@@ -276,6 +354,7 @@ def perhop_all_to_all(
     stage_order: Optional[Sequence[str]] = None,
     axis: int = 0,
     stage_modes: Optional[Sequence[str]] = None,
+    stage_probe: Optional[Callable] = None,
 ) -> jax.Array:
     """Per-hop staged all-to-all inside shard_map: bit-identical to
     ``lax.all_to_all(x, tuple(axis_names), split_axis=axis,
@@ -302,7 +381,10 @@ def perhop_all_to_all(
     y = jnp.moveaxis(x, axis, 0) if axis != 0 else x
     shaped = _a2a_split_digits(y, axis_names, sizes)
     for name, mode in zip(order, modes):
+        before = shaped
         shaped = _a2a_stage_dispatch(shaped, name, axis_names.index(name), mode)
+        if stage_probe is not None:
+            stage_probe(before, shaped, name)
     out = _a2a_merge_digits(shaped, k)
     return jnp.moveaxis(out, 0, axis) if axis != 0 else out
 

@@ -27,7 +27,17 @@ from .schedule import (  # noqa: F401
     build_ring_schedule,
     schedule_from_ir,
 )
-from .validate import validate_schedule  # noqa: F401
+from .validate import validate_health, validate_schedule  # noqa: F401
+from .health import (  # noqa: F401
+    DeadAxisError,
+    DeadDirectionError,
+    FaultEvent,
+    FaultTrace,
+    HealthError,
+    LinkHealth,
+    health_fingerprint,
+    load_health,
+)
 from .cost_model import (  # noqa: F401
     TERARACK,
     OpticalSystem,

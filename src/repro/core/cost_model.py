@@ -10,6 +10,7 @@ O/E/O at the 40 Gbps line rate) for the detailed simulator.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, replace
 
@@ -108,13 +109,22 @@ class PriceReport:
     num_chunks: int = 1
 
 
-def _price_linkspec(plan) -> PriceReport:
+def _price_linkspec(plan, health=None) -> PriceReport:
     from .planner import perhop_stage_time, pipeline_makespan  # lazy: planner imports us
 
     for s in plan.stages:
         if s.link is None:
             raise ValueError(
                 f"stage {s} has no LinkSpec; the electrical backend needs one")
+
+    if health is not None and not health.is_healthy:
+        # derate each stage's link by its axis's best alive direction; a
+        # fully dead axis raises DeadAxisError (no staged plan crosses it)
+        plan = dataclasses.replace(
+            plan,
+            stages=tuple(
+                dataclasses.replace(s, link=health.degrade_link(s.axis, s.link))
+                for s in plan.stages))
 
     def barrier(s, payload):
         return (s.factor - 1) * (s.link.alpha_s + payload / s.link.bandwidth_bytes)
@@ -144,11 +154,12 @@ def _price_linkspec(plan) -> PriceReport:
                        num_chunks=plan.num_chunks)
 
 
-def _price_optical(plan, sys: "OpticalSystem", *, detailed: bool = False) -> PriceReport:
+def _price_optical(plan, sys: "OpticalSystem", *, detailed: bool = False,
+                   health=None) -> PriceReport:
     from .plan_ir import optical_message_bytes  # lazy: avoid a cycle
     from .schedule import schedule_from_ir  # lazy: avoid a cycle
 
-    sched = schedule_from_ir(plan, sys.wavelengths)
+    sched = schedule_from_ir(plan, sys.wavelengths, health=health)
     # one step moves ONE schedule item: the whole shard for gather traffic,
     # a 1/n (origin, destination) block for exchange (a2a) traffic
     per_step = step_time(sys, optical_message_bytes(plan), detailed=detailed)
@@ -176,7 +187,8 @@ def plan_exposure(plan) -> tuple:
     return tuple(exposed), tuple(hidden)
 
 
-def price(plan, model=None, *, detailed: bool = False) -> PriceReport:
+def price(plan, model=None, *, detailed: bool = False,
+          health=None) -> PriceReport:
     """Price one :class:`~repro.core.plan_ir.CollectivePlan` under a model.
 
     * ``model=None`` (or ``"electrical"``/``"linkspec"``) — the TPU-mesh
@@ -191,11 +203,19 @@ def price(plan, model=None, *, detailed: bool = False) -> PriceReport:
       ``schedule_from_ir`` — byte-identical to what
       ``optics.simulator.simulate`` reports for the same plan (chunking is
       an executor concept and does not change the optical step structure).
+
+    ``health`` prices the DEGRADED world: the electrical backend scales
+    each stage link's bandwidth by the axis's best alive direction (a dead
+    axis raises :class:`~repro.core.health.DeadAxisError`), and the optical
+    backend lowers with the lost-wavelength union removed from ``w``, so
+    its price stays byte-identical to
+    ``simulate(schedule_from_ir(plan, w, health=h), ..., health=h)``.
+    Degraded prices are monotone: never below the healthy price.
     """
     if model is None or model in ("electrical", "linkspec"):
-        return _price_linkspec(plan)
+        return _price_linkspec(plan, health=health)
     if isinstance(model, OpticalSystem):
-        return _price_optical(plan, model, detailed=detailed)
+        return _price_optical(plan, model, detailed=detailed, health=health)
     raise TypeError(f"model must be None, 'electrical' or OpticalSystem, "
                     f"got {model!r}")
 

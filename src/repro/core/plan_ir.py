@@ -295,6 +295,13 @@ class CollectivePlan:
     def stage_modes(self) -> Tuple[str, ...]:
         return tuple(s.mode for s in self.stages)
 
+    @property
+    def is_fallback(self) -> bool:
+        """True when planning degraded this collective to the forced
+        one-shot plan (``meta["fallback"]`` holds the reason — e.g. an axis
+        dead in both ring directions makes every staged order unroutable)."""
+        return bool(self.meta.get("fallback"))
+
     def with_mode(self, mode: str) -> "CollectivePlan":
         """Same plan, different plan-level execution mode (the per-stage hop
         structure is preserved; it takes effect under ``perhop``/``hybrid``).

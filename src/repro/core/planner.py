@@ -577,9 +577,19 @@ def choose_hop_schedule(
     max_chunks: int = 8,
     collective: str = "ag",
     packet_bytes: int = TERARACK.packet_bytes,
+    health=None,
+    axis_names: Optional[Sequence[Optional[str]]] = None,
 ) -> HopSchedule:
     """Pick one-shot vs chunked-wavefront vs per-hop vs hybrid execution
     for a staged collective, all from the same ``LinkSpec``s.
+
+    ``health`` (with ``axis_names`` naming each stage's mesh axis) plans
+    under the DEGRADED world: every stage link's bandwidth is scaled by its
+    axis's best alive direction before any mode decision, so the chosen
+    mode/chunking is the one that wins on the hardware as it actually is.
+    An axis dead in both directions raises
+    :class:`~repro.core.health.DeadAxisError` — callers fall back to the
+    one-shot XLA collective.
 
     ``factors``/``links`` are the planned *stage order* (``plan_axis_order``
     / ``plan_reduce_scatter_order`` output); ``shard_bytes`` is the
@@ -590,6 +600,13 @@ def choose_hop_schedule(
     chunk scan, so it degenerates exactly to perhop at C=1 and to chunked
     when no stage runs as a ring — ties resolve to the simpler mode.
     """
+    if health is not None and not health.is_healthy:
+        names = (tuple(axis_names) if axis_names is not None
+                 else (None,) * len(links))
+        if len(names) != len(links):
+            raise ValueError(
+                f"axis_names length {len(names)} != links length {len(links)}")
+        links = [health.degrade_link(nm, l) for nm, l in zip(names, links)]
     stages = _stage_chain(factors, links, shard_bytes, collective)
 
     oneshot = sum(s.time_s for s in stages)
@@ -712,6 +729,9 @@ class OrderSearch:
     backend: str
     candidates: Tuple[OrderCandidate, ...]
     capped: bool = False  # True when max_candidates truncated the space
+    # AG orders excluded because their lowered schedule would cross a ring
+    # direction the health table marks dead (empty when searched healthy)
+    pruned: Tuple[Tuple, ...] = ()
 
     @property
     def best(self) -> OrderCandidate:
@@ -769,6 +789,7 @@ def search_stage_orders(
     max_candidates: int = 24,
     max_k: Optional[int] = None,
     packet_bytes: int = TERARACK.packet_bytes,
+    health=None,
 ) -> OrderSearch:
     """Cross-world stage-order search: enumerate candidate stage
     factorizations/permutations, price each full CollectivePlan through
@@ -791,8 +812,18 @@ def search_stage_orders(
     ``max_candidates`` caps the enumeration (``OrderSearch.capped`` reports
     truncation); ranking ties break on the order tuple, so results are
     deterministic.
+
+    ``health`` searches the DEGRADED world: axis links are derated by their
+    best alive direction before enumeration (a fully dead axis raises
+    :class:`~repro.core.health.DeadAxisError`), the optical backend prices
+    with the lost-wavelength union removed from ``w``, and any candidate
+    whose RWA-lowered schedule crosses a dead ring direction is pruned
+    (``OrderSearch.pruned`` lists the excluded orders).  If every candidate
+    is pruned, :class:`~repro.core.health.DeadDirectionError` is raised —
+    callers fall back to the one-shot collective.
     """
     from .cost_model import OpticalSystem, price  # lazy: cost_model imports us
+    from .schedule import schedule_from_ir  # lazy: avoid a cycle
 
     if backend not in ("electrical", "optical"):
         raise ValueError(
@@ -800,7 +831,11 @@ def search_stage_orders(
     norm: List[Tuple[Optional[str], int, LinkSpec]] = []
     for a in axes:
         name, size, link = a
+        if health is not None and not health.is_healthy:
+            link = health.degrade_link(name, link)
         norm.append((name, int(size), link))
+    dead_dirs = (health.dead_directions([a[0] for a in norm])
+                 if health is not None else frozenset())
     chains = _candidate_factorizations(norm, max_k)
     capped = len(chains) > max_candidates
     chains = chains[:max_candidates]
@@ -810,6 +845,7 @@ def search_stage_orders(
         raise TypeError(f"system must be an OpticalSystem, got {sys!r}")
 
     cands: List[OrderCandidate] = []
+    pruned: List[Tuple] = []
     for chain in chains:
         ag_names = tuple(a[0] for a in chain)
         kind = collective_kind(collective)
@@ -830,7 +866,12 @@ def search_stage_orders(
         )
         names = plan_names if all(n is not None for n in ag_names) else None
         plan = sched.to_ir(names)
-        opt = price(plan, sys)
+        if dead_dirs:
+            lowered = schedule_from_ir(plan, sys.wavelengths, health=health)
+            if any(tx.direction in dead_dirs for tx in lowered.txs):
+                pruned.append(ag_names)
+                continue
+        opt = price(plan, sys, health=health)
         cands.append(OrderCandidate(
             order=ag_names,
             plan=plan,
@@ -838,9 +879,17 @@ def search_stage_orders(
             optical_s=opt.total_s,
             optical_steps=opt.steps,
         ))
+    if not cands:
+        from .health import DeadDirectionError  # lazy: avoid a cycle
+        raise DeadDirectionError(
+            f"every {collective} stage-order candidate crosses a dead ring "
+            f"direction {sorted(dead_dirs)} "
+            f"(pruned {len(pruned)} orders: {pruned[:4]}...); fall back to "
+            "the one-shot collective")
     cands.sort(key=_order_rank_key(backend))
     return OrderSearch(collective=collective, backend=backend,
-                       candidates=tuple(cands), capped=capped)
+                       candidates=tuple(cands), capped=capped,
+                       pruned=tuple(pruned))
 
 
 # --------------------------------------------------------------------------

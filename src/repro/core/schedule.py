@@ -21,6 +21,7 @@ in tests.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
@@ -338,9 +339,19 @@ def _lower_gather_chain(
     return offset
 
 
-def schedule_from_ir(plan, w: int) -> Schedule:
+def schedule_from_ir(plan, w: int, *, health=None) -> Schedule:
     """Lower a :class:`~repro.core.plan_ir.CollectivePlan` to a Tx-level
     :class:`Schedule` the optical simulator can execute and conflict-check.
+
+    ``health`` (a :class:`~repro.core.health.LinkHealth`) restricts the RWA
+    to the *healthy* wavelengths: the lost set is the union of the plan
+    axes' lost-wavelength masks (the WDM ring is a shared medium), the
+    coloring runs with the shrunken effective ``w``, and the color slots are
+    then remapped onto the surviving wavelength indices — an injective
+    remap, so conflict-freedom is preserved and no transmission ever lands
+    on a failed wavelength.  ``num_steps`` grows accordingly, which is
+    exactly how lost wavelengths surface in the Eq.-3 price
+    (``price(plan, system, health=...)`` uses this same lowering).
 
     * ``ag`` — lowered directly: the plan's execution-order stages become
       OpTree stages (oneshot = all-to-all broadcast round, perhop = m-1 ring
@@ -377,14 +388,25 @@ def schedule_from_ir(plan, w: int) -> Schedule:
     """
     from .plan_ir import collective_kind, effective_stage_mode  # local import: avoid a cycle
 
+    lost: frozenset = frozenset()
+    if health is not None:
+        lost = frozenset(wl for wl in health.lost_for(plan.axes) if wl < w)
+    healthy_slots = [wl for wl in range(w) if wl not in lost]
+    if not healthy_slots:
+        from .health import HealthError  # local import: avoid a cycle
+        raise HealthError(
+            f"all {w} wavelengths lost for axes {plan.axes}: "
+            "no healthy wavelength to schedule on")
+    w_eff = len(healthy_slots)
     kind = collective_kind(plan.collective)
     sched = Schedule(
-        n=plan.n, w=w,
+        n=plan.n, w=w_eff,
         meta={"algorithm": f"ir-{plan.collective}",
               "factors": plan.factors,
               "modes": plan.stage_modes,
               "mode": plan.mode,
               "semantics": kind.traffic,
+              "axes": plan.axes,
               "source": plan.meta.get("source")},
     )
     # factor-1 stages are lowered too (zero transfers, zero steps) so
@@ -406,11 +428,22 @@ def schedule_from_ir(plan, w: int) -> Schedule:
             sched,
             [s.factor for s in stages],
             [effective_stage_mode(plan, s) for s in stages],
-            w, offset,
+            w_eff, offset,
             collective=plan.collective,
         )
         if flip:  # attribution back to execution order
             sched.stage_steps[mark:] = sched.stage_steps[mark:][::-1]
+    if lost:
+        # remap color slots 0..w_eff-1 onto the surviving wavelength
+        # indices (injective, so the conflict structure is untouched) and
+        # restore the physical ring width for range checks / telemetry
+        sched.txs[:] = [
+            dataclasses.replace(tx, wavelength=healthy_slots[tx.wavelength])
+            for tx in sched.txs
+        ]
+        sched.w = w
+        sched.meta["lost_wavelengths"] = tuple(sorted(lost))
+        sched.meta["w_effective"] = w_eff
     return sched
 
 

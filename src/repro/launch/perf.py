@@ -510,6 +510,73 @@ def moe_block_bench(factors_csv: str, reps: int = 5, links_path=None,
     return rows
 
 
+def faults_bench(factors_csv: str, sizes_kb_csv: str, optical_w=None) -> list:
+    """Modeled healthy-vs-degraded collective cost under a canonical fault
+    set (``--faults``): both ring directions of the major axis derated to
+    half bandwidth plus two lost wavelengths on the minor axis.  For every
+    collective and size the SAME CollectivePlan is priced under both cost
+    worlds twice — healthy, then with the ``LinkHealth`` table threaded
+    through ``price`` (derated LinkSpecs electrically, the lost-wavelength
+    union shrinking the RWA coloring optically) — and a second context
+    planning UNDER the faults shows what the self-healing re-plan would
+    choose.  Degraded prices are asserted monotone (never below healthy).
+    """
+    import dataclasses as dc
+
+    from repro.comms.api import CommContext
+    from repro.core.cost_model import TERARACK, price
+    from repro.core.health import LinkHealth
+
+    factors, names, n, mesh, link_map, ctx = _bench_setup(
+        factors_csv, optical_w=optical_w)
+    sys = dc.replace(
+        TERARACK, n_nodes=n,
+        wavelengths=optical_w if optical_w else TERARACK.wavelengths)
+    health = LinkHealth.make(
+        # both directions: axis_factor is the best ALIVE direction, so a
+        # single-direction derate is invisible to the electrical model
+        derate={(names[0], 0): 0.5, (names[0], 1): 0.5},
+        lost_wavelengths={names[-1]: (1, 3)},
+    )
+    faulted = CommContext(mesh, tuple(names), links=link_map, health=health)
+    print(f"[perf/faults] mesh={factors} health: {health.describe()} "
+          f"(fp={faulted.health_fp})")
+
+    rows = []
+    for kb in (int(s) for s in sizes_kb_csv.split(",")):
+        rows_n = kb * 256 // n * n  # f32 rows, divisible by the device count
+        shard_bytes = rows_n * 4 / n
+        for coll in ("ag", "rs", "ar", "a2a"):
+            plan = ctx.plan(coll, shard_bytes)
+            e_h = price(plan).total_s
+            e_d = price(plan, health=health).total_s
+            o_h = price(plan, sys)
+            o_d = price(plan, sys, health=health)
+            if e_d < e_h or o_d.total_s < o_h.total_s:
+                raise SystemExit(
+                    f"--faults: degraded price below healthy for {coll} "
+                    f"{kb}KB (elec {e_d} < {e_h} or opt {o_d.total_s} < "
+                    f"{o_h.total_s})")
+            replanned = faulted.plan(coll, shard_bytes)
+            row = dict(collective=coll, kb=kb, elec_healthy_us=e_h * 1e6,
+                       elec_degraded_us=e_d * 1e6,
+                       opt_healthy_us=o_h.total_s * 1e6,
+                       opt_degraded_us=o_d.total_s * 1e6,
+                       replanned_mode=replanned.mode)
+            rows.append(row)
+            print(f"[perf/faults] {coll} {kb}KB "
+                  f"elec={e_h*1e6:.1f}->{e_d*1e6:.1f}us "
+                  f"(x{e_d/e_h:.2f}) "
+                  f"optical={o_h.total_s*1e6:.1f}us@{o_h.steps}"
+                  f"->{o_d.total_s*1e6:.1f}us@{o_d.steps} steps "
+                  f"replanned mode={replanned.mode} "
+                  f"chunks={replanned.num_chunks}")
+    st = faulted.cache_stats
+    print(f"[perf/faults] faulted-context cache: misses={st.misses} "
+          f"fallbacks={st.fallbacks}")
+    return rows
+
+
 def calibrate_links(factors_csv: str, sizes_kb_csv: str, reps: int = 10,
                     links_path=None) -> None:
     """Fit per-axis LinkSpec alpha/bandwidth from measured wall-clock.
@@ -607,6 +674,12 @@ def main():
     ap.add_argument("--moe-archs", default="llama4-scout-17b-a16e,arctic-480b",
                     help="comma-set of MoE arch names for --moe "
                          "(reduced configs)")
+    ap.add_argument("--faults", default=None, metavar="F1,F2",
+                    help="report modeled healthy-vs-degraded cost per "
+                         "collective on this mesh factorization under a "
+                         "canonical link/wavelength fault set (derated CW "
+                         "direction + lost wavelengths), plus the mode a "
+                         "context planning under the faults would pick")
     ap.add_argument("--calibrate", action="store_true",
                     help="with --collectives: fit LinkSpec alpha/bandwidth "
                          "per mesh axis from measured wall-clock (printed "
@@ -643,6 +716,9 @@ def main():
     if args.moe:
         moe_block_bench(args.moe, reps=args.reps, links_path=args.links,
                         archs=args.moe_archs)
+        return
+    if args.faults:
+        faults_bench(args.faults, args.sizes_kb, optical_w=args.optical_w)
         return
     if args.collectives:
         if args.calibrate:

@@ -68,6 +68,9 @@ def main():
             "(sharded_decode_attention)")
     print(f"[serve/comms] plan cache: {n_plans} plans, "
           f"{ctx.cache_stats}{note}")
+    print(f"[serve/comms] health={ctx.health_fp} "
+          f"replans_on_fault={ctx.cache_stats.replans_on_fault} "
+          f"fallbacks={ctx.cache_stats.fallbacks}")
 
 
 if __name__ == "__main__":

@@ -47,7 +47,9 @@ def comm_plan_telemetry(ctx) -> list:
     (auto-calibration) is visible as invalidations + re-planned orders."""
     st = ctx.cache_stats
     lines = [f"comm plans={len(ctx.plans())} hits={st.hits} "
-             f"misses={st.misses} invalidated={st.invalidated}"]
+             f"misses={st.misses} invalidated={st.invalidated} "
+             f"replans_on_fault={st.replans_on_fault} "
+             f"fallbacks={st.fallbacks} health={ctx.health_fp}"]
     for plan, issued in ctx.plan_usage():
         order = ",".join(str(a) for a in plan.axes)
         line = (f"  {plan.collective} shard={plan.shard_bytes / 2**10:.1f}KiB "
@@ -57,6 +59,8 @@ def comm_plan_telemetry(ctx) -> list:
         if srch:
             line += (f" picked_by={srch['backend']}"
                      f" flipped={srch['flipped']}")
+        if plan.meta.get("fallback"):
+            line += " degraded=oneshot-fallback"
         lines.append(line)
     return lines
 
@@ -92,6 +96,23 @@ def main():
                     help="smoke-scale config (CPU)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
     ap.add_argument("--ckpt-interval", type=int, default=50)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore params/opt from the latest committed "
+                         "checkpoint in --ckpt-dir and continue from the "
+                         "following step (no-op when the dir is empty)")
+    ap.add_argument("--fault-step", type=int, default=None,
+                    help="chaos hook: at this step, report a link fault to "
+                         "the comm context (needs --zero1 explicit); the "
+                         "context re-plans its cached collectives in place "
+                         "under the degraded world")
+    ap.add_argument("--fault-axis", default="data",
+                    help="mesh axis the injected fault degrades")
+    ap.add_argument("--fault-derate", type=float, default=0.5,
+                    help="surviving bandwidth fraction for --fault-step")
+    ap.add_argument("--verify-collectives", action="store_true",
+                    help="run explicit collectives through the verified "
+                         "executor (per-stage checksums + bounded retry + "
+                         "one-shot fallback; needs --zero1 explicit)")
     ap.add_argument("--log-every", type=int, default=10,
                     help="step-log interval; with --zero1 explicit each log "
                          "also prints the comm context's per-plan telemetry "
@@ -149,11 +170,12 @@ def main():
         opt_state_specs(pspecs, params, mesh), opt_state, mesh
     )
     if explicit:
-        params = jax.device_put(params, NamedSharding(mesh, P()))
-        opt_state = jax.device_put(opt_state, NamedSharding(mesh, P()))
+        p_shard = o_shard = NamedSharding(mesh, P())
     else:
-        params = jax.device_put(params, shd.named(mesh, pspecs))
-        opt_state = jax.device_put(opt_state, shd.named(mesh, ospecs))
+        p_shard = shd.named(mesh, pspecs)
+        o_shard = shd.named(mesh, ospecs)
+    params = jax.device_put(params, p_shard)
+    opt_state = jax.device_put(opt_state, o_shard)
 
     opt_cfg = OptimizerConfig(warmup_steps=min(20, args.steps // 5 + 1),
                               decay_steps=args.steps)
@@ -174,8 +196,10 @@ def main():
         ndp = int(np.prod([mesh.shape[a] for a in fast + slow]))
         # one context scopes every explicit collective (zero1_shard_grads /
         # zero1_unshard_params resolve it at trace time): plans are cached
-        # here, and a fitted --links file would re-plan them in place
-        ctx = comm_scope.enter_context(comm_context(mesh, fast))
+        # here, and a fitted --links file or a reported fault re-plans them
+        # in place
+        pol_kw = {"verify": True} if args.verify_collectives else {}
+        ctx = comm_scope.enter_context(comm_context(mesh, fast, **pol_kw))
 
         def explicit_step(params, opt_state, batch):
             # local grads on the local batch shard; the global mean-loss
@@ -209,14 +233,43 @@ def main():
             new_p, new_o = adamw_update(grads, opt_state, params, opt_cfg)
             return new_p, new_o, metrics["loss"]
 
+    if args.fault_step is not None and not explicit:
+        raise SystemExit("--fault-step reports into the comm context; it "
+                         "needs --zero1 explicit")
+
     pipe = SyntheticLMPipeline(DataConfig(
         vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch)).start()
     ckpt = Checkpointer(args.ckpt_dir)
 
+    start_step = 0
+    if args.resume:
+        latest = ckpt.latest_step()
+        if latest is None:
+            print(f"[train/resume] no committed checkpoint in "
+                  f"{args.ckpt_dir}; starting fresh")
+        else:
+            _, state = ckpt.restore({"params": params, "opt": opt_state})
+            params = jax.device_put(state["params"], p_shard)
+            opt_state = jax.device_put(state["opt"], o_shard)
+            start_step = latest + 1
+            print(f"[train/resume] resumed from step {latest} "
+                  f"(next step {start_step})")
+
     t0 = time.time()
     loss0 = None
+    loss = jnp.nan
     with comm_scope, mesh:
-        for step in range(args.steps):
+        for step in range(start_step, args.steps):
+            if (ctx is not None and args.fault_step is not None
+                    and step == args.fault_step):
+                ctx.report_fault(axis=args.fault_axis,
+                                 derate=args.fault_derate)
+                st = ctx.cache_stats
+                print(f"[train/fault] step {step}: derate "
+                      f"{args.fault_derate} on axis {args.fault_axis!r} -> "
+                      f"health={ctx.health_fp} "
+                      f"replans_on_fault={st.replans_on_fault} "
+                      f"fallbacks={st.fallbacks}")
             raw = next(pipe)
             batch_dev = {k: jax.device_put(jnp.asarray(v), bspec)
                          for k, v in raw.items()}
@@ -226,7 +279,8 @@ def main():
                 loss0 = lv if loss0 is None else loss0
                 extra = f" [{traffic_note}]" if traffic_note else ""
                 print(f"step {step:5d} loss {lv:.4f} "
-                      f"({(time.time()-t0)/(step+1):.2f}s/step){extra}")
+                      f"({(time.time()-t0)/(step-start_step+1):.2f}s/step)"
+                      f"{extra}")
                 if ctx is not None:
                     for line in comm_plan_telemetry(ctx):
                         print(f"[train/comms] {line}")
@@ -239,8 +293,12 @@ def main():
         print("[train/zero1-explicit] final comm telemetry:")
         for line in comm_plan_telemetry(ctx):
             print(f"[train/comms] {line}")
-    print(f"done: {args.steps} steps in {time.time()-t0:.1f}s; "
-          f"loss {loss0:.4f} -> {float(loss):.4f}")
+    if loss0 is None:  # resumed at/past --steps: nothing left to run
+        print(f"done: no steps to run (resumed at {start_step} "
+              f"of {args.steps})")
+    else:
+        print(f"done: {args.steps} steps in {time.time()-t0:.1f}s; "
+              f"loss {loss0:.4f} -> {float(loss):.4f}")
 
 
 if __name__ == "__main__":

@@ -47,6 +47,7 @@ def simulate(
     *,
     detailed: bool = False,
     check: bool = True,
+    health=None,
 ) -> SimReport:
     """Execute ``sched`` step by step.  ``message_bytes`` is the size of ONE
     schedule item (``plan_ir.optical_message_bytes`` for IR-lowered plans:
@@ -57,7 +58,20 @@ def simulate(
     with all n items; ``"exchange"`` (a2a) uses the n² (origin,
     destination) item space ``u·n + v`` — node u starts holding
     ``{u·n + v : v}`` and node v must end holding ``{u·n + v : u}``.
+
+    ``health`` (a :class:`~repro.core.health.LinkHealth`) makes the run
+    fault-aware: a transmission on a lost wavelength or a dead ring
+    direction fails the simulation — the physical channel does not exist.
+    ``schedule_from_ir(..., health=...)`` schedules around faults, so a
+    consistent plan→schedule→simulate pipeline passes this check by
+    construction (price==simulate under faults).
     """
+    lost: Set[int] = set()
+    dead_dirs: Set[int] = set()
+    if health is not None and not health.is_healthy:
+        axes = sched.meta.get("axes")
+        lost = set(health.lost_for(axes))
+        dead_dirs = set(health.dead_directions(axes))
     exchange = sched.meta.get("semantics") == "exchange"
     if exchange:
         holdings: List[Set[int]] = [
@@ -72,6 +86,18 @@ def simulate(
         load: Dict[Tuple[int, int], int] = defaultdict(int)
         arrivals: Dict[int, Set[int]] = defaultdict(set)
         for tx in step_txs:
+            if tx.wavelength in lost:
+                raise AssertionError(
+                    f"simulator: transmission on LOST wavelength "
+                    f"{tx.wavelength} at step {tx.step} "
+                    f"({tx.src}->{tx.dst}, links {list(tx.links)}); "
+                    f"health: {health.describe()}")
+            if tx.direction in dead_dirs:
+                raise AssertionError(
+                    f"simulator: transmission on DEAD ring direction "
+                    f"{tx.direction} at step {tx.step} "
+                    f"({tx.src}->{tx.dst}, wl={tx.wavelength}); "
+                    f"health: {health.describe()}")
             if check:
                 if tx.item not in holdings[tx.src]:
                     raise AssertionError(

@@ -1,0 +1,205 @@
+"""8-device chaos harness for the fault layer (ISSUE 7) — run in a
+subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
+(tests/test_fault_tolerance.py drives it).
+
+Contracts:
+  * the verified executor DETECTS every injected ppermute fault via its
+    conservation checksums: a one-attempt drop is caught on attempt 0 and
+    the bounded retry recovers bit-identically; a persistent corruption
+    fails every attempt and degrades to the bit-identical XLA one-shot
+    collective (``used_fallback`` raised, data never corrupted);
+  * the api ops under ``PlanPolicy(verify=True)`` count executor fallbacks
+    in ``CacheStats.fallbacks`` and still return bit-identical results;
+  * ``ctx.report_fault`` folds a fault event into the health table,
+    re-plans every cached entry in place under the degraded world
+    (``CacheStats.replans_on_fault``), and subsequent ops keep producing
+    bit-identical outputs;
+  * an axis dead in BOTH ring directions makes staged planning impossible:
+    the context degrades to a forced one-shot plan (``meta["fallback"]``,
+    ``CacheStats.fallbacks``) that still executes bit-identically;
+  * a seeded ``FaultTrace`` replayed over a multi-step loop leaves every
+    step's collective outputs bit-identical to the healthy run while the
+    cache re-plans under each new health state.
+"""
+import os
+
+assert "xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", ""), (
+    "run me via tests/test_fault_tolerance.py"
+)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.comms import make_factorized_mesh
+from repro.comms.api import (
+    CommContext,
+    PlanPolicy,
+    all_gather,
+    all_reduce,
+    comm_context,
+)
+from repro.comms.plan_executor import execute_plan_verified
+from repro.comms.ring_executor import FaultInjection, fault_injection
+from repro.core import FaultTrace, LinkHealth
+from repro.core.health import CCW, CW
+
+checks = []
+
+
+def check(name, got, want, exact=True):
+    got = np.asarray(got)
+    want = np.asarray(want)
+    ok = got.shape == want.shape and (
+        np.array_equal(got, want) if exact else np.allclose(got, want)
+    )
+    checks.append((name, ok))
+    if not ok:
+        print(f"FAIL {name}: shapes {got.shape} vs {want.shape}")
+        print(" got ", got.ravel()[:8])
+        print(" want", want.ravel()[:8])
+
+
+def expect(name, cond):
+    checks.append((name, bool(cond)))
+    if not cond:
+        print(f"FAIL {name}")
+
+
+mesh = make_factorized_mesh([2, 4], ["a", "b"])
+names = ("a", "b")
+x = jnp.arange(64, dtype=jnp.float32)
+xs = jax.device_put(x, NamedSharding(mesh, P(names)))
+
+# ---- 1. verified executor detects injected faults -------------------------
+# per-hop plan so the ring stages trace through the injection sites
+base_ctx = CommContext(mesh, names)
+plan_ag = base_ctx.plan("ag", x.size * x.dtype.itemsize / 8,
+                        shape=tuple(x.shape), dtype=x.dtype).with_mode("perhop")
+
+
+def run_verified(plan, retries=1):
+    def fn(y):
+        out, diag = execute_plan_verified(y, plan, retries=retries)
+        fell = lax.psum(diag["used_fallback"].astype(jnp.int32), names)
+        bad0 = lax.psum((~diag["attempt_ok"][0]).astype(jnp.int32), names)
+        return out, fell, bad0
+
+    return shard_map(fn, mesh=mesh, in_specs=P(names),
+                     out_specs=(P(), P(), P()))(xs)
+
+
+out, fell, bad0 = run_verified(plan_ag)
+check("verified ag healthy", out, x)
+expect("healthy: no fallback", int(fell) == 0)
+expect("healthy: attempt 0 clean", int(bad0) == 0)
+
+# one-attempt drop (a lost lightpath): attempt 0 must FAIL its checksums on
+# every device (the zeroed block is missing mass), the retry recovers
+with fault_injection(FaultInjection(axis="b", hop=1, mode="drop", times=1)) as spec:
+    out, fell, bad0 = run_verified(plan_ag)
+check("drop x1: recovered bits", out, x)
+expect("drop x1: detected on all devices", int(bad0) == 8)
+expect("drop x1: retry recovered (no fallback)", int(fell) == 0)
+expect("drop x1: injection consumed once", spec.applied == 1)
+
+# persistent corruption (+1 payload bit flips on every attempt): every
+# attempt fails, the executor degrades to the XLA one-shot — bit-identical
+with fault_injection(FaultInjection(axis="b", hop=2, mode="corrupt",
+                                    times=999)) as spec:
+    out, fell, bad0 = run_verified(plan_ag)
+check("corrupt forever: fallback bits", out, x)
+expect("corrupt forever: detected", int(bad0) == 8)
+expect("corrupt forever: used fallback on all devices", int(fell) == 8)
+expect("corrupt forever: both attempts injected", spec.applied == 2)
+
+# ---- 2. api ops under PlanPolicy(verify=True) count fallbacks -------------
+ctx_v = CommContext(mesh, names,
+                    policy=PlanPolicy(verify=True, verify_retries=1))
+with fault_injection(FaultInjection(axis="b", hop=1, mode="drop", times=1)):
+    got = all_gather(xs, ctx=ctx_v, mode="perhop")
+check("api verify: drop x1 bits", got, x)
+expect("api verify: retry not counted as fallback",
+       ctx_v.cache_stats.fallbacks == 0)
+with fault_injection(FaultInjection(axis="b", hop=1, mode="corrupt",
+                                    times=999)):
+    got = all_gather(xs, ctx=ctx_v, mode="perhop")
+check("api verify: corrupt-forever bits", got, x)
+expect("api verify: executor fallback counted",
+       ctx_v.cache_stats.fallbacks == 1)
+
+# ---- 3. report_fault -> self-healing cache --------------------------------
+with comm_context(mesh, names) as ctx:
+    want_ag = all_gather(xs, ctx=ctx)
+    want_ar = all_reduce(x, axis=0, ctx=ctx)
+    n_plans = len(ctx.plans())
+    expect("cache primed", n_plans >= 2)
+    fp0 = ctx.health_fp
+    ctx.report_fault(axis="a", derate=0.5)
+    expect("fault changed the health fingerprint", ctx.health_fp != fp0)
+    expect("every cached plan re-planned in place",
+           ctx.cache_stats.replans_on_fault == n_plans)
+    misses0 = ctx.cache_stats.misses
+    check("degraded ag bits", all_gather(xs, ctx=ctx), want_ag)
+    check("degraded ar bits", all_reduce(x, axis=0, ctx=ctx), want_ar)
+    expect("degraded ops hit the re-planned cache",
+           ctx.cache_stats.misses == misses0)
+    expect("degraded plans stamped with the health fp",
+           all(pl.meta.get("health_fp") == ctx.health_fp
+               for pl in ctx.plans()))
+
+# ---- 4. dead axis -> forced one-shot planning fallback --------------------
+dead = LinkHealth.make(dead=[("a", CW), ("a", CCW)])
+ctx_d = CommContext(mesh, names, health=dead)
+got = all_gather(xs, ctx=ctx_d)
+check("dead-axis fallback bits", got, x)
+plans_d = ctx_d.plans()
+expect("dead axis planned as one-shot fallback",
+       len(plans_d) == 1 and plans_d[0].is_fallback
+       and plans_d[0].mode == "oneshot")
+expect("dead axis counted in CacheStats.fallbacks",
+       ctx_d.cache_stats.fallbacks == 1)
+
+# ---- 5. seeded FaultTrace over a multi-step loop --------------------------
+STEPS = 16
+trace = FaultTrace.generate(["a", "b"], STEPS, seed=11, rate=0.4,
+                            wavelengths=8)
+expect("trace has events", len(trace.events) > 0)
+expect("trace is deterministic",
+       trace == FaultTrace.generate(["a", "b"], STEPS, seed=11, rate=0.4,
+                                    wavelengths=8))
+
+
+def loop_outputs(ctx, with_faults):
+    outs = []
+    for step in range(STEPS):
+        if with_faults and trace.at(step):
+            ctx.update_health(trace.replay(step))
+        y = x + float(step)
+        ys = jax.device_put(y, NamedSharding(mesh, P(names)))
+        outs.append((np.asarray(all_gather(ys, ctx=ctx)),
+                     np.asarray(all_reduce(y, axis=0, ctx=ctx))))
+    return outs
+
+
+with comm_context(mesh, names) as ctx_h:
+    healthy = loop_outputs(ctx_h, with_faults=False)
+with comm_context(mesh, names) as ctx_f:
+    faulty = loop_outputs(ctx_f, with_faults=True)
+    expect("trace loop re-planned on faults",
+           ctx_f.cache_stats.replans_on_fault > 0)
+ok = all(
+    np.array_equal(hg, fg) and np.array_equal(hr, fr)
+    for (hg, hr), (fg, fr) in zip(healthy, faulty)
+)
+expect(f"all {STEPS} trace-loop steps bit-identical to healthy run", ok)
+
+# ---------------------------------------------------------------------------
+failed = [n for n, ok in checks if not ok]
+print(f"{len(checks) - len(failed)}/{len(checks)} checks passed")
+if failed:
+    raise SystemExit(f"FAILED: {failed}")
+print("FAULT-TOLERANCE-OK")

@@ -1,0 +1,109 @@
+"""Drive the 8-device fault-tolerance chaos harness in a subprocess (same
+pattern as tests/test_plan_ir_exec.py), plus the crash-safety contract of
+the atomic checkpointer: a training run SIGKILLed mid-stream leaves only
+committed ``step_*`` directories behind and ``--resume`` picks up from the
+latest one."""
+import os
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _env(devices: int = 8) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = f"{REPO / 'src'}:{env.get('PYTHONPATH', '')}"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+def _run(script: str, devices: int = 8, timeout: int = 900) -> str:
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "subproc" / script)],
+        env=_env(devices),
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"{script} failed (rc={proc.returncode})\n--- stdout ---\n"
+            f"{proc.stdout}\n--- stderr ---\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.subproc
+def test_fault_tolerance_multi_device():
+    out = _run("check_fault_tolerance.py")
+    assert "FAULT-TOLERANCE-OK" in out
+
+
+def _train_cmd(ckpt_dir: Path, steps: int, resume: bool = False) -> list:
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "granite-3-2b", "--reduced",
+        "--mesh", "8,1", "--batch", "8", "--zero1", "explicit",
+        "--steps", str(steps),
+        "--ckpt-dir", str(ckpt_dir), "--ckpt-interval", "2",
+    ]
+    if resume:
+        cmd.append("--resume")
+    return cmd
+
+
+@pytest.mark.slow
+@pytest.mark.subproc
+def test_resume_after_kill(tmp_path):
+    """SIGKILL a checkpointing train run mid-stream; the atomic writer must
+    leave no torn ``step_*`` directory and ``--resume`` must continue from
+    the latest committed step."""
+    ckpt = tmp_path / "ckpt"
+    proc = subprocess.Popen(
+        _train_cmd(ckpt, steps=200), env=_env(),
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+    )
+    try:
+        # wait for at least one COMMITTED checkpoint, then kill hard
+        deadline = time.time() + 600
+        committed = []
+        while time.time() < deadline and proc.poll() is None:
+            committed = [p for p in ckpt.glob("step_*")
+                         if not p.name.endswith(".tmp")]
+            if committed:
+                break
+            time.sleep(0.2)
+        assert committed, "train run never committed a checkpoint"
+        proc.send_signal(signal.SIGKILL)
+        proc.wait(timeout=60)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=60)
+
+    # the atomic write contract: anything committed is complete
+    survivors = sorted(p for p in ckpt.glob("step_*")
+                       if not p.name.endswith(".tmp"))
+    assert survivors, "kill erased the committed checkpoints?"
+    for p in survivors:
+        assert (p / "meta.json").exists(), f"torn checkpoint {p.name}"
+    latest = max(int(p.name.split("_")[1]) for p in survivors)
+
+    # resume from the kill and run a couple more steps to completion
+    out = subprocess.run(
+        _train_cmd(ckpt, steps=latest + 3, resume=True), env=_env(),
+        capture_output=True, text=True, timeout=900,
+    )
+    assert out.returncode == 0, (
+        f"resume run failed\n--- stdout ---\n{out.stdout}\n"
+        f"--- stderr ---\n{out.stderr[-4000:]}"
+    )
+    assert f"[train/resume] resumed from step {latest}" in out.stdout
+    assert "done:" in out.stdout

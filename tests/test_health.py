@@ -1,0 +1,300 @@
+"""Unit tests for the fault layer (ISSUE 7): the LinkHealth table, fault
+events/traces, JSON round-trips, degraded planning (derates, dead axes,
+dead-direction pruning), health-aware RWA lowering, and the validator's /
+simulator's rejection of transmissions the health table forbids."""
+import dataclasses
+import json
+import math
+
+import pytest
+
+from repro.core import (
+    DeadAxisError,
+    DeadDirectionError,
+    FaultEvent,
+    FaultTrace,
+    LinkHealth,
+    choose_hop_schedule,
+    health_fingerprint,
+    load_health,
+    schedule_from_ir,
+    search_stage_orders,
+    validate_health,
+    validate_schedule,
+)
+from repro.core.cost_model import TERARACK, price
+from repro.core.health import CCW, CW
+from repro.core.planner import ICI_LINK, LinkSpec
+from repro.core.validate import ScheduleError
+from repro.optics import simulate
+
+SLOW = LinkSpec("slow", 1e9, 1e-5)
+FAST = LinkSpec("fast", 50e9, 1e-6)
+
+
+def _sys(n, w):
+    return dataclasses.replace(TERARACK, n_nodes=n, wavelengths=w)
+
+
+# --------------------------------------------------------------------------
+# LinkHealth table semantics
+# --------------------------------------------------------------------------
+
+class TestLinkHealth:
+    def test_empty_is_healthy(self):
+        h = LinkHealth()
+        assert h.is_healthy
+        assert h.fingerprint() == "healthy"
+        assert health_fingerprint(None) == "healthy"
+        assert h.axis_factor("x") == 1.0
+        assert h.describe() == "healthy"
+
+    def test_axis_factor_best_alive_direction(self):
+        h = LinkHealth.make(derate={("x", CW): 0.25})
+        # CCW is untouched: the planner can route around the slow direction
+        assert h.axis_factor("x") == 1.0
+        h2 = LinkHealth.make(derate={("x", CW): 0.25, ("x", CCW): 0.5})
+        assert h2.axis_factor("x") == 0.5
+        h3 = LinkHealth.make(derate={("x", CW): 0.25}, dead=[("x", CCW)])
+        assert h3.axis_factor("x") == 0.25
+        h4 = LinkHealth.make(dead=[("x", CW), ("x", CCW)])
+        assert h4.axis_factor("x") == 0.0 and h4.axis_dead("x")
+        # unnamed axes (paper-world plans) are assumed healthy
+        assert h4.axis_factor(None) == 1.0
+
+    def test_derate_range_enforced(self):
+        with pytest.raises(ValueError, match=r"derate must be in \(0, 1\]"):
+            LinkHealth.make(derate={("x", CW): 0.0})
+        with pytest.raises(ValueError, match=r"derate must be in \(0, 1\]"):
+            LinkHealth.make(derate={("x", CW): 1.5})
+        with pytest.raises(ValueError, match="direction"):
+            LinkHealth.make(derate={("x", 2): 0.5})
+        # dataclasses.replace re-validates through __post_init__
+        h = LinkHealth.make(derate={("x", CW): 0.5})
+        with pytest.raises(ValueError):
+            dataclasses.replace(h, derate=((("x", CW), -1.0),))
+
+    def test_degrade_link(self):
+        h = LinkHealth.make(derate={("x", CW): 0.5, ("x", CCW): 0.5})
+        got = h.degrade_link("x", ICI_LINK)
+        assert got.bandwidth_bytes == pytest.approx(
+            ICI_LINK.bandwidth_bytes * 0.5)
+        assert h.degrade_link("y", ICI_LINK) is ICI_LINK  # untouched axis
+        dead = LinkHealth.make(dead=[("x", CW), ("x", CCW)])
+        with pytest.raises(DeadAxisError, match="dead in both"):
+            dead.degrade_link("x", ICI_LINK)
+
+    def test_union_semantics_shared_ring(self):
+        h = LinkHealth.make(lost_wavelengths={"a": (0, 1), "b": (3,)},
+                            dead=[("b", CCW)])
+        assert h.lost_for(["a"]) == frozenset({0, 1})
+        assert h.lost_for(["a", "b"]) == frozenset({0, 1, 3})
+        assert h.lost_for(None) == frozenset({0, 1, 3})
+        assert h.lost_for([None]) == frozenset({0, 1, 3})  # unnamed -> all
+        assert h.dead_directions(["a"]) == frozenset()
+        assert h.dead_directions(["a", "b"]) == frozenset({CCW})
+
+    def test_apply_and_recover(self):
+        h = LinkHealth()
+        h = h.apply(FaultEvent(0, "derate", "x", direction=CW, derate=0.5))
+        h = h.apply(FaultEvent(1, "lose_wavelength", "x", wavelength=3))
+        h = h.apply(FaultEvent(2, "dead", "y", direction=CCW))
+        assert not h.is_healthy
+        assert h.direction_factor("x", CW) == 0.5
+        assert h.lost_for(["x"]) == frozenset({3})
+        assert h.dead_directions(["y"]) == frozenset({CCW})
+        # recover piecewise, then wholesale
+        h = h.apply(FaultEvent(3, "recover", "x", wavelength=3))
+        assert h.lost_for(["x"]) == frozenset()
+        h = h.apply(FaultEvent(4, "recover", "x", direction=CW))
+        assert h.direction_factor("x", CW) == 1.0
+        h = h.apply(FaultEvent(5, "recover", "y"))
+        assert h.is_healthy and h.fingerprint() == "healthy"
+
+    def test_fingerprint_stable_and_order_free(self):
+        a = LinkHealth.make(derate={("x", CW): 0.5, ("y", CCW): 0.25})
+        b = LinkHealth.make(derate={("y", CCW): 0.25, ("x", CW): 0.5})
+        assert a.fingerprint() == b.fingerprint()
+        c = LinkHealth.make(derate={("x", CW): 0.75})
+        assert a.fingerprint() != c.fingerprint()
+
+    def test_event_validation(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultEvent(0, "explode", "x")
+        with pytest.raises(ValueError, match="derate"):
+            FaultEvent(0, "derate", "x")
+        with pytest.raises(ValueError, match="wavelength"):
+            FaultEvent(0, "lose_wavelength", "x")
+        with pytest.raises(ValueError, match="direction"):
+            FaultEvent(0, "dead", "x", direction=7)
+
+
+class TestHealthJson:
+    H = LinkHealth.make(
+        derate={("pod", CW): 0.5, ("tp", CCW): 0.25},
+        dead=[("pod", CCW)],
+        lost_wavelengths={"tp": (1, 5)},
+    )
+
+    def test_round_trip(self, tmp_path):
+        doc = self.H.to_json()
+        assert LinkHealth.from_json(doc) == self.H
+        p = tmp_path / "health.json"
+        p.write_text(json.dumps(doc))
+        assert load_health(p, expect_axes=["pod", "tp"]) == self.H
+
+    def test_expect_axes_rejects_unknown(self):
+        with pytest.raises(ValueError, match="unknown axes \\['pod', 'tp'\\]"):
+            LinkHealth.from_json(self.H.to_json(), expect_axes=["data"])
+        # sparse tables are fine: missing axes are simply healthy
+        sub = LinkHealth.make(derate={("tp", CW): 0.5})
+        got = LinkHealth.from_json(sub.to_json(),
+                                   expect_axes=["pod", "tp", "data"])
+        assert got == sub
+
+    def test_bad_payloads_never_load(self):
+        with pytest.raises(ValueError, match=r"derate must be in \(0, 1\]"):
+            LinkHealth.from_json({"derate": [["x", "cw", 2.0]]})
+        with pytest.raises(ValueError, match="'cw' or 'ccw'"):
+            LinkHealth.from_json({"dead": [["x", "sideways"]]})
+        with pytest.raises(ValueError, match="unknown health table keys"):
+            LinkHealth.from_json({"derates": []})
+        with pytest.raises(ValueError, match="mapping"):
+            LinkHealth.from_json([1, 2])
+
+
+class TestFaultTrace:
+    def test_deterministic(self):
+        a = FaultTrace.generate(["x", "y"], 50, seed=7, rate=0.3)
+        b = FaultTrace.generate(["x", "y"], 50, seed=7, rate=0.3)
+        assert a == b and a.events
+        c = FaultTrace.generate(["x", "y"], 50, seed=8, rate=0.3)
+        assert a != c
+
+    def test_replay_folds_recoveries(self):
+        tr = FaultTrace(events=(
+            FaultEvent(1, "derate", "x", direction=CW, derate=0.5),
+            FaultEvent(3, "recover", "x", direction=CW),
+        ))
+        assert tr.replay(0).is_healthy
+        assert tr.replay(1).direction_factor("x", CW) == 0.5
+        assert tr.replay(3).is_healthy
+        assert tr.at(1) and not tr.at(2)
+
+
+# --------------------------------------------------------------------------
+# degraded planning: derated links, dead axes, dead-direction pruning
+# --------------------------------------------------------------------------
+
+class TestDegradedPlanning:
+    def test_choose_hop_schedule_derates_named_axes(self):
+        h = LinkHealth.make(derate={("a", CW): 0.5, ("a", CCW): 0.5})
+        healthy = choose_hop_schedule([2, 4], [SLOW, FAST], 2**20)
+        degraded = choose_hop_schedule([2, 4], [SLOW, FAST], 2**20,
+                                       health=h, axis_names=("a", "b"))
+        assert degraded.time_s >= healthy.time_s
+
+    def test_choose_hop_schedule_dead_axis_raises(self):
+        h = LinkHealth.make(dead=[("a", CW), ("a", CCW)])
+        with pytest.raises(DeadAxisError, match="'a' is dead"):
+            choose_hop_schedule([2, 4], [SLOW, FAST], 2**20,
+                                health=h, axis_names=("a", "b"))
+
+    def test_single_axis_ring_survives_dead_ccw(self):
+        """The pure ring order (stride-1 CW hops) survives a dead CCW
+        direction while every multi-stage factorization is pruned — the
+        non-vacuous pruning case."""
+        h = LinkHealth.make(dead=[("x", CCW)])
+        srch = search_stage_orders([(None, 8, SLOW)], 2**20,
+                                   backend="optical", system=_sys(8, 2),
+                                   health=h)
+        assert len(srch.candidates) == 1
+        assert len(srch.candidates[0].plan.stages) == 1  # the pure ring
+        assert srch.pruned  # the (2,4)/(4,2)/(2,2,2) factorizations died
+        for sched_order in srch.pruned:
+            assert len(sched_order) > 1
+
+    def test_mesh_all_orders_pruned_raises(self):
+        """On a named 2x4 mesh every candidate contains a factor-2 pair
+        exchange that uses both ring directions, so one dead direction
+        prunes everything -> DeadDirectionError names the pruned orders."""
+        h = LinkHealth.make(dead=[("a", CCW)])
+        axes = [("a", 2, FAST), ("b", 4, SLOW)]
+        with pytest.raises(DeadDirectionError,
+                           match="every ag stage-order candidate"):
+            search_stage_orders(axes, 2**20, backend="optical",
+                                system=_sys(8, 8), health=h)
+
+    @pytest.mark.parametrize("coll", ["ag", "rs", "ar", "a2a"])
+    def test_electrical_price_monotone(self, coll):
+        hs = choose_hop_schedule([2, 4], [SLOW, FAST], 2**20,
+                                 collective=coll)
+        names = ("a", "b") * (len(hs.stages) // 2)  # ar lowers to RS+AG
+        plan = hs.to_ir(names)
+        h = LinkHealth.make(derate={("b", CW): 0.5, ("b", CCW): 0.5})
+        assert price(plan, health=h).total_s >= price(plan).total_s
+
+
+# --------------------------------------------------------------------------
+# health-aware lowering + validation + simulation
+# --------------------------------------------------------------------------
+
+class TestHealthLowering:
+    def _plan(self, coll="ag"):
+        hs = choose_hop_schedule([2, 4], [FAST, FAST], 2**20,
+                                 collective=coll)
+        names = ("a", "b") * (len(hs.stages) // 2)  # ar lowers to RS+AG
+        return hs.to_ir(names)
+
+    @pytest.mark.parametrize("coll", ["ag", "rs", "ar", "a2a"])
+    def test_lowering_avoids_lost_wavelengths(self, coll):
+        plan = self._plan(coll)
+        h = LinkHealth.make(lost_wavelengths={"a": (0,), "b": (2,)})
+        w = 4
+        sched = schedule_from_ir(plan, w, health=h)
+        assert sched.w == w  # physical wavelength count is preserved
+        assert sched.meta["lost_wavelengths"] == (0, 2)
+        assert sched.meta["w_effective"] == 2
+        used = {t.wavelength for t in sched.txs}
+        assert used.isdisjoint({0, 2})
+        validate_schedule(sched, health=h)
+        rep = simulate(sched, _sys(8, w), 2**20, check=True, health=h)
+        assert rep.steps == sched.num_steps
+
+    def test_all_wavelengths_lost_refuses(self):
+        plan = self._plan()
+        h = LinkHealth.make(lost_wavelengths={"a": (0, 1)})
+        with pytest.raises(Exception, match="all 2 wavelengths lost"):
+            schedule_from_ir(plan, 2, health=h)
+
+    def test_validator_names_the_offender(self):
+        plan = self._plan()
+        sched = schedule_from_ir(plan, 4)
+        wl = sched.txs[0].wavelength
+        h = LinkHealth.make(lost_wavelengths={"a": (wl,)})
+        with pytest.raises(ScheduleError,
+                           match=f"LOST wavelength.*wl={wl}"):
+            validate_health(sched, h)
+        d = sched.txs[0].direction
+        h2 = LinkHealth.make(dead=[("a", d)])
+        with pytest.raises(ScheduleError, match="DEAD ring direction"):
+            validate_health(sched, h2)
+
+    def test_simulator_rejects_forbidden_transmissions(self):
+        plan = self._plan()
+        sched = schedule_from_ir(plan, 4)
+        wl = sched.txs[0].wavelength
+        h = LinkHealth.make(lost_wavelengths={"b": (wl,)})
+        with pytest.raises(AssertionError, match="LOST wavelength"):
+            simulate(sched, _sys(8, 4), 2**20, check=True, health=h)
+
+    def test_degraded_lowering_matches_shrunken_w(self):
+        """Losing wavelengths is exactly planning at the reduced w: the
+        degraded schedule's step structure equals the healthy lowering at
+        w_eff (the slots are just renamed onto surviving wavelengths)."""
+        plan = self._plan()
+        h = LinkHealth.make(lost_wavelengths={"a": (1, 3)})
+        degraded = schedule_from_ir(plan, 4, health=h)
+        shrunk = schedule_from_ir(plan, 2)
+        assert degraded.num_steps == shrunk.num_steps
+        assert degraded.stage_steps == shrunk.stage_steps

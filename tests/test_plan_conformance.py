@@ -33,6 +33,8 @@ import pytest
 
 from repro.core import (
     TERARACK,
+    HealthError,
+    LinkHealth,
     choose_hop_schedule,
     price,
     schedule_from_ir,
@@ -199,6 +201,53 @@ def check_candidates_price_as_simulated(sizes, w, coll, slow_idx, shard):
 
 
 # --------------------------------------------------------------------------
+# (e) fault-aware pricing: degraded >= healthy under BOTH backends, and
+# price == simulate for every searched candidate under the faults
+# --------------------------------------------------------------------------
+
+def _health_for(names, derates, lost):
+    """Build a LinkHealth from index-keyed pieces (indices wrap into the
+    axis list so the same case applies to any factorization length)."""
+    return LinkHealth.make(
+        derate={(names[i % len(names)], d): f for (i, d), f in derates.items()},
+        lost_wavelengths={names[i % len(names)]: tuple(sorted(wl))
+                          for i, wl in lost.items() if wl})
+
+
+def check_degraded_conformance(sizes, w, coll, shard, health):
+    """Degrade-the-world invariants over every searched candidate: the
+    electrical price under ``health`` never drops below healthy (bandwidth
+    only shrinks), the optical price under ``health`` never drops below
+    healthy (wavelengths only disappear), and the degraded optical price
+    still equals the conflict-checked simulator on the health-lowered
+    schedule byte for byte.  A lost-wavelength union covering ALL of ``w``
+    must refuse to lower at all (HealthError), never mis-price."""
+    names = [f"x{i}" for i in range(len(sizes))]
+    axes = [(nm, s, FAST) for nm, s in zip(names, sizes)]
+    sys_w = _sys(math.prod(sizes), w)
+    srch = search_stage_orders(axes, shard, collective=coll,
+                               backend="optical", system=sys_w)
+    all_lost = len([x for x in health.lost_for(names) if x < w]) >= w
+    for cand in srch.candidates:
+        healthy_e = price(cand.plan).total_s
+        degraded_e = price(cand.plan, health=health).total_s
+        assert degraded_e >= healthy_e * (1 - 1e-12)
+        if all_lost:
+            with pytest.raises(HealthError):
+                price(cand.plan, sys_w, health=health)
+            continue
+        healthy_o = price(cand.plan, sys_w)
+        degraded_o = price(cand.plan, sys_w, health=health)
+        assert degraded_o.total_s >= healthy_o.total_s * (1 - 1e-12)
+        sched = schedule_from_ir(cand.plan, w, health=health)
+        validate_schedule(sched, health=health)
+        rep = simulate(sched, sys_w, optical_message_bytes(cand.plan),
+                       check=True, health=health)
+        assert degraded_o.total_s == pytest.approx(rep.time_s, rel=1e-12)
+        assert degraded_o.steps == rep.steps
+
+
+# --------------------------------------------------------------------------
 # drivers
 # --------------------------------------------------------------------------
 
@@ -228,6 +277,23 @@ class TestConformanceGrid:
     def test_candidates_price_as_simulated(self, sizes, slow_idx, w, coll):
         check_candidates_price_as_simulated(
             list(sizes), w, coll, slow_idx, 1 * 2**20)
+
+    HEALTH_GRID = [
+        pytest.param({}, {}, id="healthy"),
+        pytest.param({(0, 0): 0.5, (0, 1): 0.5}, {}, id="derate-both"),
+        pytest.param({(0, 0): 0.25}, {}, id="derate-cw-only"),
+        pytest.param({}, {0: (0, 1)}, id="lost-two-wl"),
+        pytest.param({(0, 0): 0.5, (1, 1): 0.75}, {1: (1, 3)}, id="mixed"),
+    ]
+
+    @pytest.mark.parametrize("coll", GRID_COLLS)
+    @pytest.mark.parametrize("w", [1, 2, 8])
+    @pytest.mark.parametrize("derates,lost", HEALTH_GRID)
+    @pytest.mark.parametrize("sizes", [(2, 4), (8,)])
+    def test_degraded_conformance(self, sizes, w, coll, derates, lost):
+        names = [f"x{i}" for i in range(len(sizes))]
+        health = _health_for(names, derates, lost)
+        check_degraded_conformance(list(sizes), w, coll, 1 * 2**20, health)
 
 
 if HAVE_HYPOTHESIS:
@@ -282,6 +348,30 @@ if HAVE_HYPOTHESIS:
     def test_candidates_price_as_simulated_property(
             sizes, w, coll, slow_idx, shard):
         check_candidates_price_as_simulated(sizes, w, coll, slow_idx, shard)
+
+    @given(
+        sizes=st.lists(st.integers(min_value=2, max_value=4),
+                       min_size=1, max_size=3),
+        w=st.sampled_from([1, 2, 8]),
+        coll=coll_st,
+        shard=st.floats(min_value=1024.0, max_value=1e7),
+        derates=st.dictionaries(
+            st.tuples(st.integers(min_value=0, max_value=2),
+                      st.integers(min_value=0, max_value=1)),
+            st.floats(min_value=0.05, max_value=1.0), max_size=4),
+        lost=st.dictionaries(
+            st.integers(min_value=0, max_value=2),
+            st.sets(st.integers(min_value=0, max_value=7), max_size=6),
+            max_size=3),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_degraded_conformance_property(sizes, w, coll, shard, derates,
+                                           lost):
+        """ANY random health table: degraded >= healthy for both backends
+        and price==simulate for every searched candidate under faults."""
+        names = [f"x{i}" for i in range(len(sizes))]
+        health = _health_for(names, derates, lost)
+        check_degraded_conformance(sizes, w, coll, shard, health)
 
 
 # --------------------------------------------------------------------------
