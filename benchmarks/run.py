@@ -21,6 +21,10 @@ cost matters); ``derived`` carries the paper-comparable numbers.
             table: the order the optical (Eq. 3 / RWA) pricer picks vs the
             electrical winner, with the winner's price asserted equal to
             the conflict-checked simulator's wall time
+  latency_regime — latency-regime plans: recursive-doubling exchange
+            chains strictly beat every ring mode at KiB shards under both
+            cost worlds (and lose at MiB), with the crossover in between
+            and price==simulate healthy + degraded
   a2a     — all-to-all as a first-class collective: cross-world order
             search on the 2x3 asymmetric table (electrical order-invariant,
             optical strictly prefers an order at low w — a pure-optical
@@ -376,6 +380,76 @@ def order_search():
     assert flipped_ag, "optical pricer should flip the AG order at low w"
 
 
+def latency_regime():
+    """Latency-regime plans (ISSUE 8): recursive-doubling exchange chains
+    for decode-size payloads.  Asserts the acceptance criteria on the
+    asymmetric 8-device table: at KiB shards the latency plan is strictly
+    cheaper than every ring-mode plan under BOTH cost worlds, at MiB
+    shards the ring family wins both, the crossover sits in between, and
+    the latency plan's optical price equals the conflict-checked
+    simulator byte for byte — healthy AND degraded."""
+    import dataclasses
+
+    from repro.core import optical_message_bytes, price, schedule_from_ir
+    from repro.core.health import LinkHealth
+    from repro.core.planner import (
+        LinkSpec,
+        latency_crossover_bytes,
+        plan_latency_collective,
+        search_stage_orders,
+    )
+
+    axes = [("a", 2, LinkSpec("fast", 50e9, 1e-6)),
+            ("b", 4, LinkSpec("slow", 1e9, 1e-5))]
+    w = 2
+    sys2 = dataclasses.replace(TERARACK, n_nodes=8, wavelengths=w)
+    health = LinkHealth.make(derate={("b", +1): 0.5})
+
+    for coll in ("ag", "rs", "ar"):
+        # --- KiB shard: exchange chain beats every ring mode, both worlds
+        small = 1 * 2**10
+        us, lat = _timeit(lambda c=coll: plan_latency_collective(
+            axes, small, collective=c))
+        assert lat is not None and all(s.mode == "exchange" for s in lat.stages)
+        ring = search_stage_orders(axes, small, collective=coll,
+                                   backend="optical", system=sys2,
+                                   include_latency=False)
+        lat_e, ring_e = price(lat).total_s, price(ring.best_by("electrical").plan).total_s
+        lat_o = price(lat, sys2)
+        ring_o = ring.best_by("optical").optical_s
+        assert lat_e < ring_e, (coll, lat_e, ring_e)   # electrical win
+        assert lat_o.total_s < ring_o, (coll, lat_o.total_s, ring_o)
+        # price == simulate, healthy then degraded (derated slow axis)
+        rep = simulate(schedule_from_ir(lat, w), sys2,
+                       optical_message_bytes(lat), check=True)
+        assert abs(rep.time_s - lat_o.total_s) < 1e-12, coll
+        deg = price(lat, sys2, health=health)
+        rep_d = simulate(schedule_from_ir(lat, w, health=health), sys2,
+                         optical_message_bytes(lat), check=True, health=health)
+        assert abs(rep_d.time_s - deg.total_s) < 1e-12, coll
+        assert deg.total_s >= lat_o.total_s * (1 - 1e-12)
+        # --- MiB shard: the ring family wins both worlds again
+        big = 1 * 2**20
+        lat_big = plan_latency_collective(axes, big, collective=coll)
+        ring_big = search_stage_orders(axes, big, collective=coll,
+                                       backend="optical", system=sys2,
+                                       include_latency=False)
+        assert price(lat_big).total_s > price(
+            ring_big.best_by("electrical").plan).total_s, coll
+        assert price(lat_big, sys2).total_s > \
+            ring_big.best_by("optical").optical_s, coll
+        # --- and the modeled crossover sits strictly between the two
+        xover = latency_crossover_bytes(axes, collective=coll)
+        assert xover is not None and small < xover < big, (coll, xover)
+        _row(f"latency_regime/{coll}", us,
+             f"rounds={len(lat.stages)};"
+             f"lat_elec_us={lat_e*1e6:.2f};ring_elec_us={ring_e*1e6:.2f};"
+             f"lat_opt_us={lat_o.total_s*1e6:.1f}@{lat_o.steps}steps;"
+             f"ring_opt_us={ring_o*1e6:.1f};"
+             f"degraded_opt_us={deg.total_s*1e6:.1f};"
+             f"crossover_B={xover:.0f}")
+
+
 def a2a():
     """All-to-all as a first-class collective (ISSUE 6).  (1) The cross-
     world order search on the asymmetric 2x3 table: a2a's electrical cost
@@ -505,6 +579,7 @@ def main() -> None:
     perhop()
     ir()
     order_search()
+    latency_regime()
     a2a()
     tp_block()
     duality()

@@ -33,6 +33,11 @@
 #                                  # report_fault re-plans the cache) + the
 #                                  # healthy-vs-degraded modeled-cost report
 #                                  # (launch/perf.py --faults)
+#   scripts/ci.sh --latency-smoke  # latency regime: the exchange-chain
+#                                  # conformance tests + a decode-size
+#                                  # microbench on 8 host devices that must
+#                                  # report latency-regime plans below the
+#                                  # crossover (and rings above it)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -56,6 +61,16 @@ api_grep_gate() {
              "ppermute; route the EP dispatch through api.all_to_all" >&2
         exit 1
     fi
+    # the decode hot loop must stay on the planned api so its KiB-scale
+    # psums hit the cached latency-regime plans (lax.pmax for the running
+    # max is fine — only the reductions must plan; paren-anchored so the
+    # docstring mentions of the flat-psum fallback don't trip it)
+    if grep -nE "lax\.psum\(|lax\.all_reduce\(" \
+            src/repro/comms/decode_attention.py src/repro/runtime/server.py; then
+        echo "CI FAIL: decode_attention/runtime.server call raw lax.psum/" \
+             "all_reduce; route decode combines through api.all_reduce" >&2
+        exit 1
+    fi
 }
 api_grep_gate
 
@@ -65,7 +80,8 @@ api_grep_gate
 # driven, not exception-driven; keep it that way.
 fault_grep_gate() {
     if grep -nE "except(\s+Exception)?\s*:" \
-            src/repro/comms/plan_executor.py src/repro/comms/ring_executor.py; then
+            src/repro/comms/plan_executor.py src/repro/comms/ring_executor.py \
+            src/repro/comms/exchange_executor.py; then
         echo "CI FAIL: bare except/except Exception in the executors; the" \
              "fault path must detect via checksums, not swallow errors" >&2
         exit 1
@@ -228,6 +244,40 @@ if [[ "${1:-}" == "--fault-smoke" ]]; then
     # degraded >= healthy in both pricing worlds)
     python -m repro.launch.perf --faults 2,4 --sizes-kb 64 --optical-w 8 "$@"
     echo "CI fault-smoke OK"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--latency-smoke" ]]; then
+    shift
+    # (1) the latency-regime conformance tests: exchange chains price as
+    # simulated (healthy + degraded), the crossover separates the families,
+    # the chunk floor clamps KiB payloads to C=1
+    python -m pytest -x -q tests/test_plan_conformance.py \
+        -k "LatencyRegime or ChunkFloor or latency"
+    # (2) decode-size microbench on 8 host devices: the auto regime must
+    # plan exchange chains below the crossover (4KB arrays: 512B shards)
+    # and rings above it (256KB arrays: 32KB shards)
+    out="$(python -m repro.launch.perf --collectives 2,4 --sizes-kb 4,256 \
+           --reps 2 "$@")"
+    echo "$out"
+    if ! grep -q "\[perf/latency\] ar 4KB regime=latency exchange: elec=" \
+            <<< "$out"; then
+        echo "CI FAIL: 4KB all-reduce did not plan the latency regime" >&2
+        exit 1
+    fi
+    if ! grep -q "\[perf/latency\] ar 256KB regime=bandwidth " <<< "$out"; then
+        echo "CI FAIL: 256KB all-reduce left the bandwidth regime" >&2
+        exit 1
+    fi
+    if ! grep -q "\[perf/latency\] crossover mesh=" <<< "$out"; then
+        echo "CI FAIL: no crossover telemetry in the collectives sweep" >&2
+        exit 1
+    fi
+    if ! grep -qE "\[perf/latency\] cache: latency_plans=[1-9]" <<< "$out"; then
+        echo "CI FAIL: no latency plans counted in the cache split" >&2
+        exit 1
+    fi
+    echo "CI latency-smoke OK"
     exit 0
 fi
 

@@ -124,6 +124,23 @@ class PlanPolicy:
                      degrade to the bit-identical XLA one-shot collective
                      (counted in ``CacheStats.fallbacks``).
     ``verify_retries`` — retry budget for the verified executor (>= 0).
+    ``regime``     — the latency/bandwidth plan family (ISSUE 8):
+                       * ``"auto"`` (default) — per payload size, price the
+                         recursive-doubling exchange chain
+                         (``plan_latency_collective``) against the ring
+                         plan and cache the electrical winner — decode-size
+                         psums get log-round latency plans, training
+                         payloads keep their ring/hybrid modes;
+                       * ``"bandwidth"`` — rings only (pre-ISSUE-8
+                         behaviour);
+                       * ``"latency"`` — force the exchange chain; raises
+                         when the axis structure has no latency plan
+                         (non-power-of-two sizes).
+                     Latency plans are single-shot exchange chains, so
+                     ``regime="latency"`` is incompatible with ``mode``/
+                     ``num_chunks``/``order`` overrides, and any mode or
+                     chunk override (policy or per-call) pins the plan to
+                     the bandwidth family.
     """
 
     mode: Optional[str] = None
@@ -134,12 +151,22 @@ class PlanPolicy:
     optical: object = None
     verify: bool = False
     verify_retries: int = 1
+    regime: str = "auto"
 
     def __post_init__(self):
         if self.mode is not None and self.mode not in (
                 "oneshot", "chunked", "perhop", "hybrid"):
             raise ValueError(f"policy mode must be oneshot|chunked|perhop|"
                              f"hybrid, got {self.mode!r}")
+        if self.regime not in ("auto", "latency", "bandwidth"):
+            raise ValueError(f"policy regime must be auto|latency|bandwidth, "
+                             f"got {self.regime!r}")
+        if self.regime == "latency" and (
+                self.mode is not None or self.num_chunks is not None
+                or self.order is not None):
+            raise ValueError(
+                "regime='latency' forces single-shot exchange plans; "
+                "mode/num_chunks/order overrides are incompatible with it")
         if not isinstance(self.verify_retries, int) or self.verify_retries < 0:
             raise ValueError(
                 f"verify_retries must be a non-negative int, "
@@ -167,13 +194,18 @@ class CacheStats:
     ``report_fault``/``update_health`` (the self-healing path);
     ``fallbacks`` counts degrades to the one-shot collective — either at
     plan time (a dead axis/direction made every staged candidate illegal)
-    or at run time (the verified executor exhausted its retries)."""
+    or at run time (the verified executor exhausted its retries);
+    ``latency_plans`` / ``ring_plans`` split the planned entries by regime
+    (exchange chains vs ring/hybrid stages) — the per-size winner cache
+    made observable."""
 
     hits: int = 0
     misses: int = 0
     invalidated: int = 0
     replans_on_fault: int = 0
     fallbacks: int = 0
+    latency_plans: int = 0
+    ring_plans: int = 0
 
 
 def links_fingerprint(links: Optional[Dict[str, LinkSpec]]) -> str:
@@ -222,6 +254,9 @@ class CommContext:
         # what each cache entry was planned FOR — lets a health change
         # re-plan every live entry in place instead of just dropping it
         self._requests: Dict[tuple, tuple] = {}
+        # memoized latency/bandwidth crossover payloads, keyed
+        # (collective, names, links_fp, health_fp) — telemetry only
+        self._crossovers: Dict[tuple, Optional[float]] = {}
         self.cache_stats = CacheStats()
 
     # -- links / auto-calibration -----------------------------------------
@@ -355,6 +390,24 @@ class CommContext:
         return {n: axis_size(n) for n in names}
 
     # -- planning (cached) ---------------------------------------------------
+    def _effective_regime(self, mode: Optional[str] = None,
+                          num_chunks: Optional[int] = None) -> str:
+        """The regime one op call actually plans under: any mode/chunk
+        override — per-call or policy-level — pins the plan to the
+        bandwidth family (latency plans are single-shot exchange chains
+        with no chunked/perhop execution to force)."""
+        pol = self.policy
+        if mode is not None or num_chunks is not None:
+            if pol.regime == "latency":
+                raise ValueError(
+                    "regime='latency' plans are single-shot exchange "
+                    "chains; per-call mode/num_chunks overrides do not "
+                    "apply — use regime='auto' or 'bandwidth'")
+            return "bandwidth"
+        if pol.mode is not None or pol.num_chunks is not None:
+            return "bandwidth"
+        return pol.regime
+
     def plan(
         self,
         collective: str,
@@ -363,16 +416,21 @@ class CommContext:
         axes: Optional[Sequence[str]] = None,
         shape: Optional[Tuple[int, ...]] = None,
         dtype=None,
+        regime: Optional[str] = None,
     ) -> CollectivePlan:
         """The policy-resolved CollectivePlan for one (collective, payload)
         point.  ``shard_bytes`` is the scattered-end payload, as everywhere
         in the planner (for "a2a": the full local exchange buffer — all N
         destination blocks).  Cached on ``(collective, shape, dtype, axes,
-        policy, links_fingerprint)``; a links change re-keys everything.
+        regime, policy, links_fingerprint)``; a links change re-keys
+        everything.  ``regime`` overrides the policy regime for this call
+        (the ops pass ``_effective_regime`` so a per-call mode/chunk
+        override plans in the bandwidth family).
         """
         if collective not in ("ag", "rs", "ar", "a2a"):
             raise ValueError(
                 f"collective must be ag|rs|ar|a2a, got {collective!r}")
+        regime = regime if regime is not None else self._effective_regime()
         names = self._names(axes)
         sizes = self._sizes(names)
         # shard_bytes AND the resolved axis sizes are always part of the
@@ -387,6 +445,7 @@ class CommContext:
             tuple(shape) if shape is not None else None,
             str(dtype) if dtype is not None else None,
             names,
+            regime,
             self.policy,
             self._links_fp,
             self._health_fp,  # LAST: _replan_cached re-keys on it
@@ -398,21 +457,23 @@ class CommContext:
             return cached
         self.cache_stats.misses += 1
         plan = self._plan_with_fallback(
-            collective, float(shard_bytes), names, sizes)
+            collective, float(shard_bytes), names, sizes, regime)
         self._cache[key] = plan
-        self._requests[key] = (collective, float(shard_bytes), names, sizes)
+        self._requests[key] = (
+            collective, float(shard_bytes), names, sizes, regime)
         return plan
 
     def _plan_with_fallback(
         self, collective: str, shard_bytes: float, names: Tuple[str, ...],
-        sizes: Dict[str, int],
+        sizes: Dict[str, int], regime: str = "auto",
     ) -> CollectivePlan:
         """Plan under the current health; when the degraded world makes
         every staged candidate illegal (dead axis, or every stage order
         crossing a dead ring direction), degrade gracefully to the one-shot
         fallback plan instead of failing the op."""
         try:
-            plan = self._plan_uncached(collective, shard_bytes, names, sizes)
+            plan = self._plan_uncached(
+                collective, shard_bytes, names, sizes, regime)
         except HealthError as err:
             plan = self._fallback_plan(
                 collective, shard_bytes, names, sizes, str(err))
@@ -420,7 +481,36 @@ class CommContext:
         if self._health_fp != "healthy":
             plan = dataclasses.replace(
                 plan, meta={**plan.meta, "health_fp": self._health_fp})
+        if any(s.mode == "exchange" for s in plan.stages):
+            self.cache_stats.latency_plans += 1
+        else:
+            self.cache_stats.ring_plans += 1
         return plan
+
+    def latency_crossover(
+        self, collective: str = "ar",
+        axes: Optional[Sequence[str]] = None,
+    ) -> Optional[float]:
+        """The electrical crossover payload (bytes) below which the latency
+        (recursive-doubling) plan beats every ring mode on these axes —
+        memoized per (collective, axes, links, health); None when the axis
+        structure has no latency plan (non-power-of-two sizes or a dead
+        ring direction).  Telemetry for the per-size winner cache."""
+        names = self._names(axes)
+        key = (collective, names, self._links_fp, self._health_fp)
+        if key not in self._crossovers:
+            from ..core.planner import latency_crossover_bytes
+            from .staged_allgather import link_for_axis
+
+            sizes = self._sizes(names)
+            health = self.health
+            if health is not None and health.is_healthy:
+                health = None
+            axes_l = [(n, sizes[n], link_for_axis(n, self.links))
+                      for n in names]
+            self._crossovers[key] = latency_crossover_bytes(
+                axes_l, collective=collective, health=health)
+        return self._crossovers[key]
 
     def _fallback_plan(self, collective, shard_bytes, names, sizes, reason):
         """The graceful-degrade plan: every stage one-shot (pure XLA
@@ -437,7 +527,7 @@ class CommContext:
 
     def _plan_uncached(
         self, collective: str, shard_bytes: float, names: Tuple[str, ...],
-        sizes: Dict[str, int],
+        sizes: Dict[str, int], regime: str = "auto",
     ) -> CollectivePlan:
         from .staged_collectives import plan_collectives  # lazy: cycle
 
@@ -445,9 +535,15 @@ class CommContext:
         health = self.health
         if health is not None and health.is_healthy:
             health = None
-        if pol.order in ("electrical", "optical"):
+        if regime == "latency":
+            # forced family: the exchange-chain permutation is chosen by
+            # its own closed-form cost — no ring order search applies
+            plan = self._pick_regime(
+                None, collective, shard_bytes, names, sizes, health, regime)
+        elif pol.order in ("electrical", "optical"):
             plan = self._plan_searched_order(
-                collective, shard_bytes, names, sizes, health)
+                collective, shard_bytes, names, sizes, health,
+                include_latency=(regime != "bandwidth"))
         elif pol.order is not None:
             plan = self._plan_forced_order(
                 collective, shard_bytes, names, sizes, health)
@@ -466,10 +562,57 @@ class CommContext:
                 sizes, names, shard_bytes, links=links,
                 max_chunks=pol.max_chunks,
             )[collective]
-        return _apply_overrides(plan, pol.mode, pol.num_chunks)
+            plan = self._pick_regime(
+                plan, collective, shard_bytes, names, sizes, health, regime)
+        plan = _apply_overrides(plan, pol.mode, pol.num_chunks)
+        is_latency = any(s.mode == "exchange" for s in plan.stages)
+        return dataclasses.replace(
+            plan, meta={**plan.meta,
+                        "regime": "latency" if is_latency else "bandwidth"})
+
+    def _pick_regime(self, ring_plan, collective, shard_bytes, names, sizes,
+                     health, regime):
+        """The per-size regime decision on the default (no order search)
+        planning path: price the recursive-doubling exchange chain against
+        the planner's ring plan under the electrical backend and keep the
+        winner (``regime="auto"``), or force the exchange chain
+        (``regime="latency"`` — an error when the structure has none)."""
+        if collective not in ("ag", "rs", "ar"):
+            if regime == "latency":
+                raise ValueError(
+                    f"regime='latency' has no {collective} plans (exchange "
+                    f"chains exist for ag/rs/ar only)")
+            return ring_plan
+        if regime == "bandwidth":
+            return ring_plan
+        from ..core.cost_model import price
+        from ..core.planner import plan_latency_collective
+        from .staged_allgather import link_for_axis
+
+        axes_l = [(n, sizes[n], link_for_axis(n, self.links)) for n in names]
+        lat = plan_latency_collective(
+            axes_l, shard_bytes, collective=collective, health=health)
+        if lat is None:
+            if regime == "latency":
+                if health is not None and health.dead_directions(names):
+                    # a dead ring direction, not a structural mismatch:
+                    # degrade to the one-shot fallback like any other
+                    # planning dead end under faults
+                    raise HealthError(
+                        f"latency plan for {collective} needs both ring "
+                        f"directions alive on axes {names}")
+                raise ValueError(
+                    f"regime='latency': no recursive-doubling plan for "
+                    f"{collective} on axes {dict(sizes)} (sizes must be "
+                    f"powers of two)")
+            return ring_plan
+        if regime == "latency":
+            return lat
+        return lat if price(lat).total_s < price(ring_plan).total_s \
+            else ring_plan
 
     def _plan_searched_order(self, collective, shard_bytes, names, sizes,
-                             health=None):
+                             health=None, *, include_latency=True):
         """Cross-world order search (``PlanPolicy.order`` = ``"electrical"``
         or ``"optical"``): enumerate candidate stage orders, price every
         candidate CollectivePlan under BOTH cost backends
@@ -490,7 +633,7 @@ class CommContext:
         search = search_stage_orders(
             axes, shard_bytes, collective=collective,
             backend=self.policy.order, max_chunks=self.policy.max_chunks,
-            health=health, **kw,
+            health=health, include_latency=include_latency, **kw,
         )
         best = search.best
         eb = search.best_by("electrical")
@@ -503,6 +646,7 @@ class CommContext:
                   "order_search": {
                       "backend": search.backend,
                       "order": best.order,
+                      "regime": best.regime,
                       "electrical_s": best.electrical_s,
                       "optical_s": best.optical_s,
                       "optical_steps": best.optical_steps,
@@ -511,6 +655,9 @@ class CommContext:
                       # genuine cross-world disagreement only: a strictly
                       # cheaper optical order, not an equal-cost tie-break
                       "flipped": search.flipped,
+                      # the two worlds picked different plan FAMILIES
+                      # (one latency, one bandwidth) — strictly cheaper
+                      "regime_flipped": search.regime_flipped,
                       # orders a dead ring direction made illegal
                       "pruned": search.pruned,
                   }})
@@ -727,16 +874,21 @@ def _apply_overrides(
     return plan
 
 
-def _local_plan(ctx, collective, names, x, axis, *, mode, num_chunks, scattered):
+def _local_plan(ctx, collective, names, x, axis, *, mode, num_chunks,
+                scattered, regime=None):
     """Plan + runtime fit for an inside-shard_map call.  ``scattered`` —
     whether ``x`` is already the scattered shard (AG input) or the
-    full-length local array (RS/AR input)."""
+    full-length local array (RS/AR input).  ``regime`` forces a plan
+    family; None resolves it from the policy + these per-call overrides
+    (a mode/chunk override plans in the bandwidth family)."""
     sizes = {n: axis_size(n) for n in names}
     n_total = math.prod(sizes.values())
     nbytes = x.size * x.dtype.itemsize
     shard_bytes = nbytes if scattered else nbytes / n_total
+    if regime is None:
+        regime = ctx._effective_regime(mode, num_chunks)
     plan = ctx.plan(collective, shard_bytes, axes=names,
-                    shape=tuple(x.shape), dtype=x.dtype)
+                    shape=tuple(x.shape), dtype=x.dtype, regime=regime)
     plan = _apply_overrides(plan, mode, num_chunks)
     granularity = 1 if scattered else n_total
     return _fit_plan(plan, x.shape[axis], granularity), n_total
@@ -841,7 +993,8 @@ def all_gather(
     n = math.prod(ctx._sizes(names).values())
     shard_bytes = x.size * x.dtype.itemsize / n
     plan = ctx.plan("ag", shard_bytes, axes=names,
-                    shape=tuple(x.shape), dtype=x.dtype)
+                    shape=tuple(x.shape), dtype=x.dtype,
+                    regime=ctx._effective_regime(mode, num_chunks))
     plan = _apply_overrides(plan, mode, num_chunks)
     plan = _fit_plan(plan, x.shape[axis] // n, 1)
     return _run_wrapped(ctx, x, plan, axis, names,
@@ -873,7 +1026,8 @@ def reduce_scatter(
     n = math.prod(ctx._sizes(names).values())
     shard_bytes = x.size * x.dtype.itemsize / n
     plan = ctx.plan("rs", shard_bytes, axes=names,
-                    shape=tuple(x.shape), dtype=x.dtype)
+                    shape=tuple(x.shape), dtype=x.dtype,
+                    regime=ctx._effective_regime(mode, num_chunks))
     plan = _apply_overrides(plan, mode, num_chunks)
     plan = _fit_plan(plan, x.shape[axis], n)
     return _run_wrapped(ctx, x, plan, axis, names,
@@ -913,7 +1067,8 @@ def all_reduce(
         return _wrap(ctx, lambda y: lax.psum(y, names), x, P(), P())
     shard_bytes = x.size * x.dtype.itemsize / n
     plan = ctx.plan("ar", shard_bytes, axes=names,
-                    shape=tuple(x.shape), dtype=x.dtype)
+                    shape=tuple(x.shape), dtype=x.dtype,
+                    regime=ctx._effective_regime(mode, num_chunks))
     plan = _apply_overrides(plan, mode, num_chunks)
     plan = _fit_plan(plan, x.shape[axis], n)
     return _run_wrapped(ctx, x, plan, axis, names, P(), P())
@@ -1010,7 +1165,13 @@ def allgather_matmul(
         if do_fuse:
             # fused rings everywhere: the fusion decision already says the
             # per-hop decomposition wins, so the plain collective's stage
-            # modes (a tradeoff with no compute to hide) don't apply
+            # modes (a tradeoff with no compute to hide) don't apply.  A
+            # latency (exchange) plan has no ring order to fuse against —
+            # re-plan in the bandwidth family for the stage order.
+            if any(s.mode == "exchange" for s in plan.stages):
+                plan, _ = _local_plan(
+                    ctx, "ag", names, xl, axis, mode=None, num_chunks=None,
+                    scattered=True, regime="bandwidth")
             g, outs = _fused(xl, tuple(wl), names, stage_order=plan.axes,
                              axis=axis)
             return g, tuple(outs)
@@ -1075,6 +1236,12 @@ def matmul_reduce_scatter(
             hl.dtype.itemsize, fuse=fuse,
         )
         if do_fuse:
+            if any(s.mode == "exchange" for s in plan.stages):
+                # fused rings need a ring stage order, not an exchange chain
+                plan = ctx.plan(
+                    "rs", out_bytes / n_total, axes=names,
+                    shape=tuple(hl.shape) + tuple(wl.shape),
+                    dtype=hl.dtype, regime="bandwidth")
             return _fused(hl, wl, names, stage_order=plan.axes, axis=axis)
         return execute_plan(_mm(hl, wl), plan, axis=axis)
 

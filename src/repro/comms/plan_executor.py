@@ -33,6 +33,11 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..core.plan_ir import CollectivePlan, PlanStage, effective_stage_mode
+from .exchange_executor import (
+    exchange_all_gather,
+    exchange_all_reduce,
+    exchange_reduce_scatter,
+)
 from .ring_executor import (
     hybrid_all_gather,
     hybrid_all_reduce,
@@ -114,6 +119,27 @@ def execute_plan(y: jax.Array, plan: CollectivePlan, *, axis: int = 0,
         if stage_probe is None:
             return None
         return lambda before, after, name: stage_probe(before, after, name, kind)
+
+    if any(s.mode == "exchange" for s in plan.stages):
+        # latency-regime plans: recursive-doubling pairwise rounds.  They
+        # are single-shot by construction — the planner never chunks them
+        # (KiB payloads are under the chunking floor anyway).
+        if plan.num_chunks > 1:
+            raise ValueError(
+                f"exchange (latency) plans execute single-shot, got "
+                f"num_chunks={plan.num_chunks}")
+        if coll == "ag":
+            return exchange_all_gather(
+                y, plan, axis=axis, stage_probe=probe_for("ag"))
+        if coll == "rs":
+            return exchange_reduce_scatter(
+                y, plan, axis=axis, stage_probe=probe_for("rs"))
+        if coll == "ar":
+            return exchange_all_reduce(
+                y, plan, axis=axis, rs_probe=probe_for("rs"),
+                ag_probe=probe_for("ag"))
+        raise ValueError(
+            f"exchange stages unsupported for collective {coll!r}")
 
     if coll == "ag":
         order = plan.axes

@@ -15,7 +15,8 @@ import math
 from dataclasses import dataclass, replace
 
 __all__ = ["OpticalSystem", "TERARACK", "step_time", "eq3_time", "allgather_time",
-           "eq3_overlap_time", "exposed_hidden_bytes", "PriceReport", "price"]
+           "eq3_overlap_time", "exposed_hidden_bytes", "PriceReport", "price",
+           "schedule_step_times"]
 
 
 @dataclass(frozen=True)
@@ -154,17 +155,60 @@ def _price_linkspec(plan, health=None) -> PriceReport:
                        num_chunks=plan.num_chunks)
 
 
+def schedule_step_times(sched, sys: "OpticalSystem", message_bytes: float,
+                        *, detailed: bool = False):
+    """Eq.-3 timing of a lowered schedule, burst-aware.
+
+    Returns ``(per_step_times, stage_times, total_s)``.  A step's duration
+    is ``step_time(sys, burst · d)`` where ``burst`` is the largest number
+    of items any single lightpath — one ``(wavelength, direction, src,
+    dst)`` slot — carries that step.  Ordinary stages put one item per
+    lightpath (burst 1 everywhere), and then the arithmetic is EXACTLY the
+    historical ``per_step · steps`` products (no summation drift); only
+    exchange stages, whose pairwise rounds serialize a pair's whole buffer
+    over one lightpath, produce bursts > 1 and per-step summation.  Stage
+    attribution uses ``sched.meta["stage_ranges"]`` (execution-order
+    ``(start_step, n_steps)`` from ``schedule_from_ir``) and falls back to
+    a sequential ``stage_steps`` split for hand-built schedules.
+    """
+    bursts = [1] * sched.num_steps
+    counts = {}
+    for tx in sched.txs:
+        key = (tx.step, tx.wavelength, tx.direction, tx.src, tx.dst)
+        c = counts.get(key, 0) + 1
+        counts[key] = c
+        if c > bursts[tx.step]:
+            bursts[tx.step] = c
+    if all(b == 1 for b in bursts):
+        per = step_time(sys, message_bytes, detailed=detailed)
+        per_step = [per] * sched.num_steps
+        stage_times = tuple(per * s for s in sched.stage_steps)
+        return per_step, stage_times, per * sched.num_steps
+    per_step = [step_time(sys, b * message_bytes, detailed=detailed)
+                for b in bursts]
+    ranges = sched.meta.get("stage_ranges")
+    if ranges is None:
+        ranges = []
+        start = 0
+        for s in sched.stage_steps:
+            ranges.append((start, s))
+            start += s
+    stage_times = tuple(sum(per_step[a:a + c]) for a, c in ranges)
+    return per_step, stage_times, sum(per_step)
+
+
 def _price_optical(plan, sys: "OpticalSystem", *, detailed: bool = False,
                    health=None) -> PriceReport:
     from .plan_ir import optical_message_bytes  # lazy: avoid a cycle
     from .schedule import schedule_from_ir  # lazy: avoid a cycle
 
     sched = schedule_from_ir(plan, sys.wavelengths, health=health)
-    # one step moves ONE schedule item: the whole shard for gather traffic,
-    # a 1/n (origin, destination) block for exchange (a2a) traffic
-    per_step = step_time(sys, optical_message_bytes(plan), detailed=detailed)
-    times = tuple(per_step * s for s in sched.stage_steps)
-    return PriceReport("optical", plan.mode, per_step * sched.num_steps,
+    # one step moves ONE schedule item per lightpath: the whole shard for
+    # gather traffic, a 1/n (origin, destination) block for exchange (a2a)
+    # traffic; exchange-stage bursts scale each step's duration
+    _, times, total = schedule_step_times(
+        sched, sys, optical_message_bytes(plan), detailed=detailed)
+    return PriceReport("optical", plan.mode, total,
                        times, steps=sched.num_steps,
                        num_chunks=plan.num_chunks)
 

@@ -74,7 +74,7 @@ __all__ = [
     "effective_stage_mode",
 ]
 
-STAGE_MODES = ("oneshot", "perhop")
+STAGE_MODES = ("oneshot", "perhop", "exchange")
 PLAN_MODES = ("oneshot", "chunked", "perhop", "hybrid")
 
 
@@ -235,7 +235,7 @@ class PlanStage:
     """
 
     factor: int
-    mode: str  # "oneshot" | "perhop"
+    mode: str  # "oneshot" | "perhop" | "exchange"
     payload_bytes: float
     axis: Optional[str] = None
     link: Optional[object] = None  # core.planner.LinkSpec (kept untyped: no cycle)
@@ -246,6 +246,10 @@ class PlanStage:
             raise ValueError(f"stage mode must be one of {STAGE_MODES}, got {self.mode!r}")
         if self.factor < 1:
             raise ValueError("stage factor must be >= 1")
+        if self.mode == "exchange" and self.factor != 2:
+            raise ValueError(
+                f"exchange stages are bidirectional pairwise rounds; factor "
+                f"must be 2, got {self.factor}")
 
 
 @dataclass(frozen=True)
@@ -384,7 +388,11 @@ def effective_stage_mode(plan: CollectivePlan, stage: PlanStage) -> str:
     """The hop structure a stage actually executes/lowers with under the
     plan-level mode (stage ``perhop`` applies only when the plan is
     ``perhop`` or ``hybrid`` — the hybrid wavefront flows over the same
-    ring stages the perhop mode runs)."""
+    ring stages the perhop mode runs).  An ``exchange`` stage IS its
+    structure under every plan mode: a latency plan's bidirectional
+    pairwise round has no alternative hop decomposition."""
+    if stage.mode == "exchange":
+        return "exchange"
     return stage.mode if plan.mode in ("perhop", "hybrid") else "oneshot"
 
 
@@ -503,8 +511,12 @@ def stage_hops(
 ) -> List[Hop]:
     """Hops of lowering-chain stage ``stage_idx`` (0-indexed execution
     order), built by the collective's traffic family (gather broadcast
-    subsets vs. exchange digit transposes)."""
+    subsets vs. exchange digit transposes).  An ``exchange`` stage mode
+    (factor 2) builds the oneshot hop: a factor-2 all-to-all broadcast
+    round IS the bidirectional pairwise exchange."""
     tree = OpTreePlan(int(math.prod(factors)), tuple(factors))
+    if modes[stage_idx] == "exchange" and factors[stage_idx] != 2:
+        raise ValueError("exchange stage modes require factor 2")
     perhop = modes[stage_idx] == "perhop"
     if collective_kind(collective).traffic == "exchange":
         builder = _a2a_ring_hops if perhop else _a2a_oneshot_hop

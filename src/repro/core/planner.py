@@ -37,6 +37,7 @@ __all__ = ["LinkSpec", "StagePlan", "AllGatherPlan", "AllReducePlan",
            "plan_reduce_scatter_order", "plan_all_reduce",
            "pipeline_makespan", "choose_num_chunks",
            "perhop_stage_time", "choose_hop_schedule",
+           "plan_latency_collective", "latency_crossover_bytes",
            "OrderCandidate", "OrderSearch", "search_stage_orders",
            "plan_collective_matmul", "matmul_block_time",
            "ICI_LINK", "DCN_LINK", "MXU_PEAK_FLOPS"]
@@ -263,6 +264,14 @@ def pipeline_makespan(stage_times: Sequence[float], num_chunks: int) -> float:
     return sum(stage_times) + (num_chunks - 1) * max(stage_times)
 
 
+# small-message chunking floor (in packets): a shard below this many packets
+# is latency-regime traffic — the chunk wavefront's extra per-chunk alphas
+# can never be repaid by pipelining bandwidth that small, and the packet-
+# quantized wire would not deliver the modeled sub-packet wins anyway.
+# ``_best_chunks`` clamps straight to C=1 below ``packet_bytes * FLOOR``.
+SMALL_MESSAGE_FLOOR_PACKETS = 32
+
+
 def _best_chunks(
     times_for_c, max_chunks: int, *, shard_bytes: Optional[float] = None,
     packet_bytes: int = TERARACK.packet_bytes,
@@ -270,12 +279,18 @@ def _best_chunks(
     """Scan power-of-two chunk counts, minimizing the pipelined makespan of
     whatever stage chain ``times_for_c(c)`` describes.
 
-    Chunk counts whose per-chunk payload would drop below one packet
+    Shards under the small-message floor (``packet_bytes *
+    SMALL_MESSAGE_FLOOR_PACKETS``) clamp to C=1 outright: KiB-scale
+    payloads never pay chunk-wavefront overhead.  Above the floor, chunk
+    counts whose per-chunk payload would drop below one packet
     (``packet_bytes``) are never considered: below that the linear d/B model
     is a lie — transfers are packet-quantized, so the modeled win would not
     materialize and chunking can only add launch overhead.  C=1 is always a
     candidate, so the returned makespan never exceeds the unchunked time.
     """
+    if (shard_bytes is not None
+            and shard_bytes < packet_bytes * SMALL_MESSAGE_FLOOR_PACKETS):
+        return 1, pipeline_makespan(times_for_c(1), 1)
     best_c, best_t = 1, math.inf
     c = 1
     while c <= max_chunks:
@@ -689,6 +704,219 @@ def choose_hop_schedule(
 
 
 # --------------------------------------------------------------------------
+# latency-regime plans (recursive-doubling pairwise exchange)
+# --------------------------------------------------------------------------
+
+# collectives the pairwise-exchange structure covers: a2a's exchange traffic
+# already moves a constant payload per stage and gains nothing from it.
+_LATENCY_COLLECTIVES = ("ag", "rs", "ar")
+
+
+def _pow2_exponent(n: int) -> Optional[int]:
+    """log2(n) when n is a power of two, else None."""
+    if n >= 1 and (n & (n - 1)) == 0:
+        return n.bit_length() - 1
+    return None
+
+
+def _latency_plan_for_order(
+    chain: Sequence[Tuple[Optional[str], int, LinkSpec]],
+    shard_bytes: float,
+    collective: str,
+    *,
+    canonical_names: Optional[Sequence[Optional[str]]] = None,
+):
+    """Build the CollectivePlan for one expanded factor-2 chain.
+
+    ``chain`` is the all-gather-order stage list, every entry ``(name, 2,
+    link)`` — one bidirectional pairwise-exchange round per stage
+    (recursive doubling: k = log2(n) rounds instead of an m-ary ring's
+    m-1 hops per stage).  Execution-order derivation per collective
+    mirrors ``search_stage_orders``: RS executes the reverse, AR the
+    reverse (its RS half) plus that half's mirror.  Returns ``(plan,
+    total_electrical_s)`` — the closed-form alpha-dominated cost
+    ``sum_j (alpha_j + payload_j / B_j)`` (the barrier stage time at
+    factor 2), which for a homogeneous AG telescopes to
+    ``k*alpha + (n-1)*shard/B``.
+    """
+    from .plan_ir import CollectivePlan, PlanStage  # local: avoid a cycle
+
+    kind = collective_kind(collective)
+    ag_names = tuple(a[0] for a in chain)
+    if kind.two_phase:
+        exec_chain = tuple(reversed(chain))  # the RS half's order
+        rs_names = tuple(reversed(ag_names))
+        plan_names = rs_names + tuple(reversed(rs_names))
+    elif kind.chain == "reversed":
+        exec_chain = tuple(reversed(chain))
+        plan_names = tuple(reversed(ag_names))
+    else:  # forward: ag executes the chain directly
+        exec_chain = tuple(chain)
+        plan_names = ag_names
+    stages = _stage_chain(
+        [a[1] for a in exec_chain], [a[2] for a in exec_chain],
+        shard_bytes, collective,
+    )
+    ir_stages = tuple(
+        PlanStage(factor=s.factor, mode="exchange",
+                  payload_bytes=s.payload_bytes, axis=name, link=s.link)
+        for s, name in zip(stages, plan_names)
+    )
+    total = sum(s.time_s for s in stages)
+    meta = {"source": "latency", "regime": "latency",
+            "modeled": {"latency": total}}
+    if canonical_names is not None and all(
+            nm is not None for nm in canonical_names):
+        meta["axis_names"] = tuple(canonical_names)
+    plan = CollectivePlan(
+        collective=collective,
+        n=math.prod(a[1] for a in chain),
+        shard_bytes=float(shard_bytes),
+        stages=ir_stages,
+        mode="oneshot",
+        num_chunks=1,
+        meta=meta,
+    )
+    return plan, total
+
+
+def plan_latency_collective(
+    axes: Sequence[Tuple[Optional[str], int, LinkSpec]],
+    shard_bytes: float,
+    *,
+    collective: str = "ag",
+    health=None,
+):
+    """Latency-optimal small-message plan: every stage a factor-2
+    bidirectional pairwise-exchange round (recursive doubling /
+    short-circuit style), picked over axis permutations by the closed-form
+    alpha-dominated electrical cost.
+
+    Each axis of size ``2^m`` expands into ``m`` contiguous exchange
+    rounds over that axis's link; the permutation search orders whole axes
+    (rounds of one axis stay contiguous — the executor relies on it).
+    ``shard_bytes`` is the scattered-end payload, as everywhere in this
+    module.  ``health`` plans in the degraded world (per-axis link
+    derating) — but any DEAD ring direction disqualifies the whole
+    family, because every exchange round moves payload both ways.
+
+    Returns the best CollectivePlan (stages carry ``mode="exchange"``,
+    ``meta["regime"] == "latency"``), or ``None`` when the structure does
+    not apply: a collective outside ag/rs/ar, a non-power-of-two axis
+    size, a degenerate n < 2, or a dead direction.
+    """
+    if collective not in _LATENCY_COLLECTIVES:
+        return None
+    norm: List[Tuple[Optional[str], int, LinkSpec, int]] = []
+    for name, size, link in axes:
+        m = _pow2_exponent(int(size))
+        if m is None:
+            return None
+        if health is not None and not health.is_healthy:
+            link = health.degrade_link(name, link)
+        norm.append((name, int(size), link, m))
+    if math.prod(a[1] for a in norm) < 2:
+        return None
+    if health is not None and health.dead_directions([a[0] for a in norm]):
+        return None  # exchange rounds need both ring directions alive
+    canonical = tuple(a[0] for a in norm)
+    best = None
+    best_key = None
+    for perm in itertools.permutations(norm):
+        chain = tuple(
+            (name, 2, link)
+            for name, _size, link, m in perm
+            for _ in range(m)
+        )
+        plan, total = _latency_plan_for_order(
+            chain, shard_bytes, collective, canonical_names=canonical)
+        key = (total, tuple(str(a[0]) for a in chain))
+        if best_key is None or key < best_key:
+            best, best_key = plan, key
+    return best
+
+
+def latency_crossover_bytes(
+    axes: Sequence[Tuple[Optional[str], int, LinkSpec]],
+    *,
+    collective: str = "ar",
+    backend: str = "electrical",
+    system=None,
+    health=None,
+    lo_bytes: float = 64.0,
+    hi_bytes: float = float(1 << 26),
+) -> Optional[float]:
+    """Modeled alpha/bandwidth crossover: the shard size (bytes) where the
+    best ring-family plan catches up with the latency plan.
+
+    For shards strictly below the returned size the latency plan is
+    modeled cheaper than every ring-mode plan; at or above it the ring
+    family wins.  ``backend`` picks the cost world ("electrical" LinkSpec
+    alpha+beta, or "optical" Eq. 3 on the RWA lowering under ``system``).
+    Returns ``None`` when the latency structure does not apply to
+    ``axes``/``collective``; ``0.0`` when the ring family already wins at
+    ``lo_bytes`` (latency never pays); ``inf`` when latency still wins at
+    ``hi_bytes``.
+    """
+    from .cost_model import price  # lazy: cost_model imports us
+
+    if backend not in ("electrical", "optical"):
+        raise ValueError(f"backend must be electrical|optical, got {backend!r}")
+    if plan_latency_collective(
+            axes, lo_bytes, collective=collective, health=health) is None:
+        return None
+
+    def latency_time(s: float) -> float:
+        plan = plan_latency_collective(
+            axes, s, collective=collective, health=health)
+        if backend == "electrical":
+            return price(plan).total_s
+        return price(plan, system, health=health).total_s
+
+    def ring_time(s: float) -> float:
+        if backend == "optical":
+            return search_stage_orders(
+                axes, s, collective=collective, backend="optical",
+                system=system, health=health, include_latency=False,
+            ).best.optical_s
+        best = math.inf
+        for perm in itertools.permutations(axes):
+            sched = choose_hop_schedule(
+                [a[1] for a in perm], [a[2] for a in perm], s,
+                collective=collective, health=health,
+                axis_names=[a[0] for a in perm],
+            )
+            best = min(best, sched.time_s)
+        return best
+
+    def margin(s: float) -> float:
+        # > 0 where the latency plan is strictly cheaper
+        return ring_time(s) - latency_time(s)
+
+    if margin(lo_bytes) <= 0.0:
+        return 0.0
+    lo = lo_bytes
+    while lo < hi_bytes:
+        nxt = min(lo * 2.0, hi_bytes)
+        if margin(nxt) <= 0.0:
+            break
+        lo = nxt
+        if lo >= hi_bytes:
+            return math.inf
+    hi = min(lo * 2.0, hi_bytes)
+    # log-space bisection down to ~1-byte resolution on [lo, hi]
+    for _ in range(64):
+        if hi - lo <= 1.0:
+            break
+        mid = math.sqrt(lo * hi)
+        if margin(mid) > 0.0:
+            lo = mid
+        else:
+            hi = mid
+    return hi
+
+
+# --------------------------------------------------------------------------
 # cross-world stage-order search (electrical AND optical pricing)
 # --------------------------------------------------------------------------
 
@@ -704,6 +932,11 @@ class OrderCandidate:
     LinkSpec model of the plan's chosen mode), ``optical_s``/
     ``optical_steps`` are Eq. 3 on the RWA-lowered schedule
     (``price(plan, system)`` == ``simulate(schedule_from_ir(plan, w))``).
+
+    ``regime`` names the candidate family: ``"bandwidth"`` for the ring
+    chains, ``"latency"`` for the recursive-doubling exchange plans (whose
+    ``order`` is the EXPANDED per-round axis naming, e.g. ``("b","b","a")``
+    for a 4×2 mesh gathered b-first).
     """
 
     order: Tuple[str, ...]
@@ -711,14 +944,16 @@ class OrderCandidate:
     electrical_s: float
     optical_s: float
     optical_steps: int
+    regime: str = "bandwidth"
 
 
 def _order_rank_key(backend: str):
-    """Deterministic ranking key: backend time, then the (stringified —
-    names may be None) order tuple as the tie-break."""
+    """Deterministic ranking key: backend time, then regime ("bandwidth"
+    sorts first — equal-cost ties resolve to the simpler ring plan), then
+    the (stringified — names may be None) order tuple."""
     time_of = {"electrical": lambda c: c.electrical_s,
                "optical": lambda c: c.optical_s}[backend]
-    return lambda c: (time_of(c), tuple(str(n) for n in c.order))
+    return lambda c: (time_of(c), c.regime, tuple(str(n) for n in c.order))
 
 
 @dataclass(frozen=True)
@@ -753,6 +988,17 @@ class OrderSearch:
         eb = self.best_by("electrical")
         ob = self.best_by("optical")
         return (eb.order != ob.order
+                and ob.optical_s < eb.optical_s * (1.0 - 1e-9))
+
+    @property
+    def regime_flipped(self) -> bool:
+        """True iff the two worlds disagree about the plan FAMILY — one
+        backend's winner is a latency (exchange) plan and the other's a
+        ring chain, with the optical choice strictly cheaper under Eq. 3
+        (same strictness as ``flipped``)."""
+        eb = self.best_by("electrical")
+        ob = self.best_by("optical")
+        return (eb.regime != ob.regime
                 and ob.optical_s < eb.optical_s * (1.0 - 1e-9))
 
 
@@ -790,10 +1036,20 @@ def search_stage_orders(
     max_k: Optional[int] = None,
     packet_bytes: int = TERARACK.packet_bytes,
     health=None,
+    include_latency: bool = True,
 ) -> OrderSearch:
     """Cross-world stage-order search: enumerate candidate stage
     factorizations/permutations, price each full CollectivePlan through
     BOTH cost backends, rank by ``backend``.
+
+    ``include_latency`` additionally enumerates the recursive-doubling
+    exchange family (``plan_latency_collective``'s candidates, one per
+    axis permutation, when the collective and sizes admit them) so the
+    ranking — and ``meta["order_search"]`` downstream — records REGIME
+    flips, not just order flips.  Latency candidates ride outside the
+    ``max_candidates`` cap (the family adds at most axes! entries) and
+    are all pruned whenever any ring direction is dead: exchange rounds
+    are bidirectional.
 
     ``axes`` entries are ``(name, size, link)`` (name may be None for
     paper-world plans, which then also search balanced factorizations of a
@@ -879,6 +1135,37 @@ def search_stage_orders(
             optical_s=opt.total_s,
             optical_steps=opt.steps,
         ))
+    if (include_latency and collective in _LATENCY_COLLECTIVES
+            and all(_pow2_exponent(a[1]) is not None for a in norm)
+            and math.prod(a[1] for a in norm) >= 2):
+        seen_lat = set()
+        for perm in itertools.permutations(norm):
+            chain = tuple(
+                (name, 2, link)
+                for name, size, link in perm
+                for _ in range(_pow2_exponent(size))
+            )
+            if chain in seen_lat:
+                continue
+            seen_lat.add(chain)
+            lat_names = tuple(a[0] for a in chain)
+            if dead_dirs:
+                # every exchange round moves payload both ways around the
+                # ring — any dead direction kills the whole family
+                pruned.append(lat_names)
+                continue
+            plan, _ = _latency_plan_for_order(
+                chain, shard_bytes, collective,
+                canonical_names=[a[0] for a in norm])
+            opt = price(plan, sys, health=health)
+            cands.append(OrderCandidate(
+                order=lat_names,
+                plan=plan,
+                electrical_s=price(plan).total_s,
+                optical_s=opt.total_s,
+                optical_steps=opt.steps,
+                regime="latency",
+            ))
     if not cands:
         from .health import DeadDirectionError  # lazy: avoid a cycle
         raise DeadDirectionError(

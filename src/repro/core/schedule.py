@@ -212,11 +212,32 @@ def _color_stage(
     step_offset: int,
     *,
     ring_mode: bool,
+    coalesce: bool = False,
 ) -> Tuple[List[Tx], int]:
-    """Color one synchronized stage; returns (txs, steps_used)."""
+    """Color one synchronized stage; returns (txs, steps_used).
+
+    ``coalesce`` is the exchange-stage (pairwise round) rule: every item
+    flowing between one ``(src, dst)`` pair shares a SINGLE lightpath as a
+    serialized burst — one color per (src, dst, direction) group instead
+    of one per item.  The group's items all land on the same (step,
+    wavelength); the step's duration accounting (burst × d in Eq. 3) lives
+    in the cost model and simulator, which treat same-pair same-slot
+    transmissions as one long transfer rather than a conflict.
+    """
     if not raw:
         return [], 0
-    colors = _tiling_color(raw, n) if ring_mode else _interval_color(raw, n)
+    if coalesce:
+        groups: Dict[Tuple[int, int, int], List[int]] = {}
+        for i, r in enumerate(raw):
+            groups.setdefault((r[0], r[1], r[3]), []).append(i)
+        reps = [raw[v[0]] for v in groups.values()]
+        rep_colors = (_tiling_color(reps, n) if ring_mode
+                      else _interval_color(reps, n))
+        colors = np.empty(len(raw), dtype=np.int64)
+        for v, c in zip(groups.values(), rep_colors):
+            colors[np.fromiter(v, dtype=np.int64)] = int(c)
+    else:
+        colors = _tiling_color(raw, n) if ring_mode else _interval_color(raw, n)
     # per-direction color spaces are independent; step count is driven by the
     # busier direction
     ncolors = 0
@@ -311,7 +332,9 @@ def _lower_gather_chain(
     applies (the items are the n² (origin, destination) blocks instead of
     the n origin shards).  A ``oneshot`` stage is one synchronized round; a
     ``perhop`` stage is ``m-1`` causally ordered hops, each colored into
-    its own step block.  Returns the new step offset; appends one
+    its own step block; an ``exchange`` stage (factor-2 pairwise round) is
+    one synchronized round with BURST coalescing — each pair's items share
+    one lightpath.  Returns the new step offset; appends one
     ``stage_steps`` entry per stage.
     """
     from .plan_ir import stage_hops  # local import: avoid a cycle
@@ -331,7 +354,8 @@ def _lower_gather_chain(
                     seg_start = (t.src // parent_sz) * parent_sz
                     d, links = route_line(n, seg_start, parent_sz, t.src, t.dst)
                 raw.append((t.src, t.dst, t.item, d, links))
-            txs, steps = _color_stage(raw, n, w, offset, ring_mode=(j == 0))
+            txs, steps = _color_stage(raw, n, w, offset, ring_mode=(j == 0),
+                                      coalesce=(mode == "exchange"))
             sched.txs.extend(txs)
             offset += steps
             stage_steps += steps
@@ -418,12 +442,14 @@ def schedule_from_ir(plan, w: int, *, health=None) -> Schedule:
         halves = ((plan.stages[:k], True), (plan.stages[k:], False))
     else:
         halves = ((plan.stages, kind.chain == "reversed"),)
+    stage_ranges: List[Tuple[int, int]] = []
     for half, flip in halves:
         # scatter halves lower as their time-reversed mirror all-gather
         stages = tuple(reversed(half)) if flip else half
         if not stages:
             continue
         mark = len(sched.stage_steps)
+        start = offset
         offset = _lower_gather_chain(
             sched,
             [s.factor for s in stages],
@@ -431,8 +457,18 @@ def schedule_from_ir(plan, w: int, *, health=None) -> Schedule:
             w_eff, offset,
             collective=plan.collective,
         )
+        # (start_step, n_steps) per lowered stage of this half, so pricing
+        # can attribute per-step times to stages even when steps within a
+        # stage differ in duration (exchange bursts)
+        ranges: List[Tuple[int, int]] = []
+        for steps in sched.stage_steps[mark:]:
+            ranges.append((start, steps))
+            start += steps
         if flip:  # attribution back to execution order
             sched.stage_steps[mark:] = sched.stage_steps[mark:][::-1]
+            ranges.reverse()
+        stage_ranges.extend(ranges)
+    sched.meta["stage_ranges"] = tuple(stage_ranges)
     if lost:
         # remap color slots 0..w_eff-1 onto the surviving wavelength
         # indices (injective, so the conflict structure is untouched) and

@@ -2,7 +2,11 @@
 
 A schedule is *valid* iff:
   1. conflict-freedom — within a step, no two lightpaths share a
-     (direction, link) on the same wavelength, and wavelength < w;
+     (direction, link) on the same wavelength, and wavelength < w.  The
+     one sanctioned sharing is a same-pair BURST: transmissions between
+     the same (src, dst) may ride one wavelength together (exchange
+     stages serialize a pair's items over a single lightpath — the cost
+     model charges the step for the whole burst);
   2. causality — a node only transmits items it holds when the step begins;
   3. completeness — afterwards every node holds its collective's target set.
   4. health (optional) — no transmission rides a lost wavelength or a dead
@@ -62,6 +66,10 @@ def validate_conflict_free(sched: Schedule) -> None:
                 key = (tx.direction, link, tx.wavelength)
                 if key in seen:
                     other = seen[key]
+                    # same-pair burst: one lightpath serializing several
+                    # items between one (src, dst) is not a conflict
+                    if (other.src, other.dst) == (tx.src, tx.dst):
+                        continue
                     raise ScheduleError(
                         f"wavelength conflict at step {tx.step}: link {link} "
                         f"(dir={_DIR_NAMES.get(tx.direction, tx.direction)}, "

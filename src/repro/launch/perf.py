@@ -194,7 +194,8 @@ def _timed(fn, *args, reps=10):
 
 
 def collectives_bench(factors_csv: str, sizes_kb_csv: str, reps: int = 10,
-                      links_path=None, order=None, optical_w=None) -> None:
+                      links_path=None, order=None, optical_w=None,
+                      bench_json=None) -> None:
     """Staged-collective microbenchmarks off the CollectivePlan IR: for each
     collective and size, the modeled-electrical (LinkSpec), modeled-optical
     (Eq. 3 on the RWA-lowered schedule) and measured time of all four
@@ -203,7 +204,18 @@ def collectives_bench(factors_csv: str, sizes_kb_csv: str, reps: int = 10,
     flat single-shot baseline.  With ``order=`` the context runs the
     cross-world stage-order search and each row reports the
     electrical-best vs optical-best order ("flipped" when the two worlds
-    disagree)."""
+    disagree).
+
+    Each (collective, size) point also reports the LATENCY REGIME (ISSUE
+    8): the recursive-doubling exchange chain's modeled electrical/optical
+    cost against the best ring mode, which family ``regime="auto"``
+    actually planned at that size, and the measured wall-clock of the
+    auto-planned path — decode-size payloads hit cached latency plans
+    while the large sizes keep their ring/hybrid modes.  ``bench_json``
+    writes the whole sweep (per-mode modeled + measured + the latency
+    rows + crossovers + cache counters) to that path."""
+    import dataclasses as dc
+
     import jax
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -214,6 +226,10 @@ def collectives_bench(factors_csv: str, sizes_kb_csv: str, reps: int = 10,
 
     factors, names, n, mesh, link_map, ctx = _bench_setup(
         factors_csv, links_path, order=order, optical_w=optical_w)
+    sys_n = dc.replace(
+        TERARACK, n_nodes=n,
+        wavelengths=optical_w if optical_w else TERARACK.wavelengths)
+    bench_rows = []
 
     for kb in (int(s) for s in sizes_kb_csv.split(",")):
         rows = kb * 256 // n * n  # f32 rows, divisible by the device count
@@ -244,10 +260,19 @@ def collectives_bench(factors_csv: str, sizes_kb_csv: str, reps: int = 10,
         ag_search = None
         for coll in ("ag", "rs", "ar"):
             fn, arg = entry[coll]
-            plan = ctx.plan(coll, x.size * x.dtype.itemsize / n,
-                            shape=tuple(x.shape), dtype=x.dtype)
+            shard = x.size * x.dtype.itemsize / n
+            # ring family for the four-mode rows: mode overrides only
+            # apply to ring plans, so price/measure them off the
+            # bandwidth-regime entry...
+            plan = ctx.plan(coll, shard, shape=tuple(x.shape), dtype=x.dtype,
+                            regime="bandwidth")
+            # ...while the AUTO entry is what a plain (decode-style) op
+            # call hits — the per-size regime winner
+            auto_plan = ctx.plan(coll, shard, shape=tuple(x.shape),
+                                 dtype=x.dtype)
+            regime = auto_plan.meta.get("regime", "bandwidth")
             if coll == "ag":
-                ag_search = plan.meta.get("order_search")
+                ag_search = auto_plan.meta.get("order_search")
             modeled = {m: price(plan.with_mode(m)).total_s
                        for m in ("oneshot", "chunked", "perhop", "hybrid")}
             optical = price(plan, TERARACK)
@@ -283,6 +308,46 @@ def collectives_bench(factors_csv: str, sizes_kb_csv: str, reps: int = 10,
                   f"hidden={sum(hidden)/2**10:.0f}KB "
                   f"(wall-clock on fake host devices; modeled times are the "
                   f"decision signal)")
+
+            # latency regime (ISSUE 8): the recursive-doubling exchange
+            # chain vs the best ring mode, plus what "auto" actually
+            # planned and executed at this size
+            lat_plan = auto_plan if regime == "latency" else None
+            if lat_plan is None:
+                try:
+                    lat_plan = ctx.plan(coll, shard, shape=tuple(x.shape),
+                                        dtype=x.dtype, regime="latency")
+                except ValueError:
+                    lat_plan = None
+            lat_row = None
+            if lat_plan is not None:
+                lat_elec = price(lat_plan).total_s
+                lat_opt = price(lat_plan, sys_n)
+                auto_us = _timed(
+                    jax.jit(lambda y, fn=fn: fn(y, mode=None)), arg,
+                    reps=reps)
+                ring_best = min(modeled.values())
+                lat_row = dict(
+                    elec_us=lat_elec * 1e6, opt_us=lat_opt.total_s * 1e6,
+                    opt_steps=lat_opt.steps, rounds=len(lat_plan.stages),
+                    measured_auto_us=auto_us)
+                print(f"[perf/latency] {coll} {kb}KB regime={regime} "
+                      f"exchange: elec={lat_elec*1e6:.1f}us vs "
+                      f"ring_best={ring_best*1e6:.1f}us "
+                      f"optical={lat_opt.total_s*1e6:.1f}us"
+                      f"@{lat_opt.steps}steps "
+                      f"rounds={len(lat_plan.stages)} "
+                      f"measured_auto={auto_us:.0f}us "
+                      f"(auto plans the {regime} family at this size)")
+            else:
+                print(f"[perf/latency] {coll} {kb}KB regime={regime} "
+                      f"exchange=n/a (needs power-of-two axis sizes)")
+            bench_rows.append(dict(
+                collective=coll, kb=kb, shard_bytes=shard, regime=regime,
+                modeled_us={m: v * 1e6 for m, v in modeled.items()},
+                measured_us=measured, xla_oneshot_us=flat_us,
+                optical_us=optical.total_s * 1e6,
+                optical_steps=optical.steps, latency=lat_row))
         if order and ag_search:
             # one cross-world summary per size, straight off the cached AG
             # plan's search verdict (the context already priced every
@@ -296,7 +361,43 @@ def collectives_bench(factors_csv: str, sizes_kb_csv: str, reps: int = 10,
                   f"({ag_search['electrical_s']*1e6:.1f}us elec, "
                   f"{ag_search['optical_s']*1e6:.1f}us opt"
                   f"@{ag_search['optical_steps']}steps) "
-                  f"flipped={ag_search['flipped']}")
+                  f"flipped={ag_search['flipped']} "
+                  f"regime={ag_search.get('regime', 'bandwidth')} "
+                  f"regime_flipped={ag_search.get('regime_flipped', False)}")
+
+    # per-collective crossovers + the per-size winner cache made visible:
+    # payloads below the crossover planned (and executed) exchange chains,
+    # larger ones kept their ring modes — same context, same cache
+    xovers = {c: ctx.latency_crossover(c) for c in ("ag", "rs", "ar")}
+    xnote = " ".join(
+        f"{c}={'n/a' if b is None else format(b, '.0f') + 'B'}"
+        for c, b in xovers.items())
+    st = ctx.cache_stats
+    print(f"[perf/latency] crossover mesh={factors} {xnote} "
+          f"(electrical; smaller payloads plan exchange chains)")
+    print(f"[perf/latency] cache: latency_plans={st.latency_plans} "
+          f"ring_plans={st.ring_plans} hits={st.hits} misses={st.misses} "
+          f"(decode-size psums hit the cached latency plans)")
+    if bench_json:
+        doc = {
+            "mesh": factors,
+            "axis_names": names,
+            "links": {k: {"name": v.name,
+                          "bandwidth_bytes": v.bandwidth_bytes,
+                          "alpha_s": v.alpha_s}
+                      for k, v in sorted(link_map.items())},
+            "optical_w": sys_n.wavelengths,
+            "order": order,
+            "reps": reps,
+            "rows": bench_rows,
+            "crossover_bytes": xovers,
+            "cache": dataclasses.asdict(st),
+            "note": ("wall-clock measured on fake host devices (ppermutes "
+                     "are barriers there); modeled times are the decision "
+                     "signal"),
+        }
+        Path(bench_json).write_text(json.dumps(doc, indent=2) + "\n")
+        print(f"[perf/latency] wrote {bench_json}")
 
 
 def tp_block_bench(factors_csv: str, reps: int = 5, links_path=None,
@@ -700,6 +801,11 @@ def main():
     ap.add_argument("--optical-w", type=int, default=None, metavar="W",
                     help="wavelength count for the optical pricer in the "
                          "--order search (default: TERARACK's 64)")
+    ap.add_argument("--bench-json", default=None, metavar="PATH",
+                    help="with --collectives: write the whole sweep (per-"
+                         "mode modeled + measured, latency-regime rows, "
+                         "crossovers, cache counters) to this JSON file, "
+                         "e.g. BENCH_collectives.json")
     ap.add_argument("--sizes-kb", default="64,1024")
     ap.add_argument("--shape")
     ap.add_argument("--variants", default="baseline")
@@ -727,7 +833,8 @@ def main():
         else:
             collectives_bench(args.collectives, args.sizes_kb, args.reps,
                               links_path=args.links, order=args.order,
-                              optical_w=args.optical_w)
+                              optical_w=args.optical_w,
+                              bench_json=args.bench_json)
         return
     if not args.arch:
         ap.error("--arch is required unless --collectives is given")

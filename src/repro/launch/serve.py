@@ -68,6 +68,12 @@ def main():
             "(sharded_decode_attention)")
     print(f"[serve/comms] plan cache: {n_plans} plans, "
           f"{ctx.cache_stats}{note}")
+    xover = ctx.latency_crossover("ar")
+    print(f"[serve/comms] regimes: latency={ctx.cache_stats.latency_plans} "
+          f"ring={ctx.cache_stats.ring_plans} crossover(ar)="
+          f"{'n/a' if xover is None else format(xover, '.0f') + 'B'} — "
+          f"decode psums below the crossover run recursive-doubling "
+          f"exchange plans")
     print(f"[serve/comms] health={ctx.health_fp} "
           f"replans_on_fault={ctx.cache_stats.replans_on_fault} "
           f"fallbacks={ctx.cache_stats.fallbacks}")

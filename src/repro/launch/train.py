@@ -49,16 +49,26 @@ def comm_plan_telemetry(ctx) -> list:
     lines = [f"comm plans={len(ctx.plans())} hits={st.hits} "
              f"misses={st.misses} invalidated={st.invalidated} "
              f"replans_on_fault={st.replans_on_fault} "
-             f"fallbacks={st.fallbacks} health={ctx.health_fp}"]
+             f"fallbacks={st.fallbacks} "
+             f"latency_plans={st.latency_plans} ring_plans={st.ring_plans} "
+             f"health={ctx.health_fp}"]
+    if ctx.axis_names:
+        xover = ctx.latency_crossover("ar")
+        lines.append(
+            f"  regime crossover(ar): "
+            f"{'n/a' if xover is None else format(xover, '.0f') + 'B'} — "
+            f"payloads below it plan recursive-doubling exchange chains")
     for plan, issued in ctx.plan_usage():
         order = ",".join(str(a) for a in plan.axes)
         line = (f"  {plan.collective} shard={plan.shard_bytes / 2**10:.1f}KiB "
+                f"regime={plan.meta.get('regime', 'bandwidth')} "
                 f"mode={plan.mode} chunks={plan.num_chunks} "
                 f"order=[{order}] issued=x{issued}")
         srch = plan.meta.get("order_search")
         if srch:
             line += (f" picked_by={srch['backend']}"
-                     f" flipped={srch['flipped']}")
+                     f" flipped={srch['flipped']}"
+                     f" regime_flipped={srch.get('regime_flipped', False)}")
         if plan.meta.get("fallback"):
             line += " degraded=oneshot-fallback"
         lines.append(line)

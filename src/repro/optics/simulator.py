@@ -14,7 +14,7 @@ from collections import defaultdict
 from dataclasses import dataclass
 from typing import Dict, List, Set, Tuple
 
-from ..core.cost_model import OpticalSystem, step_time
+from ..core.cost_model import OpticalSystem, schedule_step_times
 from ..core.schedule import Schedule
 
 __all__ = ["SimReport", "simulate"]
@@ -82,8 +82,8 @@ def simulate(
     max_load = 0
     steps = sched.by_step()
     for step_txs in steps:
-        wl_used: Set[Tuple[int, int, int]] = set()
-        load: Dict[Tuple[int, int], int] = defaultdict(int)
+        wl_used: Dict[Tuple[int, int, int], Tuple[int, int]] = {}
+        load: Dict[Tuple[int, int], Set[int]] = defaultdict(set)
         arrivals: Dict[int, Set[int]] = defaultdict(set)
         for tx in step_txs:
             if tx.wavelength in lost:
@@ -105,14 +105,20 @@ def simulate(
                     )
                 for link in tx.links:
                     key = (tx.direction, link, tx.wavelength)
-                    if key in wl_used:
-                        raise AssertionError(f"simulator: wavelength collision {key}")
-                    wl_used.add(key)
+                    owner = wl_used.get(key)
+                    # same-(src,dst) sharing is a serialized burst on one
+                    # lightpath (exchange stages), not a collision — the
+                    # Eq.-3 accounting charges the step for the full burst
+                    if owner is not None and owner != (tx.src, tx.dst):
+                        raise AssertionError(
+                            f"simulator: wavelength collision {key} between "
+                            f"{owner} and {(tx.src, tx.dst)}")
+                    wl_used[key] = (tx.src, tx.dst)
             for link in tx.links:
-                load[(tx.direction, link)] += 1
+                load[(tx.direction, link)].add(tx.wavelength)
             arrivals[tx.dst].add(tx.item)
         if load:
-            max_load = max(max_load, max(load.values()))
+            max_load = max(max_load, max(len(v) for v in load.values()))
         for dst, items in arrivals.items():
             holdings[dst] |= items
     if check:
@@ -126,15 +132,18 @@ def simulate(
             else:
                 assert len(h) == sched.n, \
                     f"simulator: node {p} incomplete ({len(h)}/{sched.n})"
-    per_step = step_time(sys, message_bytes, detailed=detailed)
+    # shared Eq.-3 accounting with the optical pricer (burst-aware): the
+    # price==simulate invariant is literal — both call this helper
+    _, stage_times, total = schedule_step_times(
+        sched, sys, message_bytes, detailed=detailed)
     return SimReport(
         algorithm=str(sched.meta.get("algorithm", "?")),
         n=sched.n,
         w=sched.w,
         steps=len(steps),
         transmissions=len(sched.txs),
-        time_s=per_step * len(steps),
+        time_s=total,
         max_link_load=max_load,
         stage_steps=tuple(sched.stage_steps),
-        stage_times_s=tuple(per_step * s for s in sched.stage_steps),
+        stage_times_s=stage_times,
     )

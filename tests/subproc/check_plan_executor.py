@@ -20,6 +20,12 @@ Contracts (ISSUE 5, cross-world order search + hybrid execution):
     bit-identically to the XLA one-shot collectives;
   * the ``hybrid`` mode (chunk wavefront over per-hop ring stages) stays
     bit-identical too, in both stage orders.
+
+Contracts (ISSUE 8, latency-regime exchange plans):
+  * decode-size payloads auto-plan recursive-doubling exchange chains and
+    the exchange executor runs them bit-identically to the XLA one-shot
+    collectives — auto pick AND forced ``regime="latency"`` — with the
+    executed plan's optical price equal to the conflict-checked simulator.
 """
 import os
 
@@ -421,6 +427,50 @@ with comm_context(mesh_ep, ("ep",)) as ctx_ep:
     checks.append(("moe ep issued a2a plans",
                    any(pl.collective == "a2a" for pl in ctx_ep.plans())
                    and ctx_ep.cache_stats.hits > 0))
+
+# ---- ISSUE 8: latency-regime exchange execution ---------------------------
+# Decode-size payloads auto-plan recursive-doubling exchange chains; the
+# exchange executor must run them BIT-identically to the XLA one-shot
+# collectives on the 8-device mesh, for the auto pick AND the forced
+# regime="latency" policy, and the executed plan's optical price must be
+# the conflict-checked simulator's wall time.
+ctx_auto8 = CommContext(mesh, names, links=ASYM_LINKS)
+ctx_lat8 = CommContext(mesh, names, links=ASYM_LINKS,
+                       policy=PlanPolicy(regime="latency"))
+
+x_sm = jnp.arange(256, dtype=jnp.float32)  # 1 KiB total: 128 B shards
+x_sms = jax.device_put(x_sm, NamedSharding(mesh, P(names)))
+shard_sm = x_sm.size * x_sm.dtype.itemsize / 8
+
+p_auto = ctx_auto8.plan("ar", shard_sm, shape=tuple(x_sm.shape),
+                        dtype=x_sm.dtype)
+checks.append(("regime auto picks latency at decode size",
+               p_auto.meta["regime"] == "latency"
+               and all(s.mode == "exchange" for s in p_auto.stages)))
+xov8 = ctx_auto8.latency_crossover("ar")
+checks.append(("regime crossover bounds the auto pick",
+               xov8 is not None and shard_sm < xov8))
+
+for tag, ctx_i in (("auto", ctx_auto8), ("forced", ctx_lat8)):
+    check(f"exchange ag {tag}", all_gather(x_sms, ctx=ctx_i), x_sm,
+          exact=True)
+    check(f"exchange rs {tag}", reduce_scatter(x_sm, ctx=ctx_i), 8 * x_sm,
+          exact=True)
+    check(f"exchange ar {tag}", all_reduce(x_sm, axis=0, ctx=ctx_i),
+          8 * x_sm, exact=True)
+
+for coll in ("ag", "rs", "ar"):
+    pl8 = ctx_lat8.plan(coll, shard_sm, shape=tuple(x_sm.shape),
+                        dtype=x_sm.dtype)
+    checks.append((f"exchange {coll} all-exchange stages",
+                   all(s.mode == "exchange" for s in pl8.stages)))
+    rep8 = simulate(schedule_from_ir(pl8, SYS_W2.wavelengths), SYS_W2,
+                    optical_message_bytes(pl8), check=True)
+    checks.append((f"exchange {coll} price==sim",
+                   abs(rep8.time_s - price(pl8, SYS_W2).total_s) < 1e-12))
+checks.append(("regime cache counters split",
+               ctx_lat8.cache_stats.latency_plans == 3
+               and ctx_auto8.cache_stats.latency_plans >= 1))
 
 # ---------------------------------------------------------------------------
 failed = [n for n, ok in checks if not ok]

@@ -103,7 +103,8 @@ class TestPlanCache:
         p1 = ctx.plan("ag", 2**20)
         p2 = ctx.plan("ag", 2**20)
         assert p1 is p2
-        assert ctx.cache_stats == CacheStats(hits=1, misses=1, invalidated=0)
+        assert ctx.cache_stats == CacheStats(hits=1, misses=1, invalidated=0,
+                                             ring_plans=1)
         ctx.plan("ag", 2**10)  # different payload -> new entry
         ctx.plan("rs", 2**20)  # different collective -> new entry
         assert ctx.cache_stats.misses == 3

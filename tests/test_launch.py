@@ -132,9 +132,13 @@ class TestCommTelemetry:
         lines = comm_plan_telemetry(ctx)
         assert lines[0].startswith("comm plans=2 ")
         assert "hits=1" in lines[0] and "misses=2" in lines[0]
-        assert len(lines) == 3  # header + one line per cached plan
-        ag_line = next(l for l in lines[1:] if l.strip().startswith("ag"))
+        assert "latency_plans=" in lines[0] and "ring_plans=" in lines[0]
+        # header + crossover note + one line per cached plan
+        assert len(lines) == 4
+        assert "regime crossover(ar)" in lines[1]
+        ag_line = next(l for l in lines[2:] if l.strip().startswith("ag"))
         assert "order=[" in ag_line and "mode=" in ag_line
+        assert "regime=bandwidth" in ag_line  # 1 MiB: rings win
         assert "issued=x2" in ag_line  # deduplicated plan, issued twice
 
     def test_order_search_verdict_surfaces(self):
@@ -160,7 +164,31 @@ class TestCommTelemetry:
         ctx.update_links({"a": LinkSpec("fitted", 40e9, 2e-6)})
         lines = comm_plan_telemetry(ctx)
         assert "invalidated=1" in lines[0]
-        assert len(lines) == 1  # cache dropped; no stale plan lines
+        # cache dropped; no stale plan lines (crossover note remains)
+        assert len(lines) == 2 and "crossover" in lines[1]
+
+    def test_regime_telemetry_and_crossover(self):
+        """Decode-size psums plan latency (exchange) plans, training-size
+        payloads keep rings, and the telemetry reports the split plus the
+        crossover payload between the two families (ISSUE 8)."""
+        from repro.launch.train import comm_plan_telemetry
+
+        ctx = self._ctx()
+        small = ctx.plan("ar", 1024)        # decode-size: latency regime
+        big = ctx.plan("ar", 2**20)         # training-size: rings
+        assert small.meta["regime"] == "latency"
+        assert all(s.mode == "exchange" for s in small.stages)
+        assert big.meta["regime"] == "bandwidth"
+        assert not any(s.mode == "exchange" for s in big.stages)
+        st = ctx.cache_stats
+        assert st.latency_plans == 1 and st.ring_plans == 1
+        xover = ctx.latency_crossover("ar")
+        assert xover is not None and 1024 <= xover <= 2**20
+        lines = comm_plan_telemetry(ctx)
+        assert "latency_plans=1" in lines[0] and "ring_plans=1" in lines[0]
+        assert f"{xover:.0f}B" in lines[1]
+        lat_line = next(l for l in lines[2:] if "regime=latency" in l)
+        assert "mode=oneshot" in lat_line
 
 
 class TestArtifacts:

@@ -15,7 +15,12 @@ link tables / payloads:
       are elementwise <= the chunked stage times);
   (d) ``with_chunks(1)`` normalization is drift-free: a chunked plan
       normalizes to oneshot and a hybrid plan to perhop, at identical
-      prices — the label and the execution never disagree.
+      prices — the label and the execution never disagree;
+  (f) latency-regime exchange chains (ISSUE 8) obey (a) verbatim —
+      healthy AND degraded — exist exactly where their structure applies
+      (pow-2 ag/rs/ar, both ring directions alive), are invariant under
+      the chunk helpers, and the modeled crossover genuinely separates
+      the exchange family from every ring candidate.
 
 Each invariant is one check function with TWO drivers: hypothesis
 ``@given`` sweeps when hypothesis is installed, and a deterministic
@@ -41,7 +46,15 @@ from repro.core import (
     search_stage_orders,
     validate_schedule,
 )
-from repro.core.planner import DCN_LINK, ICI_LINK, LinkSpec, pipeline_makespan
+from repro.core.planner import (
+    DCN_LINK,
+    ICI_LINK,
+    SMALL_MESSAGE_FLOOR_PACKETS,
+    LinkSpec,
+    latency_crossover_bytes,
+    pipeline_makespan,
+    plan_latency_collective,
+)
 from repro.core.plan_ir import optical_message_bytes
 from repro.optics import simulate
 
@@ -248,6 +261,176 @@ def check_degraded_conformance(sizes, w, coll, shard, health):
 
 
 # --------------------------------------------------------------------------
+# (f) latency-regime (exchange-chain) plans: price == simulate healthy AND
+# degraded, chunk helpers are no-drift no-ops, and the modeled crossover
+# genuinely separates the two plan families
+# --------------------------------------------------------------------------
+
+HEALTH_GRID = [
+    pytest.param({}, {}, id="healthy"),
+    pytest.param({(0, 0): 0.5, (0, 1): 0.5}, {}, id="derate-both"),
+    pytest.param({(0, 0): 0.25}, {}, id="derate-cw-only"),
+    pytest.param({}, {0: (0, 1)}, id="lost-two-wl"),
+    pytest.param({(0, 0): 0.5, (1, 1): 0.75}, {1: (1, 3)}, id="mixed"),
+]
+
+
+def check_latency_conformance(sizes, w, coll, shard, health=None):
+    """Exchange-chain invariants: the structure only exists for pow-2
+    ag/rs/ar meshes with both ring directions alive; where it exists, every
+    stage is a factor-2 exchange round, the optical price equals the
+    conflict-checked simulator byte for byte (healthy and under ``health``),
+    and the single-shot chain is invariant under the chunk helpers."""
+    names = [f"x{i}" for i in range(len(sizes))]
+    axes = [(nm, s, SLOW if i % 2 else FAST)
+            for i, (nm, s) in enumerate(zip(names, sizes))]
+    plan = plan_latency_collective(axes, shard, collective=coll,
+                                   health=health)
+    structural = (coll in ("ag", "rs", "ar")
+                  and all(s & (s - 1) == 0 for s in sizes)
+                  and math.prod(sizes) >= 2
+                  and not (health is not None
+                           and health.dead_directions(names)))
+    if not structural:
+        assert plan is None
+        return
+    assert plan is not None
+    assert plan.meta["regime"] == "latency"
+    assert all(s.mode == "exchange" and s.factor == 2 for s in plan.stages)
+    rounds = sum(int(math.log2(s)) for s in sizes if s > 1)
+    assert len(plan.stages) == (2 * rounds if coll == "ar" else rounds)
+    # chunk helpers: a single-shot exchange chain never grows a wavefront
+    norm = plan.with_chunks(1)
+    assert norm.stage_modes == plan.stage_modes
+    assert price(norm).total_s == pytest.approx(
+        price(plan).total_s, rel=1e-12)
+    # optical price == conflict-checked simulator, byte for byte
+    sys_w = _sys(max(math.prod(sizes), 2), w)
+    if health is not None and \
+            len([x for x in health.lost_for(names) if x < w]) >= w:
+        with pytest.raises(HealthError):
+            price(plan, sys_w, health=health)
+        return
+    opt = price(plan, sys_w, health=health)
+    sched = schedule_from_ir(plan, w, health=health)
+    validate_schedule(sched, health=health)
+    rep = simulate(sched, sys_w, optical_message_bytes(plan),
+                   check=True, health=health)
+    assert opt.total_s == pytest.approx(rep.time_s, rel=1e-12)
+    assert opt.steps == rep.steps
+
+
+class TestLatencyRegime:
+    """Latency-regime conformance grid (ISSUE 8)."""
+
+    AXES = [("a", 2, FAST), ("b", 4, SLOW)]
+    LAT_COLLS = ["ag", "rs", "ar"]
+
+    @pytest.mark.parametrize("coll", LAT_COLLS)
+    @pytest.mark.parametrize("w", [1, 2, 8])
+    @pytest.mark.parametrize("sizes", [
+        (2,), (4,), (2, 4), (2, 2, 2), (8, 2),   # pow-2: the family exists
+        (3, 4), (6,), (1, 2),                     # non-pow-2 factor: refused
+    ])
+    def test_price_is_simulated(self, sizes, w, coll):
+        check_latency_conformance(list(sizes), w, coll, 1 * 2**10)
+
+    @pytest.mark.parametrize("coll", LAT_COLLS)
+    @pytest.mark.parametrize("derates,lost", HEALTH_GRID)
+    def test_degraded_conformance(self, coll, derates, lost):
+        names = ["x0", "x1"]
+        health = _health_for(names, derates, lost)
+        check_latency_conformance([2, 4], 8, coll, 1 * 2**10, health)
+
+    def test_dead_direction_disqualifies(self):
+        # exchange rounds move payload BOTH ways: one dead direction on
+        # any axis kills the whole family (api then falls back gracefully)
+        health = LinkHealth.make(dead=[("b", 0)])
+        assert plan_latency_collective(
+            self.AXES, 1024, collective="ar", health=health) is None
+
+    def test_a2a_has_no_latency_family(self):
+        assert plan_latency_collective(
+            self.AXES, 1024, collective="a2a") is None
+
+    @pytest.mark.parametrize("coll", LAT_COLLS)
+    def test_crossover_separates_families(self, coll):
+        """Below the modeled crossover the exchange chain is strictly
+        cheaper than EVERY ring candidate; above it the ring family wins —
+        the contract api.latency_crossover surfaces to telemetry."""
+        xover = latency_crossover_bytes(self.AXES, collective=coll)
+        assert xover is not None and 0.0 < xover < math.inf
+
+        def ring_best(s):
+            srch = search_stage_orders(self.AXES, s, collective=coll,
+                                       backend="electrical",
+                                       include_latency=False)
+            return min(c.electrical_s for c in srch.candidates)
+
+        for s in (xover / 8, xover / 2):
+            lat = plan_latency_collective(self.AXES, s, collective=coll)
+            assert price(lat).total_s < ring_best(s), s
+        for s in (xover * 2, xover * 8):
+            lat = plan_latency_collective(self.AXES, s, collective=coll)
+            assert price(lat).total_s >= ring_best(s), s
+
+    def test_crossover_none_when_family_absent(self):
+        axes = [("a", 3, FAST)]  # non-pow-2: no exchange chain exists
+        assert latency_crossover_bytes(axes, collective="ar") is None
+
+    def test_search_latency_candidates_price_as_simulated(self):
+        """The order search's latency-family candidates obey invariant (a)
+        verbatim: candidate price == simulator, and the regime tag is
+        consistent with the stage structure."""
+        sys_w = _sys(8, 2)
+        srch = search_stage_orders(self.AXES, 1 * 2**10, collective="ar",
+                                   backend="optical", system=sys_w)
+        lat = [c for c in srch.candidates if c.regime == "latency"]
+        assert lat  # pow-2 mesh: the family rides along
+        for cand in lat:
+            assert all(s.mode == "exchange" for s in cand.plan.stages)
+            rep = simulate(schedule_from_ir(cand.plan, 2), sys_w,
+                           optical_message_bytes(cand.plan), check=True)
+            assert cand.optical_s == pytest.approx(rep.time_s, rel=1e-12)
+
+
+class TestChunkFloor:
+    """The small-message chunk floor (ISSUE 8 satellite): KiB-scale
+    payloads never pay chunk-wavefront overhead — ``_best_chunks`` clamps
+    straight to C=1 below ``packet_bytes * SMALL_MESSAGE_FLOOR_PACKETS``,
+    and above the floor no chunk ever carries less than one packet."""
+
+    FLOOR = TERARACK.packet_bytes * SMALL_MESSAGE_FLOOR_PACKETS
+
+    @pytest.mark.parametrize("coll", GRID_COLLS)
+    def test_below_floor_clamps_to_one_chunk(self, coll):
+        # FAT link: bandwidth-bound, so chunking would otherwise pay
+        links = _grid_links((2, 4), "fat")
+        hs = choose_hop_schedule([2, 4], links, self.FLOOR - 1,
+                                 collective=coll)
+        assert hs.num_chunks == 1 and hs.hybrid_chunks == 1
+        assert hs.mode in ("oneshot", "perhop")
+
+    def test_floor_boundary_is_exact(self):
+        links = _grid_links((2, 4), "fat")
+        at = choose_hop_schedule([2, 4], links, float(self.FLOOR),
+                                 collective="ag")
+        below = choose_hop_schedule([2, 4], links, float(self.FLOOR) - 1.0,
+                                    collective="ag")
+        assert below.num_chunks == 1  # clamped outright
+        assert at.num_chunks > 1      # floor is exclusive: chunking resumes
+
+    def test_above_floor_chunks_stay_packet_sized(self):
+        links = _grid_links((2, 4), "fat")
+        for shard in (self.FLOOR, 4 * self.FLOOR, 64 * self.FLOOR):
+            hs = choose_hop_schedule([2, 4], links, float(shard),
+                                     collective="ag")
+            for c in (hs.num_chunks, hs.hybrid_chunks):
+                if c > 1:
+                    assert shard / c >= TERARACK.packet_bytes
+
+
+# --------------------------------------------------------------------------
 # drivers
 # --------------------------------------------------------------------------
 
@@ -277,14 +460,6 @@ class TestConformanceGrid:
     def test_candidates_price_as_simulated(self, sizes, slow_idx, w, coll):
         check_candidates_price_as_simulated(
             list(sizes), w, coll, slow_idx, 1 * 2**20)
-
-    HEALTH_GRID = [
-        pytest.param({}, {}, id="healthy"),
-        pytest.param({(0, 0): 0.5, (0, 1): 0.5}, {}, id="derate-both"),
-        pytest.param({(0, 0): 0.25}, {}, id="derate-cw-only"),
-        pytest.param({}, {0: (0, 1)}, id="lost-two-wl"),
-        pytest.param({(0, 0): 0.5, (1, 1): 0.75}, {1: (1, 3)}, id="mixed"),
-    ]
 
     @pytest.mark.parametrize("coll", GRID_COLLS)
     @pytest.mark.parametrize("w", [1, 2, 8])
@@ -373,6 +548,31 @@ if HAVE_HYPOTHESIS:
         health = _health_for(names, derates, lost)
         check_degraded_conformance(sizes, w, coll, shard, health)
 
+    @given(
+        sizes=st.lists(st.integers(min_value=1, max_value=8),
+                       min_size=1, max_size=3),
+        w=st.sampled_from([1, 2, 8]),
+        coll=st.sampled_from(["ag", "rs", "ar", "a2a"]),
+        shard=st.floats(min_value=64.0, max_value=1e6),
+        derates=st.dictionaries(
+            st.tuples(st.integers(min_value=0, max_value=2),
+                      st.integers(min_value=0, max_value=1)),
+            st.floats(min_value=0.05, max_value=1.0), max_size=4),
+        lost=st.dictionaries(
+            st.integers(min_value=0, max_value=2),
+            st.sets(st.integers(min_value=0, max_value=7), max_size=6),
+            max_size=3),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_latency_conformance_property(sizes, w, coll, shard, derates,
+                                          lost):
+        """ANY mesh/collective/health: the exchange family exists exactly
+        where its structure applies, and wherever it exists its price is
+        the simulator's wall time — healthy or degraded."""
+        names = [f"x{i}" for i in range(len(sizes))]
+        health = _health_for(names, derates, lost)
+        check_latency_conformance(sizes, w, coll, shard, health)
+
 
 # --------------------------------------------------------------------------
 # deterministic pins for the cross-world decision itself
@@ -426,9 +626,16 @@ class TestOrderSearchDecisions:
             search_stage_orders(self.AXES, 1024, backend="fastest")
 
     def test_candidate_cap(self):
+        # the cap truncates the ring-chain enumeration; the latency family
+        # (at most axes! extra candidates) rides outside it by design
         srch = search_stage_orders(self.AXES, 1024, backend="electrical",
                                    max_candidates=1)
-        assert len(srch.candidates) == 1 and srch.capped
+        ring = [c for c in srch.candidates if c.regime == "bandwidth"]
+        assert len(ring) == 1 and srch.capped
+        srch_ring_only = search_stage_orders(
+            self.AXES, 1024, backend="electrical", max_candidates=1,
+            include_latency=False)
+        assert len(srch_ring_only.candidates) == 1 and srch_ring_only.capped
 
 
 class TestPolicyOrderHook:
