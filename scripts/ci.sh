@@ -38,6 +38,14 @@
 #                                  # microbench on 8 host devices that must
 #                                  # report latency-regime plans below the
 #                                  # crossover (and rings above it)
+#   scripts/ci.sh --serve-smoke    # cluster serving: the tests/test_cluster.py
+#                                  # suite (seeded-trace determinism, monotone
+#                                  # makespan, policy ordering) + the
+#                                  # launch/perf.py --cluster sweep — a small
+#                                  # seeded trace through the simulator AND a
+#                                  # 2-replica ClusterServer on host devices,
+#                                  # with the cost-model-beats-round-robin
+#                                  # p99 assertion in both
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -278,6 +286,33 @@ if [[ "${1:-}" == "--latency-smoke" ]]; then
         exit 1
     fi
     echo "CI latency-smoke OK"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--serve-smoke" ]]; then
+    shift
+    # (1) the cluster suite: seeded-trace determinism (bit-identical event
+    # logs + stats), makespan monotone in arrival rate, policy ordering,
+    # BatchedServer timestamps, measured-vs-simulated 2-replica validation
+    python -m pytest -x -q tests/test_cluster.py
+    # (2) the serving-policy sweep: simulated under both cost worlds plus a
+    # measured 2-replica host run — cluster_bench itself asserts the
+    # cost-model-beats-round-robin p99 ordering (sim AND measured); the
+    # greps pin the telemetry lines the assertions ride on
+    out="$(python -m repro.launch.perf --cluster --cluster-requests 12 "$@")"
+    echo "$out"
+    if ! grep -q "\[perf/cluster\] sim: cost-model policies beat round-robin" \
+            <<< "$out"; then
+        echo "CI FAIL: simulated policy sweep missing its ordering verdict" >&2
+        exit 1
+    fi
+    if ! grep -q "\[perf/cluster\] measured: policy ordering matches" \
+            <<< "$out"; then
+        echo "CI FAIL: measured 2-replica run missing the simulator-match" \
+             "verdict" >&2
+        exit 1
+    fi
+    echo "CI serve-smoke OK"
     exit 0
 fi
 

@@ -207,6 +207,12 @@ class CacheStats:
     latency_plans: int = 0
     ring_plans: int = 0
 
+    def to_json(self) -> Dict[str, int]:
+        """The counters as one structured dict — callers (train telemetry,
+        the cluster front end's drain report) log this blob instead of
+        hand-formatting fields."""
+        return dataclasses.asdict(self)
+
 
 def links_fingerprint(links: Optional[Dict[str, LinkSpec]]) -> str:
     """Stable fingerprint of an axis→LinkSpec table — part of every plan
@@ -369,6 +375,47 @@ class CommContext:
         cache entries from how often each was actually issued (e.g. a TP
         block's two all-reduces share one entry but count twice)."""
         return [(p, self._counts.get(k, 0)) for k, p in self._cache.items()]
+
+    def telemetry_snapshot(self) -> Dict:
+        """One structured telemetry blob for this context: cache counters
+        (:meth:`CacheStats.to_json`), fingerprints, the regime crossover,
+        and a per-cached-plan record (collective, payload, mode/chunks,
+        stage order, regime, issue count, order-search verdict, fallback
+        reason).  ``launch/train.py`` and the cluster front end
+        (``repro.cluster.frontend``) log this dict as JSON instead of
+        hand-formatting fields; the line-oriented
+        ``launch.train.comm_plan_telemetry`` renders from the same blob."""
+        plans = []
+        for plan, issued in self.plan_usage():
+            rec = {
+                "collective": plan.collective,
+                "shard_bytes": float(plan.shard_bytes),
+                "regime": plan.meta.get("regime", "bandwidth"),
+                "mode": plan.mode,
+                "num_chunks": plan.num_chunks,
+                "order": [str(a) for a in plan.axes],
+                "issued": issued,
+            }
+            srch = plan.meta.get("order_search")
+            if srch:
+                rec["order_search"] = {
+                    "backend": srch["backend"],
+                    "flipped": srch["flipped"],
+                    "regime_flipped": srch.get("regime_flipped", False),
+                }
+            if plan.meta.get("fallback"):
+                rec["fallback"] = plan.meta["fallback"]
+            plans.append(rec)
+        xover = (self.latency_crossover("ar")
+                 if self.axis_names else None)
+        return {
+            "plans": len(self._cache),
+            "cache": self.cache_stats.to_json(),
+            "links_fp": self._links_fp,
+            "health_fp": self._health_fp,
+            "crossover_ar_bytes": xover,
+            "per_plan": plans,
+        }
 
     # -- sizes -------------------------------------------------------------
     def _names(self, axes: Optional[Sequence[str]]) -> Tuple[str, ...]:

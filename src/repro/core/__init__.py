@@ -46,6 +46,7 @@ from .cost_model import (  # noqa: F401
     eq3_time,
     price,
     step_time,
+    transfer_time,
 )
 from .plan_ir import (  # noqa: F401
     COLLECTIVES,

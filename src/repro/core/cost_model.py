@@ -16,7 +16,7 @@ from dataclasses import dataclass, replace
 
 __all__ = ["OpticalSystem", "TERARACK", "step_time", "eq3_time", "allgather_time",
            "eq3_overlap_time", "exposed_hidden_bytes", "PriceReport", "price",
-           "schedule_step_times"]
+           "schedule_step_times", "transfer_time"]
 
 
 @dataclass(frozen=True)
@@ -43,6 +43,21 @@ class OpticalSystem:
 
 
 TERARACK = OpticalSystem()
+
+
+def transfer_time(model, nbytes: float) -> float:
+    """One point-to-point transfer priced under either cost world.
+
+    ``model`` is an :class:`OpticalSystem` (the paper's Eq.-3 step model:
+    ``d/B + a``) or a ``LinkSpec``-shaped object (the electrical alpha/
+    bandwidth model: ``α + d/B``).  This is the request-transmission
+    primitive the cluster simulator (``repro.cluster``) prices client→
+    replica hops with, so the serving layer sees the SAME fabric models
+    the collectives plan against.
+    """
+    if isinstance(model, OpticalSystem):
+        return step_time(model, nbytes)
+    return model.alpha_s + nbytes / model.bandwidth_bytes
 
 
 def step_time(sys: OpticalSystem, chunk_bytes: float, *, detailed: bool = False) -> float:

@@ -26,7 +26,8 @@ from typing import Dict, List, Optional
 
 from ..configs import SHAPES, active_param_count, get_config, param_count
 
-__all__ = ["HW", "roofline_for_cell", "analyze_dir", "format_table"]
+__all__ = ["HW", "roofline_for_cell", "analyze_dir", "format_table",
+           "prefill_time_s", "decode_step_time_s"]
 
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # B/s / chip
@@ -84,6 +85,44 @@ def model_flops_per_device(arch: str, shape_name: str) -> float:
         return 2.0 * n_active * tokens / CHIPS
     # decode: one token per sequence per step
     return 2.0 * n_active * shape.global_batch / CHIPS
+
+
+# --------------------------------------------------------------------------
+# serving phase-time queries (repro.cluster consumes these)
+# --------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2}
+
+
+def _weight_bytes(cfg) -> float:
+    return float(param_count(cfg)) * _DTYPE_BYTES.get(cfg.dtype, 2)
+
+
+def prefill_time_s(cfg, prompt_tokens: int, *, chips: int = 1,
+                   peak_flops: float = PEAK_FLOPS,
+                   hbm_bw: float = HBM_BW) -> float:
+    """Roofline prefill time for one request of ``prompt_tokens``.
+
+    ``max(compute, memory)``: 2·N_active FLOPs per token against the MXU
+    peak, against one streaming pass over the weights.  The same two-term
+    model the roofline table uses, specialized to the request phases the
+    cluster simulator prices (``repro.cluster.sim``).
+    """
+    flops = 2.0 * active_param_count(cfg) * prompt_tokens / chips
+    return max(flops / peak_flops, _weight_bytes(cfg) / chips / hbm_bw)
+
+
+def decode_step_time_s(cfg, batch: int = 1, *, chips: int = 1,
+                       peak_flops: float = PEAK_FLOPS,
+                       hbm_bw: float = HBM_BW) -> float:
+    """Roofline time of ONE decode engine step over ``batch`` active slots.
+
+    Decode streams the full weight set for a handful of tokens, so the HBM
+    term dominates until the batch is hundreds wide — the memory-bound
+    regime the continuous-batching slot pool exists to amortize.
+    """
+    flops = 2.0 * active_param_count(cfg) * batch / chips
+    return max(flops / peak_flops, _weight_bytes(cfg) / chips / hbm_bw)
 
 
 def roofline_for_cell(cell: Dict) -> Optional[Roofline]:

@@ -13,6 +13,7 @@ Production invocation (per the assignment's mesh):
 import argparse
 import contextlib
 import dataclasses
+import json
 import time
 
 import jax
@@ -45,31 +46,34 @@ def comm_plan_telemetry(ctx) -> list:
     it flipped vs the other world.  Emitted every ``--log-every`` steps by
     the explicit train loop (not just at exit), so a mid-run links update
     (auto-calibration) is visible as invalidations + re-planned orders."""
-    st = ctx.cache_stats
-    lines = [f"comm plans={len(ctx.plans())} hits={st.hits} "
-             f"misses={st.misses} invalidated={st.invalidated} "
-             f"replans_on_fault={st.replans_on_fault} "
-             f"fallbacks={st.fallbacks} "
-             f"latency_plans={st.latency_plans} ring_plans={st.ring_plans} "
-             f"health={ctx.health_fp}"]
+    snap = ctx.telemetry_snapshot()
+    st = snap["cache"]
+    lines = [f"comm plans={snap['plans']} hits={st['hits']} "
+             f"misses={st['misses']} invalidated={st['invalidated']} "
+             f"replans_on_fault={st['replans_on_fault']} "
+             f"fallbacks={st['fallbacks']} "
+             f"latency_plans={st['latency_plans']} "
+             f"ring_plans={st['ring_plans']} "
+             f"health={snap['health_fp']}"]
     if ctx.axis_names:
-        xover = ctx.latency_crossover("ar")
+        xover = snap["crossover_ar_bytes"]
         lines.append(
             f"  regime crossover(ar): "
             f"{'n/a' if xover is None else format(xover, '.0f') + 'B'} — "
             f"payloads below it plan recursive-doubling exchange chains")
-    for plan, issued in ctx.plan_usage():
-        order = ",".join(str(a) for a in plan.axes)
-        line = (f"  {plan.collective} shard={plan.shard_bytes / 2**10:.1f}KiB "
-                f"regime={plan.meta.get('regime', 'bandwidth')} "
-                f"mode={plan.mode} chunks={plan.num_chunks} "
-                f"order=[{order}] issued=x{issued}")
-        srch = plan.meta.get("order_search")
+    for rec in snap["per_plan"]:
+        order = ",".join(rec["order"])
+        line = (f"  {rec['collective']} "
+                f"shard={rec['shard_bytes'] / 2**10:.1f}KiB "
+                f"regime={rec['regime']} "
+                f"mode={rec['mode']} chunks={rec['num_chunks']} "
+                f"order=[{order}] issued=x{rec['issued']}")
+        srch = rec.get("order_search")
         if srch:
             line += (f" picked_by={srch['backend']}"
                      f" flipped={srch['flipped']}"
-                     f" regime_flipped={srch.get('regime_flipped', False)}")
-        if plan.meta.get("fallback"):
+                     f" regime_flipped={srch['regime_flipped']}")
+        if rec.get("fallback"):
             line += " degraded=oneshot-fallback"
         lines.append(line)
     return lines
@@ -303,6 +307,10 @@ def main():
         print("[train/zero1-explicit] final comm telemetry:")
         for line in comm_plan_telemetry(ctx):
             print(f"[train/comms] {line}")
+        # the same data as ONE structured blob (machine-readable twin of
+        # the lines above; the cluster front end logs the same shape)
+        print("[train/comms-json] "
+              + json.dumps(ctx.telemetry_snapshot(), sort_keys=True))
     if loss0 is None:  # resumed at/past --steps: nothing left to run
         print(f"done: no steps to run (resumed at {start_step} "
               f"of {args.steps})")

@@ -9,10 +9,18 @@ granularity) built on ``models.decode_step``.
 Prefill is per-request against the slot's cache region (cache layouts are
 batched, so prefill runs with batch=1 padding-free and writes into the
 slot's lane via index update).
+
+Every request carries a :class:`RequestTiming` record (enqueue /
+prefill-start / prefill-done / decode-start / finish, on the server's
+``clock``), exposed per request in :meth:`BatchedServer.drain_report` —
+the measured counterpart of the cluster simulator's event timestamps
+(``repro.cluster.sim``), so simulated and measured latency distributions
+compare field-for-field.
 """
 from __future__ import annotations
 
 import collections
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
@@ -23,7 +31,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..models import decode_step, forward, init_decode_state
 
-__all__ = ["ServerConfig", "BatchedServer"]
+__all__ = ["ServerConfig", "BatchedServer", "RequestTiming"]
 
 
 @dataclass(frozen=True)
@@ -35,45 +43,112 @@ class ServerConfig:
 
 
 @dataclass
+class RequestTiming:
+    """Per-request phase timestamps on the server's clock (seconds).
+
+    ``decode_start_s`` stays None for single-token requests (the prefill
+    emits token 1, so a ``max_new_tokens=1`` request never decodes)."""
+
+    rid: int
+    prompt_tokens: int
+    enqueue_s: float
+    prefill_start_s: Optional[float] = None
+    prefill_done_s: Optional[float] = None
+    decode_start_s: Optional[float] = None
+    finish_s: Optional[float] = None
+    generated: int = 0
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return None if self.finish_s is None else self.finish_s - self.enqueue_s
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time to first token (the prefill's argmax is token 1)."""
+        if self.prefill_done_s is None:
+            return None
+        return self.prefill_done_s - self.enqueue_s
+
+    @property
+    def queue_s(self) -> Optional[float]:
+        if self.prefill_start_s is None:
+            return None
+        return self.prefill_start_s - self.enqueue_s
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "rid": self.rid, "prompt_tokens": self.prompt_tokens,
+            "enqueue_s": self.enqueue_s,
+            "prefill_start_s": self.prefill_start_s,
+            "prefill_done_s": self.prefill_done_s,
+            "decode_start_s": self.decode_start_s,
+            "finish_s": self.finish_s, "generated": self.generated,
+        }
+
+
+@dataclass
 class _Slot:
     request_id: Optional[int] = None
     pos: int = 0
     generated: List[int] = field(default_factory=list)
 
 
+def _percentile(vals: List[float], p: float) -> float:
+    return float(np.percentile(np.asarray(vals, np.float64), p)) if vals else 0.0
+
+
 class BatchedServer:
-    def __init__(self, cfg: ModelConfig, params, scfg: ServerConfig):
+    def __init__(self, cfg: ModelConfig, params, scfg: ServerConfig,
+                 *, clock: Callable[[], float] = time.perf_counter):
         self.cfg, self.params, self.scfg = cfg, params, scfg
+        self.clock = clock
         self.state = init_decode_state(cfg, scfg.batch_size, scfg.max_seq)
         self.slots = [_Slot() for _ in range(scfg.batch_size)]
         self.queue: collections.deque = collections.deque()
         self.results: Dict[int, List[int]] = {}
+        self.records: Dict[int, RequestTiming] = {}
         self._next_id = 0
         self._tokens = np.zeros((scfg.batch_size, 1), np.int32)
 
         self._decode = jax.jit(
             lambda p, s, t, pos: decode_step(cfg, p, s, t, pos)
         )
+        # one cached jit for prefill too — a fresh lambda per request would
+        # recompile every prefill (retraces only per distinct prompt length)
+        self._prefill = jax.jit(
+            lambda p, b, c: forward(cfg, p, b, cache=c,
+                                    cache_pos=jnp.zeros((), jnp.int32))
+        )
 
     # ---- API -------------------------------------------------------------
     def submit(self, prompt: np.ndarray) -> int:
         rid = self._next_id
         self._next_id += 1
-        self.queue.append((rid, np.asarray(prompt, np.int32)))
+        prompt = np.asarray(prompt, np.int32)
+        self.queue.append((rid, prompt))
+        self.records[rid] = RequestTiming(
+            rid=rid, prompt_tokens=len(prompt), enqueue_s=self.clock())
         return rid
+
+    def active_count(self) -> int:
+        """Occupied decode slots (the scheduler's in-flight signal)."""
+        return sum(1 for s in self.slots if s.request_id is not None)
+
+    def pending_work(self) -> bool:
+        return bool(self.queue) or self.active_count() > 0
 
     def _prefill_into_slot(self, slot_idx: int, rid: int, prompt: np.ndarray):
         """Run the prompt through the model writing KV/state for this slot."""
+        rec = self.records[rid]
+        rec.prefill_start_s = self.clock()
         S = len(prompt)
         # batch the prompt across the full slot dim (only slot_idx's lanes
         # are kept — simple and correct; per-slot cache views are a perf
         # optimization on real hardware)
         toks = np.zeros((self.scfg.batch_size, S), np.int32)
         toks[slot_idx] = prompt
-        logits, new_state, _ = jax.jit(
-            lambda p, b, c: forward(self.cfg, p, b, cache=c,
-                                    cache_pos=jnp.zeros((), jnp.int32))
-        )(self.params, {"tokens": jnp.asarray(toks)}, self.state)
+        logits, new_state, _ = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, self.state)
         self.state = self._merge_slot(self.state, new_state, slot_idx)
         nxt = int(jnp.argmax(logits[slot_idx, -1]))
         slot = self.slots[slot_idx]
@@ -81,6 +156,18 @@ class BatchedServer:
         slot.pos = S
         slot.generated = [nxt]
         self._tokens[slot_idx, 0] = nxt
+        rec.prefill_done_s = self.clock()
+        rec.generated = 1
+        if self.scfg.max_new_tokens <= 1 or nxt == self.scfg.eos_id:
+            self._finish_slot(slot_idx)
+
+    def _finish_slot(self, slot_idx: int):
+        slot = self.slots[slot_idx]
+        rec = self.records[slot.request_id]
+        rec.finish_s = self.clock()
+        rec.generated = len(slot.generated)
+        self.results[slot.request_id] = slot.generated
+        self.slots[slot_idx] = _Slot()
 
     def _merge_slot(self, old, new, slot_idx: int):
         """Keep `new` only on the batch lane of this slot."""
@@ -115,25 +202,30 @@ class BatchedServer:
         for i in active:
             by_pos.setdefault(self.slots[i].pos, []).append(i)
         for pos, idxs in sorted(by_pos.items()):
+            step_start = self.clock()
             logits, self.state = self._decode(
                 self.params, self.state, jnp.asarray(self._tokens),
                 jnp.asarray(pos, jnp.int32),
             )
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            now = self.clock()
             for i in idxs:
                 slot = self.slots[i]
+                rec = self.records[slot.request_id]
+                if rec.decode_start_s is None:
+                    rec.decode_start_s = step_start
                 tok = int(nxt[i])
                 slot.generated.append(tok)
                 slot.pos += 1
                 self._tokens[i, 0] = tok
+                rec.generated = len(slot.generated)
                 done = (
                     len(slot.generated) >= self.scfg.max_new_tokens
                     or tok == self.scfg.eos_id
                     or slot.pos >= self.scfg.max_seq - 1
                 )
                 if done:
-                    self.results[slot.request_id] = slot.generated
-                    self.slots[i] = _Slot()
+                    self._finish_slot(i)
 
     def run_until_drained(self, max_steps: int = 1000) -> Dict[int, List[int]]:
         steps = 0
@@ -143,3 +235,27 @@ class BatchedServer:
             if steps > max_steps:
                 raise RuntimeError("server did not drain")
         return self.results
+
+    def drain_report(self) -> Dict[str, Any]:
+        """Per-request timestamps + aggregate latency/throughput stats for
+        every finished request — the measured record the cluster layer
+        compares against simulated :class:`~repro.cluster.sim.ClusterStats`.
+        Aggregate-only stats block simulator-vs-measured validation; this
+        report keeps every phase timestamp per request."""
+        done = [r for r in self.records.values() if r.finish_s is not None]
+        lat = [r.latency_s for r in done]
+        ttft = [r.ttft_s for r in done if r.ttft_s is not None]
+        toks = sum(r.generated for r in done)
+        span = (max(r.finish_s for r in done) - min(r.enqueue_s for r in done)
+                if done else 0.0)
+        return {
+            "requests": len(done),
+            "tokens": toks,
+            "makespan_s": span,
+            "throughput_tok_s": (toks / span) if span > 0 else 0.0,
+            "latency_p50_s": _percentile(lat, 50),
+            "latency_p99_s": _percentile(lat, 99),
+            "ttft_p50_s": _percentile(ttft, 50),
+            "per_request": [r.to_json() for r in sorted(
+                done, key=lambda r: r.rid)],
+        }
