@@ -46,6 +46,13 @@
 #                                  # 2-replica ClusterServer on host devices,
 #                                  # with the cost-model-beats-round-robin
 #                                  # p99 assertion in both
+#   scripts/ci.sh --reconfig-smoke # reconfiguration-aware optical world: the
+#                                  # invariant-(g) conformance tests (price==
+#                                  # simulate with a per-event circuit delay,
+#                                  # zero-delay bit-identity, SWOT overlap
+#                                  # dominance) + the launch/perf.py --reconfig
+#                                  # modeled sweep asserting the hold-vs-
+#                                  # reconfigure flip (pure python, no devices)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -313,6 +320,37 @@ if [[ "${1:-}" == "--serve-smoke" ]]; then
         exit 1
     fi
     echo "CI serve-smoke OK"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--reconfig-smoke" ]]; then
+    shift
+    # (1) the reconfiguring-world conformance tests: invariant (g) grid +
+    # hypothesis, the hold-vs-reconfigure decision pins, the PlanPolicy
+    # knob, and the sub-axis factorization guard
+    python -m pytest -x -q tests/test_plan_conformance.py \
+        -k "reconfig or Reconfig or SubAxis"
+    # (2) the modeled sweep: per-event delay swept over the paper-world
+    # 16-node axis — reconfig_bench itself asserts price==simulate per
+    # point, SWOT overlap dominance, and the flip; the greps pin the
+    # telemetry lines the assertions ride on
+    out="$(python -m repro.launch.perf --reconfig "$@")"
+    echo "$out"
+    if ! grep -q "\[perf/reconfig\] hold-vs-reconfigure flip:" <<< "$out"; then
+        echo "CI FAIL: --reconfig sweep missing the flip verdict" >&2
+        exit 1
+    fi
+    if ! grep -qE "\[perf/reconfig\] delay=[^ ]+ +best= +16 reconfigs=0" \
+            <<< "$out"; then
+        echo "CI FAIL: no hold-the-circuit winner past the crossover" >&2
+        exit 1
+    fi
+    if ! grep -qE "\[perf/reconfig\] delay=0.00e\+00s best= +4x4 reconfigs=[1-9]" \
+            <<< "$out"; then
+        echo "CI FAIL: zero-delay winner is not the factored chain" >&2
+        exit 1
+    fi
+    echo "CI reconfig-smoke OK"
     exit 0
 fi
 

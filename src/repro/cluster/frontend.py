@@ -145,6 +145,22 @@ class ClusterServer:
             gids.append(req.rid)
         return gids
 
+    def reset(self) -> None:
+        """Reset the whole front end for a fresh trace on the same warm
+        replicas: each ``BatchedServer`` drains and clears via its public
+        :meth:`~repro.runtime.server.BatchedServer.reset` (compiled jits
+        kept), routing state and per-replica counters rebuild, and the
+        epoch moves to now — the standard way to re-run a trace under a
+        different policy without re-paying compilation."""
+        for srv in self.servers:
+            srv.reset()
+        self._t0 = self.clock()
+        self._route.clear()
+        self._requests.clear()
+        self._next_gid = 0
+        self.routed = {s.name: 0 for s in self.specs}
+        self.busy_s = {s.name: 0.0 for s in self.specs}
+
     def pending_work(self) -> bool:
         return any(s.pending_work() for s in self.servers)
 

@@ -141,6 +141,20 @@ class PlanPolicy:
                      ``num_chunks``/``order`` overrides, and any mode or
                      chunk override (policy or per-call) pins the plan to
                      the bandwidth family.
+    ``reconfig``   — the hold-vs-reconfigure constraint on a
+                     reconfigurable photonic fabric (ISSUE 10):
+                       * ``"auto"`` (default) — the order search ranks the
+                         full candidate space; the per-event
+                         ``OpticalSystem.circuit_reconfig_s`` delay (minus
+                         SWOT overlap) is part of every candidate's
+                         optical price, so the ranking decides;
+                       * ``"hold"`` — only candidates that keep ONE
+                         circuit for the whole collective;
+                       * ``"reconfigure"`` — only candidates that pay at
+                         least one topology change.
+                     Only meaningful on the searched-order path, so a
+                     non-auto value requires ``order`` to be
+                     ``"electrical"`` or ``"optical"``.
     """
 
     mode: Optional[str] = None
@@ -152,6 +166,7 @@ class PlanPolicy:
     verify: bool = False
     verify_retries: int = 1
     regime: str = "auto"
+    reconfig: str = "auto"
 
     def __post_init__(self):
         if self.mode is not None and self.mode not in (
@@ -167,6 +182,16 @@ class PlanPolicy:
             raise ValueError(
                 "regime='latency' forces single-shot exchange plans; "
                 "mode/num_chunks/order overrides are incompatible with it")
+        if self.reconfig not in ("auto", "hold", "reconfigure"):
+            raise ValueError(
+                f"policy reconfig must be auto|hold|reconfigure, "
+                f"got {self.reconfig!r}")
+        if self.reconfig != "auto" and self.order not in (
+                "electrical", "optical"):
+            raise ValueError(
+                f"reconfig={self.reconfig!r} only constrains the searched-"
+                f"order path; it requires order='electrical' or 'optical', "
+                f"got order={self.order!r}")
         if not isinstance(self.verify_retries, int) or self.verify_retries < 0:
             raise ValueError(
                 f"verify_retries must be a non-negative int, "
@@ -402,6 +427,7 @@ class CommContext:
                     "backend": srch["backend"],
                     "flipped": srch["flipped"],
                     "regime_flipped": srch.get("regime_flipped", False),
+                    "reconfigurations": srch.get("reconfigurations", 0),
                 }
             if plan.meta.get("fallback"):
                 rec["fallback"] = plan.meta["fallback"]
@@ -680,7 +706,8 @@ class CommContext:
         search = search_stage_orders(
             axes, shard_bytes, collective=collective,
             backend=self.policy.order, max_chunks=self.policy.max_chunks,
-            health=health, include_latency=include_latency, **kw,
+            health=health, include_latency=include_latency,
+            reconfig=self.policy.reconfig, **kw,
         )
         best = search.best
         eb = search.best_by("electrical")
@@ -699,6 +726,9 @@ class CommContext:
                       "optical_steps": best.optical_steps,
                       "electrical_best_order": eb.order,
                       "optical_best_order": ob.order,
+                      # circuit/topology changes the winner's lowered
+                      # schedule needs on a reconfigurable fabric
+                      "reconfigurations": best.reconfigurations,
                       # genuine cross-world disagreement only: a strictly
                       # cheaper optical order, not an equal-cost tie-break
                       "flipped": search.flipped,

@@ -40,9 +40,11 @@ from .health import (  # noqa: F401
 )
 from .cost_model import (  # noqa: F401
     TERARACK,
+    CircuitReconfig,
     OpticalSystem,
     PriceReport,
     allgather_time,
+    derive_wavelengths,
     eq3_time,
     price,
     step_time,

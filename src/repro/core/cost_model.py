@@ -14,22 +14,35 @@ import dataclasses
 import math
 from dataclasses import dataclass, replace
 
-__all__ = ["OpticalSystem", "TERARACK", "step_time", "eq3_time", "allgather_time",
-           "eq3_overlap_time", "exposed_hidden_bytes", "PriceReport", "price",
-           "schedule_step_times", "transfer_time"]
+__all__ = ["OpticalSystem", "TERARACK", "CircuitReconfig", "step_time",
+           "eq3_time", "allgather_time", "eq3_overlap_time",
+           "exposed_hidden_bytes", "PriceReport", "price",
+           "schedule_step_times", "transfer_time", "derive_wavelengths"]
 
 
 @dataclass(frozen=True)
 class OpticalSystem:
-    """TeraRack-style WDM ring parameters (paper §IV-A defaults)."""
+    """TeraRack-style WDM ring parameters (paper §IV-A defaults).
+
+    ``mrr_reconfig_s`` is the paper's PER-STEP overhead ``a`` (MRR tuning
+    within a fixed circuit configuration).  ``circuit_reconfig_s`` is the
+    PER-EVENT topology-reconfiguration delay a circuit-switched photonic
+    fabric pays when the lightpath layout itself changes between stages
+    (ring -> segmented lines, segment size changes) — zero by default, so
+    the fixed-ring world of PRs 3-8 is unchanged.  ``reconfig_overlap``
+    enables the SWOT-style overlap: a reconfiguration event starts while
+    the previous stage's LAST step is still transmitting, so only
+    ``max(0, circuit_reconfig_s - last_step_s)`` is exposed."""
 
     n_nodes: int = 1024
     wavelengths: int = 64  # w, per fiber direction
     bandwidth_per_wavelength: float = 40e9  # bits/s
-    mrr_reconfig_s: float = 25e-6  # MRR reconfiguration delay
+    mrr_reconfig_s: float = 25e-6  # MRR reconfiguration delay (per step)
     packet_bytes: int = 128
     flit_bytes: int = 32
     oeo_cycles_per_flit: int = 1
+    circuit_reconfig_s: float = 0.0  # per-event circuit/topology change
+    reconfig_overlap: bool = True  # hide reconfig behind in-flight last step
 
     @property
     def flit_time_s(self) -> float:
@@ -43,6 +56,42 @@ class OpticalSystem:
 
 
 TERARACK = OpticalSystem()
+
+
+@dataclass(frozen=True)
+class CircuitReconfig:
+    """Circuit-reconfiguration accounting of one priced/simulated schedule.
+
+    ``events`` counts the stage boundaries whose circuit signature changed
+    (a topology reconfiguration of the photonic fabric); ``exposed_s`` is
+    the wall time those events add after the SWOT overlap — with
+    ``reconfig_overlap`` each event hides behind the previous stage's
+    in-flight last step, without it the full ``circuit_reconfig_s`` is
+    exposed per event.  Events are counted even at zero delay, so planners
+    can rank hold-vs-reconfigure candidates independently of the current
+    delay calibration."""
+
+    events: int = 0
+    exposed_s: float = 0.0
+
+
+def derive_wavelengths(links, base: "OpticalSystem" = None) -> int:
+    """Derive a per-mesh wavelength budget from calibrated LinkSpecs.
+
+    The busiest axis's fitted bandwidth, expressed in per-wavelength WDM
+    channels of ``base.bandwidth_per_wavelength`` bits/s and clamped to
+    ``[1, base.wavelengths]`` — so ``--calibrate`` output sizes the optical
+    pricer's ``w`` instead of hand-picking ``--optical-w``.  ``links`` is
+    any iterable/mapping of LinkSpec-shaped objects (``bandwidth_bytes``).
+    """
+    base = base if base is not None else TERARACK
+    specs = links.values() if hasattr(links, "values") else links
+    bws = [float(l.bandwidth_bytes) for l in specs
+           if getattr(l, "bandwidth_bytes", None)]
+    if not bws:
+        return base.wavelengths
+    per_wl_bytes = base.bandwidth_per_wavelength / 8.0
+    return max(1, min(base.wavelengths, math.ceil(max(bws) / per_wl_bytes)))
 
 
 def transfer_time(model, nbytes: float) -> float:
@@ -115,6 +164,10 @@ class PriceReport:
     mode they are the per-chunk pipeline stage costs, so
     ``total_s = sum + (C-1)·max`` (the pipeline makespan).  ``steps`` is
     the optical backend's communication-step count (None for electrical).
+    ``reconfigurations``/``reconfig_exposed_s`` report the optical world's
+    circuit-reconfiguration events and their exposed (post-overlap) wall
+    time — zero for the electrical backend and in the fixed-circuit world
+    (``circuit_reconfig_s == 0`` still counts events, exposes nothing).
     """
 
     backend: str  # "linkspec" | "optical"
@@ -123,6 +176,8 @@ class PriceReport:
     stage_times_s: tuple
     steps: int = None
     num_chunks: int = 1
+    reconfigurations: int = 0
+    reconfig_exposed_s: float = 0.0
 
 
 def _price_linkspec(plan, health=None) -> PriceReport:
@@ -170,12 +225,54 @@ def _price_linkspec(plan, health=None) -> PriceReport:
                        num_chunks=plan.num_chunks)
 
 
+def _circuit_reconfigurations(sched, sys: "OpticalSystem", per_step):
+    """Circuit-reconfiguration events of a lowered schedule and their
+    exposed delays, attributed per execution-order stage.
+
+    ``sched.meta["circuits"]`` (written by ``schedule_from_ir`` alongside
+    ``stage_ranges``) carries one circuit signature per lowered stage —
+    ``("ring", n)`` for whole-ring stages, ``("line", seg)`` for
+    segmented-line stages.  Walking the NON-EMPTY stages in schedule-step
+    order, every boundary whose signature changes is one reconfiguration
+    event; the initial circuit setup is free.  With ``reconfig_overlap``
+    the event hides behind the previous stage's in-flight last step
+    (``max(0, circuit_reconfig_s - last_step_s)`` exposed), otherwise the
+    full delay is exposed.  Each event's exposure is charged to the
+    FOLLOWING stage (execution-order index), so stage times still sum to
+    the total.  Returns ``(events, exposed_s, per_stage_extra)``;
+    hand-built schedules without circuit metadata charge nothing.
+    """
+    circuits = sched.meta.get("circuits")
+    ranges = sched.meta.get("stage_ranges")
+    if not circuits or ranges is None or len(circuits) != len(ranges):
+        return 0, 0.0, None
+    # recover schedule order: ranges/circuits are execution-order, but the
+    # (start_step, n_steps) tuples carry the true schedule positions
+    order = sorted((i for i in range(len(ranges)) if ranges[i][1] > 0),
+                   key=lambda i: ranges[i][0])
+    extras = [0.0] * len(ranges)
+    events, exposed = 0, 0.0
+    for prev, cur in zip(order, order[1:]):
+        if circuits[prev] == circuits[cur]:
+            continue
+        events += 1
+        delay = sys.circuit_reconfig_s
+        if delay > 0.0:
+            if sys.reconfig_overlap:
+                last = ranges[prev][0] + ranges[prev][1] - 1
+                delay = max(0.0, delay - per_step[last])
+            extras[cur] += delay
+            exposed += delay
+    return events, exposed, extras
+
+
 def schedule_step_times(sched, sys: "OpticalSystem", message_bytes: float,
                         *, detailed: bool = False):
-    """Eq.-3 timing of a lowered schedule, burst-aware.
+    """Eq.-3 timing of a lowered schedule, burst- and reconfiguration-aware.
 
-    Returns ``(per_step_times, stage_times, total_s)``.  A step's duration
-    is ``step_time(sys, burst · d)`` where ``burst`` is the largest number
+    Returns ``(per_step_times, stage_times, total_s, reconfig)`` where
+    ``reconfig`` is a :class:`CircuitReconfig`.  A step's duration is
+    ``step_time(sys, burst · d)`` where ``burst`` is the largest number
     of items any single lightpath — one ``(wavelength, direction, src,
     dst)`` slot — carries that step.  Ordinary stages put one item per
     lightpath (burst 1 everywhere), and then the arithmetic is EXACTLY the
@@ -185,6 +282,13 @@ def schedule_step_times(sched, sys: "OpticalSystem", message_bytes: float,
     attribution uses ``sched.meta["stage_ranges"]`` (execution-order
     ``(start_step, n_steps)`` from ``schedule_from_ir``) and falls back to
     a sequential ``stage_steps`` split for hand-built schedules.
+
+    When ``sys.circuit_reconfig_s > 0`` every circuit-signature change
+    between consecutive non-empty stages (``sched.meta["circuits"]``)
+    additionally exposes its post-overlap reconfiguration delay, charged
+    to the following stage — the single accounting both ``price`` and
+    ``optics.simulator.simulate`` consume, so price == simulate stays
+    literal in the reconfiguring world.
     """
     bursts = [1] * sched.num_steps
     counts = {}
@@ -198,18 +302,24 @@ def schedule_step_times(sched, sys: "OpticalSystem", message_bytes: float,
         per = step_time(sys, message_bytes, detailed=detailed)
         per_step = [per] * sched.num_steps
         stage_times = tuple(per * s for s in sched.stage_steps)
-        return per_step, stage_times, per * sched.num_steps
-    per_step = [step_time(sys, b * message_bytes, detailed=detailed)
-                for b in bursts]
-    ranges = sched.meta.get("stage_ranges")
-    if ranges is None:
-        ranges = []
-        start = 0
-        for s in sched.stage_steps:
-            ranges.append((start, s))
-            start += s
-    stage_times = tuple(sum(per_step[a:a + c]) for a, c in ranges)
-    return per_step, stage_times, sum(per_step)
+        total = per * sched.num_steps
+    else:
+        per_step = [step_time(sys, b * message_bytes, detailed=detailed)
+                    for b in bursts]
+        ranges = sched.meta.get("stage_ranges")
+        if ranges is None:
+            ranges = []
+            start = 0
+            for s in sched.stage_steps:
+                ranges.append((start, s))
+                start += s
+        stage_times = tuple(sum(per_step[a:a + c]) for a, c in ranges)
+        total = sum(per_step)
+    events, exposed, extras = _circuit_reconfigurations(sched, sys, per_step)
+    if exposed > 0.0:
+        stage_times = tuple(t + e for t, e in zip(stage_times, extras))
+        total += exposed
+    return per_step, stage_times, total, CircuitReconfig(events, exposed)
 
 
 def _price_optical(plan, sys: "OpticalSystem", *, detailed: bool = False,
@@ -221,11 +331,13 @@ def _price_optical(plan, sys: "OpticalSystem", *, detailed: bool = False,
     # one step moves ONE schedule item per lightpath: the whole shard for
     # gather traffic, a 1/n (origin, destination) block for exchange (a2a)
     # traffic; exchange-stage bursts scale each step's duration
-    _, times, total = schedule_step_times(
+    _, times, total, reconf = schedule_step_times(
         sched, sys, optical_message_bytes(plan), detailed=detailed)
     return PriceReport("optical", plan.mode, total,
                        times, steps=sched.num_steps,
-                       num_chunks=plan.num_chunks)
+                       num_chunks=plan.num_chunks,
+                       reconfigurations=reconf.events,
+                       reconfig_exposed_s=reconf.exposed_s)
 
 
 def plan_exposure(plan) -> tuple:

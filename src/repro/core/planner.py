@@ -937,6 +937,13 @@ class OrderCandidate:
     chains, ``"latency"`` for the recursive-doubling exchange plans (whose
     ``order`` is the EXPANDED per-round axis naming, e.g. ``("b","b","a")``
     for a 4×2 mesh gathered b-first).
+
+    ``reconfigurations`` counts the circuit/topology changes the lowered
+    schedule needs on a reconfigurable photonic fabric (0 = the candidate
+    holds one circuit for the whole collective).  The count is structural
+    — it is reported even when ``system.circuit_reconfig_s == 0`` — so
+    the hold-vs-reconfigure decision can be ranked independently of the
+    delay calibration; the delay itself is already inside ``optical_s``.
     """
 
     order: Tuple[str, ...]
@@ -945,6 +952,7 @@ class OrderCandidate:
     optical_s: float
     optical_steps: int
     regime: str = "bandwidth"
+    reconfigurations: int = 0
 
 
 def _order_rank_key(backend: str):
@@ -1008,7 +1016,22 @@ def _candidate_factorizations(
     """Stage chains to search: every permutation of the given axes; for a
     SINGLE unnamed axis additionally its balanced k-stage factorizations
     (the paper world, where sub-axis stages are executable) — named mesh
-    axes are atomic, the engine cannot split a shard_map axis."""
+    axes are atomic, the engine cannot split a shard_map axis.
+
+    Asking for ``max_k > 1`` sub-axis factorization anywhere else is a
+    hard error rather than a silent no-op: a factored stage over a NAMED
+    mesh axis (or a multi-axis chain) would name sub-groups no
+    ``shard_map`` axis exists for, producing an order the executor cannot
+    lower to ppermutes."""
+    if max_k is not None and max_k > 1 and not (
+            len(axes) == 1 and axes[0][0] is None):
+        raise ValueError(
+            f"max_k={max_k} sub-axis factorization only applies to a "
+            f"single unnamed paper-world axis; got "
+            f"{[(a[0], a[1]) for a in axes]} — named mesh axes are atomic "
+            "(shard_map cannot split a physical axis into ppermute "
+            "sub-stages); drop max_k or search the unnamed single-axis "
+            "world")
     base: List[Tuple] = [tuple(p) for p in itertools.permutations(axes)]
     if len(axes) == 1 and axes[0][0] is None and axes[0][1] > 1:
         _, n, link = axes[0]
@@ -1037,6 +1060,7 @@ def search_stage_orders(
     packet_bytes: int = TERARACK.packet_bytes,
     health=None,
     include_latency: bool = True,
+    reconfig: str = "auto",
 ) -> OrderSearch:
     """Cross-world stage-order search: enumerate candidate stage
     factorizations/permutations, price each full CollectivePlan through
@@ -1077,6 +1101,19 @@ def search_stage_orders(
     (``OrderSearch.pruned`` lists the excluded orders).  If every candidate
     is pruned, :class:`~repro.core.health.DeadDirectionError` is raised —
     callers fall back to the one-shot collective.
+
+    ``reconfig`` constrains the hold-vs-reconfigure decision on a
+    reconfigurable photonic fabric.  ``"auto"`` (default) ranks the full
+    space — the per-event ``system.circuit_reconfig_s`` delay (minus any
+    SWOT overlap behind the previous stage's in-flight last step) is part
+    of each candidate's ``optical_s``, so the ranking itself decides
+    whether fewer-steps-plus-delay beats hold-the-circuit.  ``"hold"``
+    keeps only candidates with ``reconfigurations == 0`` (one circuit for
+    the whole collective); ``"reconfigure"`` keeps only candidates that
+    pay at least one topology change.  A constraint that empties a
+    non-empty space raises ``ValueError`` (e.g. ``"hold"`` on a
+    multi-stage named mesh, where every chain must re-circuit between
+    axes).
     """
     from .cost_model import OpticalSystem, price  # lazy: cost_model imports us
     from .schedule import schedule_from_ir  # lazy: avoid a cycle
@@ -1084,6 +1121,9 @@ def search_stage_orders(
     if backend not in ("electrical", "optical"):
         raise ValueError(
             f"backend must be electrical|optical, got {backend!r}")
+    if reconfig not in ("auto", "hold", "reconfigure"):
+        raise ValueError(
+            f"reconfig must be auto|hold|reconfigure, got {reconfig!r}")
     norm: List[Tuple[Optional[str], int, LinkSpec]] = []
     for a in axes:
         name, size, link = a
@@ -1134,6 +1174,7 @@ def search_stage_orders(
             electrical_s=price(plan).total_s,
             optical_s=opt.total_s,
             optical_steps=opt.steps,
+            reconfigurations=opt.reconfigurations,
         ))
     if (include_latency and collective in _LATENCY_COLLECTIVES
             and all(_pow2_exponent(a[1]) is not None for a in norm)
@@ -1165,7 +1206,20 @@ def search_stage_orders(
                 optical_s=opt.total_s,
                 optical_steps=opt.steps,
                 regime="latency",
+                reconfigurations=opt.reconfigurations,
             ))
+    if reconfig != "auto" and cands:
+        keep = [c for c in cands
+                if (c.reconfigurations == 0) == (reconfig == "hold")]
+        if not keep:
+            counts = sorted({c.reconfigurations for c in cands})
+            raise ValueError(
+                f"reconfig={reconfig!r} excludes every {collective} "
+                f"candidate: the searched space has reconfiguration "
+                f"counts {counts} only (a multi-stage named mesh must "
+                "re-circuit between axes, so 'hold' needs a single-stage "
+                "or single-axis world); use reconfig='auto'")
+        cands = keep
     if not cands:
         from .health import DeadDirectionError  # lazy: avoid a cycle
         raise DeadDirectionError(

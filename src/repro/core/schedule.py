@@ -28,7 +28,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .tree import OpTreePlan
+from .tree import OpTreePlan, mixed_radix_sizes
 
 __all__ = [
     "Tx",
@@ -443,6 +443,7 @@ def schedule_from_ir(plan, w: int, *, health=None) -> Schedule:
     else:
         halves = ((plan.stages, kind.chain == "reversed"),)
     stage_ranges: List[Tuple[int, int]] = []
+    stage_circuits: List[Tuple] = []
     for half, flip in halves:
         # scatter halves lower as their time-reversed mirror all-gather
         stages = tuple(reversed(half)) if flip else half
@@ -450,9 +451,10 @@ def schedule_from_ir(plan, w: int, *, health=None) -> Schedule:
             continue
         mark = len(sched.stage_steps)
         start = offset
+        factors = [s.factor for s in stages]
         offset = _lower_gather_chain(
             sched,
-            [s.factor for s in stages],
+            factors,
             [effective_stage_mode(plan, s) for s in stages],
             w_eff, offset,
             collective=plan.collective,
@@ -464,11 +466,26 @@ def schedule_from_ir(plan, w: int, *, health=None) -> Schedule:
         for steps in sched.stage_steps[mark:]:
             ranges.append((start, steps))
             start += steps
+        # circuit signature per lowered stage — the lightpath layout the
+        # photonic fabric must be configured for: the whole ring for the
+        # first chain stage, contiguous parent segments of shrinking size
+        # for deeper stages (mirrors _lower_gather_chain's routing).  A
+        # boundary between differing signatures is a circuit
+        # reconfiguration event in the Eq.-3 accounting.
+        child_sizes = mixed_radix_sizes(factors)
+        circuits: List[Tuple] = [
+            ("ring", plan.n) if j == 0
+            else ("line", child_sizes[j] * m)
+            for j, m in enumerate(factors)
+        ]
         if flip:  # attribution back to execution order
             sched.stage_steps[mark:] = sched.stage_steps[mark:][::-1]
             ranges.reverse()
+            circuits.reverse()
         stage_ranges.extend(ranges)
+        stage_circuits.extend(circuits)
     sched.meta["stage_ranges"] = tuple(stage_ranges)
+    sched.meta["circuits"] = tuple(stage_circuits)
     if lost:
         # remap color slots 0..w_eff-1 onto the surviving wavelength
         # indices (injective, so the conflict structure is untouched) and

@@ -44,6 +44,18 @@ one-shot baseline, on a fake-device mesh of the given factorization.
                        order search (default: TERARACK's 64; small meshes
                        need small w for step counts to differentiate)
 
+  python -m repro.launch.perf --reconfig
+
+runs the modeled hold-vs-reconfigure sweep on the reconfigurable photonic
+fabric (pure python, no devices): the per-event circuit-reconfiguration
+delay is swept over the paper-world single-axis topology, the order
+search ranks every candidate at each point (price==simulate re-checked),
+and the sweep asserts the planning flip — factored multi-stage chains
+win at small delay, hold-the-circuit single-ring plans past the
+crossover.  SWOT-style overlap (reconfiguration hidden behind the
+previous stage's in-flight last step) is asserted never to price worse
+than paying the delay exposed.
+
   python -m repro.launch.perf --tp-block 2,4
 
 benchmarks the explicit-TP transformer block (context-scoped collectives,
@@ -146,7 +158,7 @@ def _bench_setup(factors_csv: str, links_path=None, order=None,
 
     from repro.comms import make_factorized_mesh
     from repro.comms.api import CommContext, PlanPolicy
-    from repro.core.cost_model import TERARACK
+    from repro.core.cost_model import TERARACK, derive_wavelengths
     from repro.core.planner import DCN_LINK, ICI_LINK, load_links
 
     try:
@@ -162,18 +174,28 @@ def _bench_setup(factors_csv: str, links_path=None, order=None,
     # a --links file (a --calibrate output) overrides with fitted specs
     link_map = {names[i]: (DCN_LINK if i == 0 and len(factors) > 1 else ICI_LINK)
                 for i in range(len(factors))}
+    fitted = None
+    if links_path:
+        # load_links validates the axis set against this mesh (unknown axes
+        # raise; fitted first so the wavelength budget derives from it)
+        fitted = load_links(links_path, fallbacks=link_map,
+                            expect_axes=names, allow_missing=True)
+    w = optical_w
+    if w is None and fitted is not None and order:
+        # derive the per-mesh wavelength budget from calibration: enough
+        # WDM channels to carry the fastest fitted link, instead of
+        # hand-picking --optical-w (ROADMAP follow-up, ISSUE 10)
+        w = derive_wavelengths(fitted)
+        print(f"[perf/collectives] derived optical wavelengths w={w} "
+              f"from fitted links (override with --optical-w)")
     optical_sys = dc.replace(
-        TERARACK, n_nodes=n,
-        wavelengths=optical_w if optical_w else TERARACK.wavelengths)
+        TERARACK, n_nodes=n, wavelengths=w if w else TERARACK.wavelengths)
     policy = PlanPolicy(order=order, optical=optical_sys) if order \
         else PlanPolicy()
     ctx = CommContext(mesh, tuple(names), links=link_map, policy=policy)
-    if links_path:
-        # load_links validates the axis set against this mesh (unknown axes
-        # raise); update_links invalidates any cached plans and re-plans —
-        # the auto-calibration loop, no new engine/context required
-        fitted = load_links(links_path, fallbacks=link_map,
-                            expect_axes=names, allow_missing=True)
+    if fitted is not None:
+        # update_links invalidates any cached plans and re-plans — the
+        # auto-calibration loop, no new engine/context required
         ctx.update_links(fitted)
         link_map = ctx.links
         print(f"[perf/collectives] using fitted links from {links_path}: "
@@ -797,9 +819,7 @@ def cluster_bench(policies_csv: str, *, requests: int = 16, seed: int = 0,
             for srv in servers:  # warm jits out of the measured window
                 srv.submit(np.arange(8, dtype=np.int32) % 128)
                 srv.run_until_drained()
-                srv.records.clear()
-                srv.results.clear()
-                srv._next_id = 0
+                srv.reset()
             cs = ClusterServer(servers, mspecs, make_policy(pol))
             st = cs.run_trace(trace, prompts=[
                 np.arange(r.prompt_tokens, dtype=np.int32) % 128
@@ -847,6 +867,97 @@ def cluster_bench(policies_csv: str, *, requests: int = 16, seed: int = 0,
     if bench_json:
         Path(bench_json).write_text(json.dumps(doc, indent=2) + "\n")
         print(f"[perf/cluster] wrote {bench_json}")
+    return doc
+
+
+def reconfig_bench(n: int = 16, w: int = 2, shard_kb: int = 1024,
+                   bench_json=None) -> dict:
+    """Modeled hold-vs-reconfigure sweep on the reconfigurable photonic
+    fabric (pure python — no devices, no jit): sweep the per-event circuit
+    reconfiguration delay over the paper-world single-axis topology,
+    letting ``search_stage_orders`` rank every candidate stage
+    factorization at each point, and re-check ``price == simulate`` for
+    the winner everywhere.  Asserts the planning flip the reconfiguring
+    world exists for: at zero/small delay a factored multi-stage chain
+    (fewer steps, >= 1 circuit change) wins; past the crossover the
+    search holds ONE circuit for the whole collective (the single-stage
+    ring, zero reconfigurations).  Also asserts SWOT overlap dominance:
+    hiding reconfiguration behind the previous stage's in-flight last
+    step never prices worse than paying it exposed."""
+    import dataclasses as dc
+
+    from repro.core import (
+        TERARACK,
+        price,
+        schedule_from_ir,
+        search_stage_orders,
+        validate_schedule,
+    )
+    from repro.core.plan_ir import optical_message_bytes
+    from repro.core.planner import ICI_LINK
+    from repro.optics import simulate
+
+    axes = [(None, n, ICI_LINK)]
+    shard = shard_kb * 1024.0
+    rows = []
+    for delay in (0.0, 1e-6, 1e-5, 1e-4, 1e-3, 1e-2):
+        sysd = dc.replace(TERARACK, n_nodes=n, wavelengths=w,
+                          circuit_reconfig_s=delay)
+        srch = search_stage_orders(axes, shard, collective="ag",
+                                   backend="optical", system=sysd)
+        best = srch.best
+        sched = schedule_from_ir(best.plan, sysd.wavelengths)
+        validate_schedule(sched)
+        rep = simulate(sched, sysd, optical_message_bytes(best.plan))
+        if abs(best.optical_s - rep.time_s) > 1e-12 * rep.time_s:
+            raise SystemExit(
+                f"--reconfig: price != simulate at delay={delay:g} "
+                f"({best.optical_s} vs {rep.time_s})")
+        if rep.reconfigurations != best.reconfigurations:
+            raise SystemExit(
+                f"--reconfig: pricer/simulator disagree on event count at "
+                f"delay={delay:g} ({best.reconfigurations} vs "
+                f"{rep.reconfigurations})")
+        # SWOT overlap dominance on the same plan
+        t_no = price(best.plan,
+                     dc.replace(sysd, reconfig_overlap=False)).total_s
+        if best.optical_s > t_no * (1 + 1e-12):
+            raise SystemExit(
+                f"--reconfig: overlap priced WORSE than exposed at "
+                f"delay={delay:g} ({best.optical_s} vs {t_no})")
+        factors = [s.factor for s in best.plan.stages]
+        rows.append(dict(
+            delay_s=delay, factors=factors,
+            reconfigurations=best.reconfigurations,
+            optical_s=best.optical_s, exposed_s=rep.reconfig_exposed_s,
+            no_overlap_s=t_no))
+        print(f"[perf/reconfig] delay={delay:8.2e}s "
+              f"best={'x'.join(map(str, factors)):>8s} "
+              f"reconfigs={best.reconfigurations} "
+              f"t={best.optical_s*1e3:8.4f}ms "
+              f"exposed={rep.reconfig_exposed_s*1e3:8.4f}ms "
+              f"no_overlap={t_no*1e3:8.4f}ms")
+    if rows[0]["reconfigurations"] == 0:
+        raise SystemExit("--reconfig: zero-delay winner already holds the "
+                         "circuit — no reconfiguring candidate won, the "
+                         "flip cannot be demonstrated")
+    if rows[-1]["reconfigurations"] != 0:
+        raise SystemExit("--reconfig: large-delay winner still pays "
+                         f"{rows[-1]['reconfigurations']} reconfigurations "
+                         "— the search never flipped to hold-the-circuit")
+    flip_at = next(r["delay_s"] for r in rows if r["reconfigurations"] == 0)
+    print(f"[perf/reconfig] hold-vs-reconfigure flip: search holds one "
+          f"circuit from delay={flip_at:g}s on (n={n}, w={w}, "
+          f"shard={shard_kb}KiB)")
+    doc = dict(n=n, w=w, shard_kb=shard_kb, rows=rows, flip_at_s=flip_at,
+               note=("modeled sweep: search_stage_orders under "
+                     "OpticalSystem.circuit_reconfig_s, price==simulate "
+                     "re-checked per point, SWOT overlap dominance "
+                     "asserted; flip = winner's reconfiguration count "
+                     "drops to zero"))
+    if bench_json:
+        Path(bench_json).write_text(json.dumps(doc, indent=2) + "\n")
+        print(f"[perf/reconfig] wrote {bench_json}")
     return doc
 
 
@@ -953,6 +1064,17 @@ def main():
                          "canonical link/wavelength fault set (derated CW "
                          "direction + lost wavelengths), plus the mode a "
                          "context planning under the faults would pick")
+    ap.add_argument("--reconfig", action="store_true",
+                    help="run the modeled hold-vs-reconfigure sweep on the "
+                         "reconfigurable photonic fabric (pure python): "
+                         "sweeps the per-event circuit reconfiguration "
+                         "delay, asserts price==simulate per point and the "
+                         "planning flip to hold-the-circuit past the "
+                         "crossover (write rows with --bench-json)")
+    ap.add_argument("--reconfig-n", type=int, default=16,
+                    help="node count for --reconfig (single unnamed axis)")
+    ap.add_argument("--reconfig-w", type=int, default=2,
+                    help="wavelength count for --reconfig")
     ap.add_argument("--cluster", action="store_true",
                     help="run the serving-policy sweep on a heterogeneous "
                          "two-replica cluster: simulated under both cost "
@@ -1004,6 +1126,10 @@ def main():
     ap.add_argument("--out", default="runs/perf")
     args = ap.parse_args()
 
+    if args.reconfig:
+        reconfig_bench(n=args.reconfig_n, w=args.reconfig_w,
+                       bench_json=args.bench_json)
+        return
     if args.cluster:
         cluster_bench(args.policies, requests=args.cluster_requests,
                       seed=args.seed, bench_json=args.bench_json,

@@ -127,9 +127,7 @@ def _serve_cluster(args, cfg):
     for srv in servers:
         srv.submit(np.arange(8, dtype=np.int32) % cfg.vocab_size)
         srv.run_until_drained()
-        srv.records.clear()
-        srv.results.clear()
-        srv._next_id = 0
+        srv.reset()
 
     mesh = make_mesh((len(jax.devices()),), ("tp",))
     with comm_context(mesh, ("tp",)) as ctx:

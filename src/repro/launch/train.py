@@ -72,7 +72,8 @@ def comm_plan_telemetry(ctx) -> list:
         if srch:
             line += (f" picked_by={srch['backend']}"
                      f" flipped={srch['flipped']}"
-                     f" regime_flipped={srch['regime_flipped']}")
+                     f" regime_flipped={srch['regime_flipped']}"
+                     f" reconfigs={srch.get('reconfigurations', 0)}")
         if rec.get("fallback"):
             line += " degraded=oneshot-fallback"
         lines.append(line)

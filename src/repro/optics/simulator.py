@@ -31,6 +31,8 @@ class SimReport:
     max_link_load: int  # peak per-(direction,link) wavelength usage in a step
     stage_steps: Tuple[int, ...]
     stage_times_s: Tuple[float, ...] = ()  # wall time attributed per stage
+    reconfigurations: int = 0  # circuit/topology changes between stages
+    reconfig_exposed_s: float = 0.0  # reconfig delay not hidden by overlap
 
     def speedup_vs(self, other: "SimReport") -> float:
         return other.time_s / self.time_s
@@ -134,7 +136,7 @@ def simulate(
                     f"simulator: node {p} incomplete ({len(h)}/{sched.n})"
     # shared Eq.-3 accounting with the optical pricer (burst-aware): the
     # price==simulate invariant is literal — both call this helper
-    _, stage_times, total = schedule_step_times(
+    _, stage_times, total, reconf = schedule_step_times(
         sched, sys, message_bytes, detailed=detailed)
     return SimReport(
         algorithm=str(sched.meta.get("algorithm", "?")),
@@ -146,4 +148,6 @@ def simulate(
         max_link_load=max_load,
         stage_steps=tuple(sched.stage_steps),
         stage_times_s=stage_times,
+        reconfigurations=reconf.events,
+        reconfig_exposed_s=reconf.exposed_s,
     )

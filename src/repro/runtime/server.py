@@ -130,6 +130,26 @@ class BatchedServer:
             rid=rid, prompt_tokens=len(prompt), enqueue_s=self.clock())
         return rid
 
+    def reset(self) -> None:
+        """Return the server to its just-constructed state: drain any
+        in-flight work (finishing it cleanly rather than abandoning slots
+        mid-decode), then clear the queue, results, timing records and the
+        request-id counter, and zero the decode state.  The compiled
+        decode/prefill jits are KEPT — a reset server re-serves warm,
+        which is the point of resetting instead of rebuilding (e.g. the
+        cluster front end re-running a trace under a different routing
+        policy on the same replicas)."""
+        if self.pending_work():
+            self.run_until_drained()
+        self.queue.clear()
+        self.results.clear()
+        self.records.clear()
+        self._next_id = 0
+        self.slots = [_Slot() for _ in range(self.scfg.batch_size)]
+        self.state = init_decode_state(
+            self.cfg, self.scfg.batch_size, self.scfg.max_seq)
+        self._tokens = np.zeros((self.scfg.batch_size, 1), np.int32)
+
     def active_count(self) -> int:
         """Occupied decode slots (the scheduler's in-flight signal)."""
         return sum(1 for s in self.slots if s.request_id is not None)

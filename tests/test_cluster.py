@@ -260,6 +260,33 @@ class TestServerTimestamps:
             assert t.generated == 4
             assert t.ttft_s >= 0 and t.queue_s >= 0
 
+    def test_reset_returns_server_to_fresh_state(self):
+        """Public reset (ISSUE 10): drains in-flight work, clears queue/
+        results/records/ids and the decode state, keeps the compiled jits
+        — a reset server re-serves identically from rid 0."""
+        import jax
+        from repro.models import init_params
+        from repro.runtime import BatchedServer, ServerConfig
+
+        cfg = tiny_cfg()
+        srv = BatchedServer(cfg, init_params(jax.random.key(0), cfg),
+                            ServerConfig(batch_size=2, max_seq=32,
+                                         max_new_tokens=4))
+        prompt = np.arange(6, dtype=np.int32)
+        rid = srv.submit(prompt)
+        srv.run_until_drained()
+        first = list(srv.results[rid])
+        srv.submit(prompt)  # left in flight: reset must drain, not abandon
+        srv.reset()
+        assert not srv.pending_work()
+        assert srv.results == {} and srv.records == {}
+        assert srv.active_count() == 0
+        rid2 = srv.submit(prompt)
+        assert rid2 == 0  # id space restarts
+        srv.run_until_drained()
+        # same prompt on the reset (zeroed-state) server decodes the same
+        assert srv.results[rid2] == first
+
     def test_single_token_request_finishes_at_prefill(self):
         import jax
         from repro.models import init_params
@@ -282,7 +309,15 @@ class TestClusterServerMeasured:
         measured per-request latencies whose greedy-vs-round-robin p99
         ordering matches the simulator's prediction (underloaded regime —
         see docs/serving.md for why ordering, not absolute times, is the
-        validated signal)."""
+        validated signal).
+
+        The two sides are deliberately decoupled (ISSUE 10): the SIM side
+        runs on FIXED synthetic ``ReplicaSpec.from_times`` constants — the
+        simulator's greedy < round-robin prediction is a property of the
+        model, not of this host's wall clock, so it must hold on every
+        seed deterministically.  Only the MEASURED side uses
+        ``measure_replica_times`` wall-clock constants (that's the signal
+        being validated), with a seed-retry loop absorbing host noise."""
         import jax
         from repro.models import init_params
         from repro.runtime import BatchedServer, ServerConfig
@@ -296,45 +331,49 @@ class TestClusterServerMeasured:
         ps, ds = measure_replica_times(slow_cfg, sp, scfg, prompt_tokens=8,
                                        warmup=2)
         assert ds > df  # structurally slower replica measures slower
-        specs = [
+        mspecs = [
             ReplicaSpec.from_times("fast", 2, prefill_token_s=pf,
                                    decode_step_s=df),
             ReplicaSpec.from_times("slow", 2, prefill_token_s=ps,
                                    decode_step_s=ds),
         ]
+        sim_specs = hetero_specs(batch=2)
         probe = Request(rid=0, arrival_s=0.0, prompt_tokens=8, new_tokens=6)
-        rate = 0.25 / specs[1].request_service_s(probe)
-        # The simulator side is deterministic and must agree on every
-        # seed; the measured side rides the wall clock, so host noise can
-        # flip a single run — accept the first seed whose measured
-        # ordering matches (the strict one-shot gate lives in
-        # `launch/perf.py --cluster`).
+        sim_rate = 0.25 / sim_specs[1].request_service_s(probe)
+        rate = 0.25 / mspecs[1].request_service_s(probe)
         attempts = []
         for seed in (5, 17, 29):
+            # sim side: synthetic constants, deterministic on EVERY seed
+            sim_trace = poisson_trace(12, rate_rps=sim_rate, seed=seed,
+                                      prompt_tokens=(8, 8), new_tokens=(6, 6))
+            sim_p99 = {
+                pol: ClusterSim(sim_specs,
+                                make_policy(pol)).run(sim_trace).latency_p99_s()
+                for pol in ("round-robin", "greedy")}
+            assert sim_p99["greedy"] < sim_p99["round-robin"], (seed, sim_p99)
+            # measured side: wall clock — accept the first seed whose
+            # measured ordering matches (the strict one-shot gate lives in
+            # `launch/perf.py --cluster`)
             trace = poisson_trace(12, rate_rps=rate, seed=seed,
                                   prompt_tokens=(8, 8), new_tokens=(6, 6))
-            p99 = {}
+            meas_p99 = {}
             for pol in ("round-robin", "greedy"):
-                sim = ClusterSim(specs, make_policy(pol)).run(trace)
                 servers = [BatchedServer(fast_cfg, fp, scfg),
                            BatchedServer(slow_cfg, sp, scfg)]
                 for srv in servers:  # warm jits out of the measured window
                     srv.submit(np.arange(8, dtype=np.int32) % 128)
                     srv.run_until_drained()
-                    srv.records.clear()
-                    srv.results.clear()
-                    srv._next_id = 0
-                cs = ClusterServer(servers, specs, make_policy(pol))
+                    srv.reset()
+                cs = ClusterServer(servers, mspecs, make_policy(pol))
                 meas = cs.run_trace(trace, prompts=[
                     np.arange(r.prompt_tokens, dtype=np.int32) % 128
                     for r in trace])
                 assert len(meas.records) == len(trace)
                 for r in meas.records:
                     assert r.finish_s is not None and r.latency_s > 0
-                p99[pol] = (sim.latency_p99_s(), meas.latency_p99_s())
-            assert p99["greedy"][0] < p99["round-robin"][0], (seed, p99)
-            attempts.append(p99)
-            if p99["greedy"][1] < p99["round-robin"][1]:
+                meas_p99[pol] = meas.latency_p99_s()
+            attempts.append({"sim": sim_p99, "measured": meas_p99})
+            if meas_p99["greedy"] < meas_p99["round-robin"]:
                 break
         else:
             pytest.fail(f"measured ordering never matched sim: {attempts}")

@@ -21,6 +21,13 @@ link tables / payloads:
       (pow-2 ag/rs/ar, both ring directions alive), are invariant under
       the chunk helpers, and the modeled crossover genuinely separates
       the exchange family from every ring candidate.
+  (g) the RECONFIGURING optical world (ISSUE 10): with a per-event
+      circuit-reconfiguration delay on the system, price == simulate for
+      every searched candidate (time AND event count), the price
+      decomposes exactly as fixed-ring + exposed reconfiguration time,
+      SWOT overlap never prices worse than paying the delay exposed,
+      zero delay reproduces today's fixed-ring prices bit for bit, and
+      the search's hold-vs-reconfigure pick follows the priced argmin.
 
 Each invariant is one check function with TWO drivers: hypothesis
 ``@given`` sweeps when hypothesis is installed, and a deterministic
@@ -211,6 +218,72 @@ def check_candidates_price_as_simulated(sizes, w, coll, slow_idx, shard):
     # ranked: the search backend's best leads the candidate list
     opt_times = [c.optical_s for c in srch.candidates]
     assert opt_times[0] == min(opt_times)
+
+
+# --------------------------------------------------------------------------
+# (g) the reconfiguring optical world: price == simulate (time and event
+# count) for every searched candidate, exact fixed-ring + exposed
+# decomposition, overlap dominance, zero-delay bit-identity
+# --------------------------------------------------------------------------
+
+def check_reconfig_conformance(sizes, w, coll, shard, delay, overlap):
+    """Invariant (g) over every searched candidate.  A single size uses
+    the unnamed paper-world axis (so balanced factorizations — the
+    candidates that actually differ in reconfiguration count — are in the
+    space); multi-size worlds use named mesh axes."""
+    if len(sizes) == 1:
+        axes = [(None, sizes[0], ICI_LINK)]
+    else:
+        axes = [(f"x{i}", s, SLOW if i % 2 else FAST)
+                for i, s in enumerate(sizes)]
+    n = math.prod(sizes)
+    base = _sys(n, w)
+    sys_r = dataclasses.replace(base, circuit_reconfig_s=delay,
+                                reconfig_overlap=overlap)
+    sys_exposed = dataclasses.replace(sys_r, reconfig_overlap=False)
+    srch = search_stage_orders(axes, shard, collective=coll,
+                               backend="optical", system=sys_r)
+    assert srch.candidates
+    for cand in srch.candidates:
+        sched = schedule_from_ir(cand.plan, w)
+        validate_schedule(sched)
+        rep = simulate(sched, sys_r, optical_message_bytes(cand.plan),
+                       check=True)
+        # price == simulate: wall time AND reconfiguration accounting
+        assert cand.optical_s == pytest.approx(rep.time_s, rel=1e-12)
+        p = price(cand.plan, sys_r)
+        assert p.total_s == pytest.approx(rep.time_s, rel=1e-12)
+        assert p.reconfigurations == rep.reconfigurations \
+            == cand.reconfigurations
+        assert p.reconfig_exposed_s == rep.reconfig_exposed_s
+        # exposure is bounded by events * delay and is exactly the price
+        # delta over the fixed-ring world (the decomposition is literal)
+        assert 0.0 <= rep.reconfig_exposed_s \
+            <= rep.reconfigurations * delay + 1e-18
+        base_t = price(cand.plan, base).total_s
+        if delay == 0.0:
+            # bit-identity, not approx: the zero-delay reconfiguring
+            # world IS the fixed-ring world of PRs 3-8
+            assert cand.optical_s == base_t
+        else:
+            assert cand.optical_s == pytest.approx(
+                base_t + rep.reconfig_exposed_s, rel=1e-12)
+        # SWOT overlap dominance: hiding reconfig behind the previous
+        # stage's in-flight last step never prices worse than exposed
+        assert cand.optical_s <= price(
+            cand.plan, sys_exposed).total_s * (1 + 1e-12)
+    # the ranking followed the reconfig-aware prices
+    opt_times = [c.optical_s for c in srch.candidates]
+    assert opt_times[0] == min(opt_times)
+    # the hold-vs-reconfigure decision rule: whichever family is
+    # STRICTLY cheaper under the delay-inclusive price is the pick
+    hold = [c.optical_s for c in srch.candidates if c.reconfigurations == 0]
+    rec = [c.optical_s for c in srch.candidates if c.reconfigurations > 0]
+    if hold and rec:
+        if min(rec) < min(hold):
+            assert srch.best.reconfigurations > 0
+        elif min(hold) < min(rec):
+            assert srch.best.reconfigurations == 0
 
 
 # --------------------------------------------------------------------------
@@ -470,6 +543,16 @@ class TestConformanceGrid:
         health = _health_for(names, derates, lost)
         check_degraded_conformance(list(sizes), w, coll, 1 * 2**20, health)
 
+    @pytest.mark.parametrize("coll", GRID_COLLS)
+    @pytest.mark.parametrize("overlap", [True, False])
+    @pytest.mark.parametrize("delay", [0.0, 1e-5, 1e-3])
+    @pytest.mark.parametrize("sizes,w", [
+        ((16,), 2), ((8,), 1), ((2, 4), 2), ((3, 4), 2),
+    ])
+    def test_reconfig_conformance(self, sizes, w, coll, delay, overlap):
+        check_reconfig_conformance(list(sizes), w, coll, 1 * 2**20,
+                                   delay, overlap)
+
 
 if HAVE_HYPOTHESIS:
     factors_st = st.lists(st.integers(min_value=1, max_value=5),
@@ -572,6 +655,27 @@ if HAVE_HYPOTHESIS:
         names = [f"x{i}" for i in range(len(sizes))]
         health = _health_for(names, derates, lost)
         check_latency_conformance(sizes, w, coll, shard, health)
+
+    @given(
+        sizes=st.one_of(
+            st.lists(st.integers(min_value=4, max_value=16), min_size=1,
+                     max_size=1),
+            st.lists(st.integers(min_value=2, max_value=4), min_size=2,
+                     max_size=3)),
+        w=st.sampled_from([1, 2, 8]),
+        coll=coll_st,
+        shard=st.floats(min_value=1024.0, max_value=1e7),
+        delay=st.sampled_from([0.0, 1e-6, 1e-4, 1e-2]),
+        overlap=st.booleans(),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_reconfig_conformance_property(sizes, w, coll, shard, delay,
+                                           overlap):
+        """ANY world x ANY reconfiguration delay: invariant (g) — the
+        reconfiguring optical price is the simulator's wall time for
+        every searched candidate, decomposes as fixed-ring + exposed,
+        and the hold-vs-reconfigure pick follows the priced argmin."""
+        check_reconfig_conformance(sizes, w, coll, shard, delay, overlap)
 
 
 # --------------------------------------------------------------------------
@@ -676,3 +780,120 @@ class TestPolicyOrderHook:
 
         with pytest.raises(ValueError, match="electrical"):
             PlanPolicy(order="fastest")
+
+
+class TestReconfigDecisions:
+    """Deterministic pins for the hold-vs-reconfigure planning dimension
+    (ISSUE 10): the paper-world 16-node axis at w=2, where the balanced
+    4x4 chain (half the ring steps, one circuit change) competes with the
+    single-stage ring (more steps, one circuit held throughout)."""
+
+    AXES = [(None, 16, ICI_LINK)]
+    SHARD = 1 * 2**20
+
+    def _search(self, delay, **kw):
+        sysd = dataclasses.replace(_sys(16, 2), circuit_reconfig_s=delay)
+        return search_stage_orders(self.AXES, self.SHARD, collective="ag",
+                                   backend="optical", system=sysd, **kw)
+
+    def test_flip_on_asymmetric_topology(self):
+        """The acceptance flip: at zero delay a factored chain (>= 1
+        reconfiguration) strictly beats the hold-the-circuit ring; at a
+        large delay the search flips to the zero-reconfiguration ring."""
+        cheap = self._search(0.0).best
+        assert cheap.reconfigurations > 0
+        dear = self._search(1.0).best
+        assert dear.reconfigurations == 0
+        assert dear.order == (None,)  # the single-stage ring holds
+        ring0 = next(c for c in self._search(0.0).candidates
+                     if c.reconfigurations == 0)
+        assert cheap.optical_s < ring0.optical_s  # strict at delay=0
+
+    def test_swot_overlap_hides_small_delays(self):
+        """A delay shorter than the previous stage's last in-flight step
+        is FULLY hidden: the reconfiguring winner's price is bit-equal to
+        its zero-delay price, exposure 0 — while the no-overlap world
+        pays it."""
+        srch = self._search(1e-5)
+        best = srch.best
+        assert best.reconfigurations > 0  # still worth reconfiguring
+        zero = price(best.plan, _sys(16, 2)).total_s
+        assert best.optical_s == zero
+        noov = dataclasses.replace(
+            _sys(16, 2), circuit_reconfig_s=1e-5, reconfig_overlap=False)
+        assert price(best.plan, noov).total_s == pytest.approx(
+            zero + 1e-5 * best.reconfigurations, rel=1e-12)
+
+    def test_reconfig_knob_constrains_the_space(self):
+        hold = self._search(0.0, reconfig="hold")
+        assert all(c.reconfigurations == 0 for c in hold.candidates)
+        assert hold.best.order == (None,)
+        rec = self._search(0.0, reconfig="reconfigure")
+        assert rec.candidates
+        assert all(c.reconfigurations > 0 for c in rec.candidates)
+
+    def test_reconfig_knob_validated(self):
+        with pytest.raises(ValueError, match="auto|hold|reconfigure"):
+            self._search(0.0, reconfig="never")
+
+    def test_hold_impossible_raises(self):
+        """A multi-stage named mesh must re-circuit between axes — every
+        candidate reconfigures, so reconfig='hold' empties the space and
+        raises a clear error instead of silently relaxing."""
+        axes = [("a", 2, FAST), ("b", 4, SLOW)]
+        with pytest.raises(ValueError, match="hold"):
+            search_stage_orders(axes, self.SHARD, collective="ag",
+                                backend="optical", system=_sys(8, 2),
+                                reconfig="hold")
+
+    def test_policy_reconfig_validation(self):
+        from repro.comms.api import PlanPolicy
+
+        with pytest.raises(ValueError, match="auto|hold|reconfigure"):
+            PlanPolicy(order="optical", reconfig="never")
+        # the knob only constrains the searched-order path
+        with pytest.raises(ValueError, match="order"):
+            PlanPolicy(reconfig="hold")
+        PlanPolicy(order="optical", reconfig="hold")  # valid
+
+    def test_policy_reconfigurations_reach_telemetry(self):
+        from repro.comms.api import CommContext, PlanPolicy
+
+        ctx = CommContext(
+            axis_names=("a", "b"), links={"a": FAST, "b": SLOW},
+            axis_sizes={"a": 2, "b": 4},
+            policy=PlanPolicy(order="optical", optical=_sys(8, 2),
+                              reconfig="reconfigure"))
+        plan = ctx.plan("ag", 2**20)
+        assert plan.meta["order_search"]["reconfigurations"] >= 1
+        snap = ctx.telemetry_snapshot()
+        rec = snap["per_plan"][0]["order_search"]
+        assert rec["reconfigurations"] >= 1
+
+
+class TestSubAxisFactorizationGuard:
+    """Satellite (ISSUE 10): sub-axis factorization of a PHYSICAL mesh
+    axis used to be a silent no-op — ``max_k`` simply did nothing unless
+    the world was a single unnamed axis.  It is now a loud ValueError:
+    named axes are atomic (shard_map cannot split a physical axis into
+    ppermute sub-stages)."""
+
+    def test_named_single_axis_rejects_max_k(self):
+        with pytest.raises(ValueError, match="atomic"):
+            search_stage_orders([("a", 16, ICI_LINK)], 2**20, max_k=2)
+
+    def test_multi_axis_rejects_max_k(self):
+        with pytest.raises(ValueError, match="atomic"):
+            search_stage_orders([("a", 4, FAST), ("b", 2, SLOW)], 2**20,
+                                max_k=3)
+
+    def test_unnamed_single_axis_still_factors(self):
+        srch = search_stage_orders([(None, 16, ICI_LINK)], 2**20, max_k=2,
+                                   backend="optical", system=_sys(16, 2))
+        assert any(len(c.order) == 2 for c in srch.candidates)
+
+    def test_max_k_one_is_a_no_op_everywhere(self):
+        # explicitly asking for NO factorization is legal on any world
+        srch = search_stage_orders([("a", 4, FAST), ("b", 2, SLOW)], 2**20,
+                                   max_k=1)
+        assert srch.candidates
